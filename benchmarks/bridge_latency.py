@@ -1,0 +1,63 @@
+"""Paper §3 latency reproduction: the 134-cycle / 800 ns round trip.
+
+Reports the stage-by-stage pipeline budget (design partition), checks it
+sums to the published total, and measures the *software* path length of our
+bridge datapath (translation -> steering -> epochs) in ops/epochs per pull,
+which is the TPU-side analogue of the cycle count.
+
+Emits CSV rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bridge, perfmodel
+from repro.core.memport import MemPortTable
+
+
+def rows() -> list[str]:
+    out = []
+    total = sum(perfmodel.RTT_PIPELINE_CYCLES.values())
+    for stage, cyc in perfmodel.RTT_PIPELINE_CYCLES.items():
+        ns = cyc / perfmodel.PAPER_HW.clock_mhz * 1e3
+        out.append(f"rtt_stage_{stage.split('(')[0].strip().replace(' ', '_')},"
+                   f"0,{cyc}cyc={ns:.0f}ns")
+    out.append(f"rtt_total,0,{total}cyc={total/perfmodel.PAPER_HW.clock_mhz*1e3:.0f}ns"
+               f" (paper: 134cyc=800ns)")
+
+    # software path: one-page pull latency through the loopback bridge
+    table = MemPortTable.striped(16, 4, 4)
+    pool = jnp.asarray(np.random.default_rng(0).normal(
+        size=(16, 256)).astype(np.float32))
+    want = jnp.asarray([[3]], jnp.int32)
+    pull = jax.jit(lambda p, w, t: bridge.pull_pages(
+        p, w, t, mesh=None, budget=1, table_nodes=4))
+    jax.block_until_ready(pull(pool, want, table))  # compile
+    t0 = time.perf_counter()
+    reps = 50
+    for _ in range(reps):
+        r = pull(pool, want, table)
+    jax.block_until_ready(r)
+    us = (time.perf_counter() - t0) / reps * 1e6
+    out.append(f"bridge_sw_pull_1page,{us:.1f},loopback_jitted")
+
+    # modelled TPU pull-mode page latency (1 hop, 256 KiB page)
+    lat_us = (2 * perfmodel.TPU_HW.ici_hop_latency_us
+              + (1 << 18) / (perfmodel.TPU_HW.ici_link_gbps * 1e9) * 1e6)
+    out.append(f"bridge_tpu_page_rtt_model,0,{lat_us:.1f}us_per_256KiB_page")
+    bw = perfmodel.tpu_remote_page_bandwidth_gbps(1 << 18)
+    out.append(f"bridge_tpu_pull_bandwidth_model,0,{bw:.1f}GB/s_per_pair")
+    return out
+
+
+def run() -> list[str]:
+    return rows()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,297 @@
+"""HLO-text analyzer: FLOPs, HBM bytes and collective bytes with while-loop
+trip-count multipliers.
+
+XLA's ``compiled.cost_analysis()`` visits every while body exactly ONCE
+(verified empirically), so for scan-over-layers models it undercounts by the
+trip count.  This analyzer parses the optimized HLO text, builds the
+computation call graph (while / fusion / call / conditional), reads trip
+counts from the ``backend_config={"known_trip_count":{"n":...}}`` attribute
+XLA attaches to counted loops, and multiplies each computation's
+contribution accordingly.
+
+Counted quantities:
+  flops            — dot / convolution FLOPs (2 * prod(out) * contraction)
+  hbm_bytes        — operand + result bytes of *top-level* instructions
+                     (instructions inside fusion computations are fused:
+                     their traffic is the fusion op's operands/results)
+  collective_bytes — result bytes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute /
+                     ragged-all-to-all, with a per-op-kind breakdown
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+SKIP_HBM_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "while", "call", "conditional", "copy-start",
+                "copy-done", "after-all", "partition-id", "replica-id",
+                "iota"}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\(")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALL_ATTR = re.compile(
+    r"(?:body|condition|calls|to_apply)=%?([\w\.\-]+)"
+    r"|branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'known_trip_count[^0-9]*?"n":"(\d+)"')
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    m = SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_shape: str
+    result_bytes: int
+    operands: list
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: list = field(default_factory=list)
+    defs: dict = field(default_factory=dict)   # name -> shape string
+    is_fused: bool = False
+
+    def hbm_traffic(self) -> float:
+        """Estimated real HBM bytes for one execution of this computation
+        as a *fusion body*: params are reads (slice-aware), root is the
+        write (update-aware for DUS roots)."""
+        consumers: dict[str, list] = {}
+        for ins in self.instructions:
+            for op in ins.operands:
+                consumers.setdefault(op, []).append(ins)
+        total = 0.0
+        root = self.instructions[-1] if self.instructions else None
+        for ins in self.instructions:
+            if ins.opcode != "parameter":
+                continue
+            users = consumers.get(ins.name, [])
+            if users and all(u.opcode in ("dynamic-slice", "gather")
+                             and u.operands and u.operands[0] == ins.name
+                             for u in users):
+                total += sum(u.result_bytes for u in users)
+            elif users and all(
+                    u.opcode == "dynamic-update-slice"
+                    and u.operands and u.operands[0] == ins.name
+                    for u in users):
+                # buffer param of an in-place DUS: traffic = update bytes
+                total += sum(shape_bytes(self.defs.get(u.operands[1], ""))
+                             for u in users)
+            else:
+                total += shape_bytes(self.defs.get(ins.name, ""))
+        if root is not None:
+            if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+                total += shape_bytes(self.defs.get(root.operands[1], ""))
+            else:
+                total += root.result_bytes
+        return total
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            hm = _COMP_HEADER.match(line)
+            if hm:
+                is_entry, name = hm.group(1), hm.group(2)
+                cur = Computation(name="ENTRY" if is_entry else name)
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        name, shape_str, opcode = im.groups()
+        rest = line[im.end():]
+        # operands: %refs before attribute section (first "), " or ")," )
+        head = rest.split("),")[0] if ")," in rest else rest
+        opnames = [m.group(1) for m in _OPERAND.finditer(head)]
+        instr = Instruction(name=name, opcode=opcode, result_shape=shape_str,
+                            result_bytes=shape_bytes(shape_str),
+                            operands=opnames, raw=line)
+        cur.defs[name] = shape_str
+        cur.instructions.append(instr)
+    return comps
+
+
+def _dot_flops(comp: Computation, ins: Instruction) -> int:
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.raw)
+    if not m or not ins.operands:
+        return 0
+    lhs_shape = comp.defs.get(ins.operands[0], "")
+    sm = SHAPE_RE.search(lhs_shape)
+    if not sm:
+        return 0
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    contract = 1
+    for ci in m.group(1).split(","):
+        if ci and int(ci) < len(dims):
+            contract *= dims[int(ci)]
+    return 2 * shape_elems(ins.result_shape) * contract
+
+
+def _instr_hbm_bytes(comps: Dict[str, "Computation"], comp: "Computation",
+                     ins: Instruction) -> float:
+    """Slice-aware HBM traffic of one top-level instruction."""
+    op = ins.opcode
+    if op == "fusion":
+        cm = re.search(r"calls=%?([\w\.\-]+)", ins.raw)
+        if cm and cm.group(1) in comps:
+            return comps[cm.group(1)].hbm_traffic()
+        # fall through to generic accounting
+    if op in ("dynamic-slice", "gather"):
+        return 2.0 * ins.result_bytes
+    if op == "dynamic-update-slice":
+        upd = shape_bytes(comp.defs.get(ins.operands[1], "")) \
+            if len(ins.operands) > 1 else ins.result_bytes
+        return 3.0 * upd
+    if op == "scatter":
+        upd = shape_bytes(comp.defs.get(ins.operands[2], "")) \
+            if len(ins.operands) > 2 else ins.result_bytes
+        return 3.0 * upd
+    operand_bytes = sum(shape_bytes(comp.defs.get(o, ""))
+                        for o in ins.operands)
+    return operand_bytes + float(ins.result_bytes)
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    by_collective: dict = field(default_factory=dict)
+    unknown_trip_counts: int = 0
+    top_collectives: list = field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": self.collective_bytes,
+                "by_collective": dict(self.by_collective),
+                "unknown_trip_counts": self.unknown_trip_counts,
+                "top_collectives": self.top_collectives[:20]}
+
+
+def analyze(text: str) -> HloStats:
+    comps = parse_hlo(text)
+    stats = HloStats(by_collective=defaultdict(float))
+
+    # computation multipliers from the call graph
+    mult: Dict[str, float] = defaultdict(float)
+    entry = comps.get("ENTRY") or next(iter(comps.values()))
+    mult[entry.name] = 1.0
+    changed, iters = True, 0
+    while changed and iters < 100:
+        changed, iters = False, iters + 1
+        for cname, comp in comps.items():
+            base = mult.get(cname, 0.0)
+            if base == 0.0:
+                continue
+            for ins in comp.instructions:
+                trips = 1.0
+                if ins.opcode == "while":
+                    tm = _TRIP.search(ins.raw)
+                    if tm:
+                        trips = float(tm.group(1))
+                    else:
+                        stats.unknown_trip_counts += 1
+                callees = []
+                for cm in _CALL_ATTR.finditer(ins.raw):
+                    single, multi = cm.groups()
+                    if single:
+                        callees.append(single)
+                    elif multi:
+                        callees += [s.strip().lstrip("%")
+                                    for s in multi.split(",")]
+                for cn in callees:
+                    if cn not in comps:
+                        continue
+                    factor = trips if ins.opcode == "while" else 1.0
+                    newv = base * factor
+                    if mult[cn] < newv:
+                        mult[cn] = newv
+                        changed = True
+                if ins.opcode == "fusion":
+                    for cm in re.finditer(r"calls=%?([\w\.\-]+)", ins.raw):
+                        if cm.group(1) in comps:
+                            comps[cm.group(1)].is_fused = True
+
+    coll_items = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0 or comp.is_fused:
+            # fused computations: traffic accounted at the fusion op; dots
+            # inside fusions still count FLOPs below via the fused pass
+            if m == 0.0:
+                continue
+        for ins in comp.instructions:
+            if ins.opcode in ("dot", "convolution"):
+                stats.flops += m * _dot_flops(comp, ins)
+            if not comp.is_fused and ins.opcode not in SKIP_HBM_OPS:
+                stats.hbm_bytes += m * _instr_hbm_bytes(comps, comp, ins)
+            if any(ins.opcode.startswith(c) for c in COLLECTIVES) \
+                    and not ins.opcode.endswith(("-start", "-done")):
+                nbytes = m * ins.result_bytes
+                stats.by_collective[ins.opcode] = (
+                    stats.by_collective.get(ins.opcode, 0.0) + nbytes)
+                stats.collective_bytes += nbytes
+                coll_items.append((nbytes, ins.opcode, ins.result_shape, m))
+            elif ins.opcode.endswith("-start") and any(
+                    ins.opcode.startswith(c) for c in COLLECTIVES):
+                # async collectives: count the -start op
+                nbytes = m * ins.result_bytes
+                kind = ins.opcode[:-6]
+                stats.by_collective[kind] = (
+                    stats.by_collective.get(kind, 0.0) + nbytes)
+                stats.collective_bytes += nbytes
+                coll_items.append((nbytes, kind, ins.result_shape, m))
+    coll_items.sort(reverse=True)
+    stats.top_collectives = [
+        {"bytes": b, "op": o, "shape": s[:80], "mult": mm}
+        for b, o, s, mm in coll_items[:20]]
+    return stats
+
+
+def analyze_compiled(compiled) -> HloStats:
+    return analyze(compiled.as_text())

@@ -1,0 +1,109 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Perf-iteration microscope: recompile one dry-run cell and print the top
+HBM-traffic and collective contributors with their computation multipliers.
+
+  PYTHONPATH=src python -m benchmarks.inspect_cell --arch starcoder2-7b \
+      --shape prefill_32k [--kv bridge_pull] [--multi-pod]
+"""
+import argparse  # noqa: E402
+import sys  # noqa: E402
+import pathlib  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+sys.path.insert(0, str(REPO / "src"))
+
+from benchmarks import hlo_analysis as H  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--kv", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--budget", type=int, default=8)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--dump", default="")
+    args = ap.parse_args()
+
+    lowered, meta = dryrun.build_cell(args.arch, args.shape,
+                                      multi_pod=args.multi_pod,
+                                      kv_placement=args.kv,
+                                      bridge_budget=args.budget)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    if args.dump:
+        pathlib.Path(args.dump).write_text(text)
+    comps = H.parse_hlo(text)
+    stats = H.analyze(text)
+    # mark fused computations so the listing matches analyze()'s accounting
+    for comp in comps.values():
+        for ins in comp.instructions:
+            if ins.opcode == "fusion":
+                import re as _re
+                for cm in _re.finditer(r"calls=%?([\w\.\-]+)", ins.raw):
+                    if cm.group(1) in comps:
+                        comps[cm.group(1)].is_fused = True
+
+    # recompute per-instruction charges with multipliers
+    mult = {}
+    entry = comps.get("ENTRY") or next(iter(comps.values()))
+    mult[entry.name] = 1.0
+    import re
+    changed, iters = True, 0
+    while changed and iters < 100:
+        changed, iters = False, iters + 1
+        for cname, comp in comps.items():
+            base = mult.get(cname, 0.0)
+            if base == 0.0:
+                continue
+            for ins in comp.instructions:
+                trips = 1.0
+                if ins.opcode == "while":
+                    tm = H._TRIP.search(ins.raw)
+                    trips = float(tm.group(1)) if tm else 1.0
+                for cm in H._CALL_ATTR.finditer(ins.raw):
+                    single, multi = cm.groups()
+                    names = ([single] if single else
+                             [s.strip().lstrip("%")
+                              for s in (multi or "").split(",")])
+                    for cn in names:
+                        if cn in comps:
+                            f = trips if ins.opcode == "while" else 1.0
+                            if mult.get(cn, 0.0) < base * f:
+                                mult[cn] = base * f
+                                changed = True
+
+    items = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0 or comp.is_fused:
+            continue
+        for ins in comp.instructions:
+            if ins.opcode in H.SKIP_HBM_OPS:
+                continue
+            b = m * H._instr_hbm_bytes(comps, comp, ins)
+            if b > 0:
+                items.append((b, m, cname[:34], ins.opcode,
+                              ins.result_shape[:70],
+                              ins.raw.strip()[:60]))
+    items.sort(reverse=True)
+    print(f"=== {meta} ===")
+    print(f"flops={stats.flops:.3e} hbm={stats.hbm_bytes:.3e} "
+          f"coll={stats.collective_bytes:.3e}")
+    print(f"\n--- top {args.top} HBM contributors ---")
+    for b, m, cn, op, shape, raw in items[: args.top]:
+        print(f"{b:12.3e}  x{m:<5.0f} {cn:<34s} {op:<18s} {shape}")
+    print(f"\n--- top collectives ---")
+    for t in stats.top_collectives[: args.top]:
+        print(f"{t['bytes']:12.3e}  x{t['mult']:<5.0f} {t['op']:<20s} "
+              f"{t['shape']}")
+
+
+if __name__ == "__main__":
+    main()

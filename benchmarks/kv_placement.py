@@ -1,0 +1,82 @@
+"""Bridge KV placements head-to-head (the paper's Fig. 3, serving edition).
+
+Measures one decode step of the same reduced model under local /
+bridge_pull / bridge_push placements on CPU (wall time + correctness), and
+derives the *modelled* pod-scale collective bytes per token for each mode —
+the quantity the roofline shows is the pull-mode bottleneck.
+
+Emits CSV rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.config import RunConfig, ShapeConfig
+from repro.models import transformer
+from repro.serve import step as serve_step_mod
+
+BATCH, MAX_LEN, PAGE_TOKENS, STEPS = 2, 64, 8, 8
+
+
+def measured_rows() -> list[str]:
+    cfg = dataclasses.replace(configs.get_reduced("granite-3-8b"),
+                              dtype="float32")
+    shape = ShapeConfig("bench", MAX_LEN, BATCH, "decode")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    rows, outs = [], {}
+    for kv in ("local", "bridge_pull", "bridge_push"):
+        run = RunConfig(model=cfg, shape=shape, kv_placement=kv)
+        cache_ops = serve_step_mod.make_cache_ops(
+            run, mesh=None, max_len=MAX_LEN, page_tokens=PAGE_TOKENS,
+            dtype=jnp.float32)
+        state = serve_step_mod.init_serve_state(run, BATCH, cache_ops)
+        step = jax.jit(serve_step_mod.build_serve_step(run, cache_ops),
+                       donate_argnums=(1,))
+        tokens = jnp.ones((BATCH,), jnp.int32)
+        tokens, state = step(params, state, tokens)  # compile+warm
+        t0 = time.perf_counter()
+        seq = []
+        for _ in range(STEPS):
+            tokens, state = step(params, state, tokens)
+            seq.append(np.asarray(tokens))
+        jax.block_until_ready(tokens)
+        us = (time.perf_counter() - t0) / STEPS * 1e6
+        outs[kv] = np.stack(seq)
+        rows.append(f"kv_decode_step_{kv},{us:.0f},cpu_reduced_model")
+    same = (np.array_equal(outs["local"], outs["bridge_pull"])
+            and np.array_equal(outs["local"], outs["bridge_push"]))
+    rows.append(f"kv_decode_agreement,0,identical_tokens={same}")
+    return rows
+
+
+def modelled_rows() -> list[str]:
+    """Pod-scale per-token collective bytes: pull vs push (gemma3 500k)."""
+    cfg = configs.get_config("gemma3-12b")
+    seq, b = 524_288, 1
+    page_tokens = 512
+    kv_bytes_per_token = 2 * cfg.num_kv_heads * cfg.head_dim * 2  # k+v bf16
+    n_global_layers = sum(1 for k in cfg.layers if k == "global")
+    pull = seq * kv_bytes_per_token * n_global_layers          # all pages move
+    q_bytes = cfg.num_heads * cfg.head_dim * 4
+    stats_bytes = (2 * cfg.num_heads + cfg.num_heads * cfg.head_dim) * 4
+    push = (q_bytes + stats_bytes) * n_global_layers * 16      # x mem nodes
+    return [
+        f"kv_model_pull_bytes_per_token,0,{pull/2**30:.2f}GiB",
+        f"kv_model_push_bytes_per_token,0,{push/2**20:.3f}MiB",
+        f"kv_model_pull_over_push,0,{pull/push:.0f}x",
+    ]
+
+
+def run() -> list[str]:
+    return measured_rows() + modelled_rows()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,72 @@
+"""Roofline table assembly: reads results/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table and the per-cell bottleneck report.
+
+Emits CSV rows: name,us_per_call,derived  (us_per_call = modelled step-time
+bound in microseconds, from the dominant roofline term).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh: str = "1pod") -> list[dict]:
+    recs = []
+    for f in sorted(RESULTS.glob(f"*_{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def rows(mesh: str = "1pod") -> list[str]:
+    out = []
+    for r in load(mesh):
+        cell = r["cell"]
+        if r.get("status") != "ok":
+            out.append(f"roofline_{cell},0,{r.get('status')}")
+            continue
+        rf = r["roofline"]
+        bound_us = rf["step_time_bound_s"] * 1e6
+        out.append(
+            f"roofline_{cell},{bound_us:.0f},"
+            f"dom={rf['dominant'][:-2]} comp={rf['compute_s']:.3f}s "
+            f"mem={rf['memory_s']:.3f}s coll={rf['collective_s']:.3f}s "
+            f"useful={rf['useful_flops_ratio']:.2f} "
+            f"peak={r['memory']['peak_bytes_per_device']/2**30:.2f}GiB")
+    return out
+
+
+def markdown_table(mesh: str = "1pod") -> str:
+    lines = [
+        "| cell | status | compute s | memory s | collective s | dominant "
+        "| MODEL_FLOPS | useful ratio | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        cell = r["cell"].replace(f"_{mesh}", "")
+        if r.get("status") != "ok":
+            lines.append(f"| {cell} | {r.get('status')} | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {cell} | ok | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} "
+            f"| {rf['collective_s']:.3f} | **{rf['dominant'][:-2]}** "
+            f"| {rf['model_flops']:.2e} | {rf['useful_flops_ratio']:.2f} "
+            f"| {r['memory']['peak_bytes_per_device']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> list[str]:
+    return rows("1pod")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        print(markdown_table("1pod"))
+        print()
+        print(markdown_table("2pod"))
+    else:
+        for r in run():
+            print(r)

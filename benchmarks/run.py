@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+  fig3       — STREAM local vs disaggregated (paper Figure 3) + TPU projection
+  latency    — 134-cycle RTT pipeline (paper §3) + bridge software path
+  kv         — KV placements: local / bridge-pull / bridge-push
+  roofline   — per (arch x shape) three-term roofline from the dry-run
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bridge_latency, kv_placement, roofline, stream_fig3
+
+    print("name,us_per_call,derived")
+    for row in stream_fig3.run():
+        print(row)
+    for row in bridge_latency.run():
+        print(row)
+    for row in kv_placement.run():
+        print(row)
+    for row in roofline.run():
+        print(row)
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, ".")
+    main()

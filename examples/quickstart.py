@@ -1,0 +1,62 @@
+"""Quickstart: the software-defined bridge in 80 lines.
+
+Demonstrates the paper's core loop end-to-end on CPU:
+  1. a control plane allocates a pooled memory region,
+  2. a memport table is programmed (software-defined placement),
+  3. a master pulls pages through the circuit-epoch transfer engine,
+  4. the region is re-homed at runtime (elastic remap) WITHOUT recompiling
+     the pull step — the table is just data.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bridge, ref
+from repro.core.control_plane import ControlPlane
+from repro.core.memport import FREE
+
+NODES, SLOTS, PAGE = 4, 16, 64  # a tiny 4-node pod (1 CPU device: loopback)
+
+
+def main():
+    # 1. control plane owns placement
+    cp = ControlPlane(num_nodes=NODES, pages_per_node=SLOTS, num_logical=32)
+    region = cp.allocate(12, "tensor-A", policy="striped")
+    print(cp.describe())
+
+    # 2. pool contents (each row = one page of a disaggregated tensor)
+    rng = np.random.default_rng(0)
+    pool = jnp.asarray(rng.normal(size=(NODES * SLOTS, PAGE)).astype(
+        np.float32))
+
+    # 3. a master requests pages 0..11 — the bridge translates through the
+    #    memport table and pulls them over ring-circuit epochs
+    table = cp.table()
+    want = jnp.asarray([[0, 5, 3, FREE, 11, 7]], jnp.int32)
+    pull = jax.jit(lambda pool, want, table: bridge.pull_pages(
+        pool, want, table, mesh=None, budget=4, table_nodes=NODES))
+    got = pull(pool, want, table)
+    exp = ref.pull_pages_ref(pool, want, table, pages_per_node=SLOTS)
+    np.testing.assert_allclose(got, exp)
+    print("pull through bridge == direct gather  OK")
+
+    # 4. elastic remap: node 2 dies; pages re-home; SAME jitted fn, new table
+    plan = cp.fail_node(2)
+    print(f"node 2 failed: {len(plan)} pages re-homed")
+    table2 = cp.table()
+    # executor restores migrated page contents (here: from the old image)
+    pool_np = np.array(pool)
+    for step in plan:
+        old = step.old_home * SLOTS + step.old_slot
+        new = step.new_home * SLOTS + step.new_slot
+        pool_np[new] = pool_np[old]
+    got2 = pull(jnp.asarray(pool_np), want, table2)   # no recompile
+    np.testing.assert_allclose(got2, exp)
+    print("post-remap pull identical, zero recompilation  OK")
+    print(cp.describe())
+
+
+if __name__ == "__main__":
+    main()

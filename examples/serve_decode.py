@@ -1,0 +1,61 @@
+"""Serving example: batched requests decoding against the SAME model under
+three KV placements — local dense, bridge-pull (paper-faithful) and
+bridge-push (beyond-paper compute-at-memory) — asserting the outputs agree
+and reporting step timings.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.config import RunConfig, ShapeConfig
+from repro.models import transformer
+from repro.serve import step as serve_step_mod
+
+BATCH, MAX_LEN, STEPS, PAGE_TOKENS = 4, 64, 24, 8
+
+
+def decode(run, params, kv, prompt):
+    cache_ops = serve_step_mod.make_cache_ops(
+        run, mesh=None, max_len=MAX_LEN, page_tokens=PAGE_TOKENS,
+        dtype=jnp.float32)
+    state = serve_step_mod.init_serve_state(run, BATCH, cache_ops)
+    step = jax.jit(serve_step_mod.build_serve_step(run, cache_ops),
+                   donate_argnums=(1,))
+    tokens = prompt
+    out = []
+    t0 = time.monotonic()
+    for _ in range(STEPS):
+        tokens, state = step(params, state, tokens)
+        out.append(np.asarray(tokens))
+    jax.block_until_ready(tokens)
+    return np.stack(out, 1), (time.monotonic() - t0) / STEPS
+
+
+def main():
+    cfg = dataclasses.replace(configs.get_reduced("granite-3-8b"),
+                              dtype="float32")
+    shape = ShapeConfig("example", MAX_LEN, BATCH, "decode")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    prompt = jnp.asarray([1, 2, 3, 4], jnp.int32)
+
+    results = {}
+    for kv in ("local", "bridge_pull", "bridge_push"):
+        run = RunConfig(model=cfg, shape=shape, kv_placement=kv)
+        toks, ms = decode(run, params, kv, prompt)
+        results[kv] = toks
+        print(f"{kv:12s}  {ms*1e3:7.1f} ms/step   "
+              f"sample: {toks[0][:10].tolist()}")
+
+    np.testing.assert_array_equal(results["local"], results["bridge_pull"])
+    np.testing.assert_array_equal(results["local"], results["bridge_push"])
+    print("OK: all three KV placements decode identical tokens")
+
+
+if __name__ == "__main__":
+    main()

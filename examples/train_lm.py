@@ -1,0 +1,95 @@
+"""End-to-end training driver: ~100M-param LM, few hundred steps, with
+checkpointing, resume, a mid-run simulated node failure, and disaggregated
+optimizer state through the bridge.
+
+This is the (b) deliverable's end-to-end example.  By default it runs a
+~15M reduced model for 60 steps so CPU CI finishes in minutes; pass
+``--full-100m --steps 300`` for the real thing (same code path).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 60]
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.config import OptimConfig, RunConfig, ShapeConfig
+from repro.core import zero_bridge
+from repro.core.control_plane import ControlPlane
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.ft.elastic import ElasticTrainer
+from repro.train import step as train_step_mod
+
+
+def build(args):
+    cfg = configs.get_reduced("granite-3-8b")
+    if args.full_100m:
+        cfg = dataclasses.replace(
+            cfg, num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=32768)
+    shape = ShapeConfig("example", args.seq, args.batch, "train")
+    run = RunConfig(model=cfg, shape=shape,
+                    optim=OptimConfig(lr=3e-4, warmup_steps=20,
+                                      total_steps=args.steps))
+    return run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=35,
+                    help="simulate a node failure at this step (0=off)")
+    args = ap.parse_args()
+
+    run = build(args)
+    state = train_step_mod.make_train_state(run, jax.random.key(0))
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(state.params))
+    print(f"model={run.model.name}(reduced) params={n/1e6:.1f}M")
+
+    # Disaggregated optimizer state: the AdamW moments live in a bridge pool
+    # (4 logical memory nodes; loopback circuit on 1 CPU device).
+    cp = ControlPlane(num_nodes=4, pages_per_node=4096, num_logical=8192)
+    store = zero_bridge.create_store(state.opt.m, mesh=None,
+                                     page_elems=4096, cp=cp)
+    print("optimizer-moment pool:", cp.occupancy().tolist(), "pages/node")
+
+    step_fn = jax.jit(train_step_mod.build_train_step(run),
+                      donate_argnums=(0,))
+    with tempfile.TemporaryDirectory() as ckdir:
+        ckpt = CheckpointManager(ckdir, keep=2)
+        trainer = ElasticTrainer(step_fn=step_fn, ckpt=ckpt, cp=cp,
+                                 ckpt_every=20)
+        data = SyntheticLM(run.model, args.batch, args.seq)
+        batches = ({k: jnp.asarray(v) for k, v in b.items()}
+                   for b in Prefetcher(data.iterate(), depth=2))
+        failure = {args.fail_at: 2} if args.fail_at else None
+
+        t0 = time.monotonic()
+        state, history = trainer.run(state, batches, num_steps=args.steps,
+                                     failure_schedule=failure)
+        dt = time.monotonic() - t0
+
+    losses = [h["loss"] for h in history]
+    head = float(np.mean(losses[:5]))
+    tail = float(np.mean(losses[-5:]))
+    print(f"steps={len(history)} wall={dt:.1f}s "
+          f"loss {head:.3f} -> {tail:.3f}")
+    for ev in trainer.events:
+        print(f"  event: {ev.kind} node={ev.node} step={ev.at_step}")
+    assert tail < head, "loss should decrease"
+    # pool placement after the failure excludes the dead node
+    assert not np.any(np.asarray(cp.table().home) == 2)
+    print("OK: trained through a node failure with elastic remap")
+
+
+if __name__ == "__main__":
+    main()

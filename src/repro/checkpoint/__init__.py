@@ -1,0 +1,2 @@
+from repro.checkpoint.async_manager import AsyncCheckpointManager  # noqa: F401
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,50 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full-size ModelConfig;
+``get_reduced(arch_id)`` returns the same-family smoke-test config.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.config import ModelConfig, reduced
+
+ARCH_IDS = (
+    "internvl2-2b",
+    "granite-moe-1b-a400m",
+    "phi3_5-moe-42b-a6_6b",
+    "recurrentgemma-9b",
+    "seamless-m4t-medium",
+    "h2o-danube-3-4b",
+    "gemma3-12b",
+    "granite-3-8b",
+    "starcoder2-7b",
+    "xlstm-125m",
+    # the paper's own case-study "architecture": STREAM over the bridge
+    "paper-stream",
+)
+
+_ALIASES = {
+    "phi3.5-moe-42b-a6.6b": "phi3_5-moe-42b-a6_6b",
+}
+
+
+def canonical(arch_id: str) -> str:
+    return _ALIASES.get(arch_id, arch_id)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    arch_id = canonical(arch_id)
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return reduced(get_config(arch_id))
+
+
+def lm_archs() -> list[str]:
+    return [a for a in ARCH_IDS if a != "paper-stream"]

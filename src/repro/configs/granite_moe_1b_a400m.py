@@ -1,0 +1,24 @@
+"""Granite 3.0 1B-A400M base: 32-expert top-8 MoE.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+"""
+from repro.config import FULL_ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=512,                   # per-expert FFN width
+    vocab_size=49155,
+    head_dim=64,
+    layer_pattern=(FULL_ATTN,),
+    num_experts=32,
+    experts_per_token=8,
+    norm="rmsnorm",
+    act="silu",
+    glu=True,
+    tie_embeddings=True,
+)

@@ -1,0 +1,26 @@
+"""InternVL2-2B backbone: InternViT frontend (stub) + InternLM2-1.8B LM.
+
+[arXiv:2404.16821; hf].  The vision tower is a STUB: ``input_specs`` feeds
+precomputed patch embeddings; the transformer backbone below is the LM.
+"""
+from repro.config import FULL_ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    head_dim=128,
+    layer_pattern=(FULL_ATTN,),
+    norm="rmsnorm",
+    act="silu",
+    glu=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    embed_inputs=True,          # frontend stub: [B, S, d] patch+text embeds
+    num_prefix_embeds=256,      # image tokens prepended in decode shapes
+)

@@ -1,0 +1,26 @@
+"""RecurrentGemma-9B (Griffin): RG-LRU + local attention, 1 attn : 2 recurrent.
+
+[arXiv:2402.19427; unverified].  38 layers = 12 x (rglru, rglru, swa) + 2.
+MQA (kv=1), window 2048, GeGLU FFN.
+"""
+from repro.config import ModelConfig, RGLRU, SWA_ATTN
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    layer_pattern=(RGLRU, RGLRU, SWA_ATTN),
+    window_size=2048,
+    norm="rmsnorm",
+    act="gelu",
+    glu=True,
+    tie_embeddings=True,
+    lru_width=4096,
+    logit_softcap=30.0,
+)

@@ -1,0 +1,27 @@
+"""SeamlessM4T-medium: encoder-decoder, multimodal (audio frontend stubbed).
+
+[arXiv:2308.11596; hf].  12 encoder + 12 decoder layers, MHA (kv=16),
+LayerNorm, GeLU FFN (no GLU).  ``input_specs`` provides precomputed speech
+frame embeddings for the encoder.
+"""
+from repro.config import FULL_ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    num_layers=12,               # decoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    head_dim=64,
+    layer_pattern=(FULL_ATTN,),
+    num_encoder_layers=12,
+    cross_attention=True,
+    embed_inputs=False,          # decoder takes tokens; encoder takes embeds
+    norm="layernorm",
+    act="gelu",
+    glu=False,
+    tie_embeddings=True,
+)

@@ -1,0 +1,22 @@
+"""xLSTM-125M: alternating mLSTM / sLSTM blocks, O(1) decode state.
+
+[arXiv:2405.04517; unverified].  d_ff=0: blocks carry their own projections.
+"""
+from repro.config import MLSTM, ModelConfig, SLSTM
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=192,
+    layer_pattern=(MLSTM, SLSTM),
+    norm="layernorm",
+    act="gelu",
+    glu=False,
+    tie_embeddings=True,
+)

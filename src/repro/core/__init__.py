@@ -1,0 +1,18 @@
+"""The paper's contribution: a software-defined memory bus bridge, on JAX.
+
+Layers (see DESIGN.md §3):
+  memport        — runtime-reprogrammable translation/steering tables (Fig. 2)
+  pool           — pooled page memory sharded over the mem axis (the slaves)
+  steering       — request preparation: distances, rounds, route schedules
+  bridge         — the transfer engine: ring-circuit ppermute epochs,
+                   rate limiting, edge buffering (Fig. 1)
+  control_plane  — orchestrator: allocation, elastic remap, stragglers
+  kvbridge       — disaggregated KV cache (case study at pod scale)
+  zero_bridge    — disaggregated optimizer state
+  perfmodel      — analytical datapath model (paper Fig. 3 + TPU projection)
+  ref            — pure-jnp oracles for everything above
+"""
+from repro.core.memport import FREE, MemPortTable  # noqa: F401
+from repro.core.pool import MemoryPool, make_pool  # noqa: F401
+from repro.core.bridge import pull_pages, push_pages  # noqa: F401
+from repro.core.control_plane import ControlPlane  # noqa: F401

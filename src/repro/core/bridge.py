@@ -1,0 +1,289 @@
+"""The bridge transfer engine: epoch-batched circuit transfers over a mesh axis.
+
+This is the paper's datapath (Fig. 1) mapped onto a TPU pod:
+
+* *time-multiplexing* — requests are coalesced into rounds of ``budget`` pages
+  (the software rate limiter; ``active_budget`` can be lowered at **runtime**
+  without recompiling, the remaining requests spill into later rounds);
+* *request preparation & steering* — each request is translated through the
+  :class:`~repro.core.memport.MemPortTable` and assigned to the ring epoch
+  equal to its ring distance (a circuit = one static ``ppermute`` route);
+* *serDES + circuit network* — one ``jax.lax.ppermute`` pair per epoch:
+  request ids travel ``rank -> rank+d``, payload returns ``rank+d -> rank``.
+  Every epoch's route is **static** (circuit switching), only the *contents*
+  are runtime data (software-defined steering);
+* *edge buffering* — epochs within a round are independent dataflow chains, so
+  the compiler overlaps them exactly like the paper's decoupled serdes clock
+  domains pulling from edge buffers.  ``edge_buffer=False`` inserts
+  ``optimization_barrier`` between epochs to model a bufferless bridge;
+* *lossless, no ack/retx* — ICI collectives are lossless and deterministic,
+  so the assumption holds natively.
+
+All functions exist in two forms: a ``*_local`` body to be used inside
+``shard_map`` (N nodes on the mem axis) and a reference oracle in
+``repro.core.ref`` used by tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.memport import FREE, MemPortTable
+from repro.core import steering
+
+
+def shard_map(f, mesh, in_specs, out_specs, mem_axis=None):
+    """jax.shard_map, manual ONLY over ``mem_axis`` (others stay auto).
+
+    Partial-manual mode keeps the model axis under GSPMD control inside the
+    body, so head/ff dims keep their automatic sharding (and non-divisible
+    head counts keep working) while the bridge runs manual collectives over
+    the mem axis.  check_vma must be True: the check_vma=False path in jax
+    0.8 rebuilds specs over *all* mesh axes and rejects partial manual.
+    """
+    names = frozenset({mem_axis}) if mem_axis else frozenset(mesh.axis_names)
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, axis_names=names,
+                         check_vma=True)
+
+
+# ---------------------------------------------------------------------------
+# shard_map bodies
+# ---------------------------------------------------------------------------
+
+def _pvary(x: jax.Array, axis: str) -> jax.Array:
+    """Mark ``x`` as varying over ``axis`` (VMA typing for scan carries)."""
+    try:
+        return jax.lax.pcast(x, axis, to="varying")
+    except Exception:
+        return x
+
+
+def _gather_local(pool_local: jax.Array, slots: jax.Array) -> jax.Array:
+    """Masked local gather: FREE slots produce zeros."""
+    valid = slots >= 0
+    safe = jnp.where(valid, slots, 0)
+    out = pool_local[safe]
+    mask = valid.reshape(valid.shape + (1,) * (out.ndim - 1))
+    return jnp.where(mask, out, jnp.zeros_like(out))
+
+
+def _scatter_local(pool_local: jax.Array, slots: jax.Array,
+                   payload: jax.Array) -> jax.Array:
+    # FREE slots are routed out of bounds and dropped: a where-fallback would
+    # scatter stale values onto slot 0 and race with live writes there.
+    safe = jnp.where(slots >= 0, slots, pool_local.shape[0])
+    return pool_local.at[safe].set(payload.astype(pool_local.dtype),
+                                   mode="drop")
+
+
+def _round_pull(pool_local: jax.Array, sub_ids: jax.Array, table: MemPortTable,
+                axis: str, num_nodes: int, edge_buffer: bool) -> jax.Array:
+    """Serve one round of <=budget requests; returns [budget, *page_shape]."""
+    my = jax.lax.axis_index(axis)
+    home, slot = table.translate(sub_ids)
+    dist = steering.ring_distance(home, my, num_nodes)
+
+    # Epoch 0: loopback fast path (locally mapped region — no circuit hop).
+    out = _gather_local(pool_local, jnp.where(dist == 0, slot, FREE))
+
+    prev = None
+    for d in steering.default_route_schedule(num_nodes):
+        req = jnp.where(dist == d, slot, FREE)                     # [B]
+        if not edge_buffer and prev is not None:
+            # A bufferless bridge serializes epochs: model it explicitly.
+            req, prev = jax.lax.optimization_barrier((req, prev))
+        fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
+        bwd = [(j, (j - d) % num_nodes) for j in range(num_nodes)]
+        req_at_home = jax.lax.ppermute(req, axis, perm=fwd)        # request flits
+        payload = _gather_local(pool_local, req_at_home)           # remote read
+        payload = jax.lax.ppermute(payload, axis, perm=bwd)        # data flits
+        mask = (dist == d).reshape((-1,) + (1,) * (payload.ndim - 1))
+        out = jnp.where(mask, payload, out)
+        prev = payload
+    return out
+
+
+def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
+                active_budget: jax.Array, *, axis: str, num_nodes: int,
+                budget: int, rounds: int, edge_buffer: bool) -> jax.Array:
+    """Pull ``want`` pages ([rounds*budget], FREE-padded) through the bridge."""
+    want = want.reshape(-1)
+    page_shape = pool_local.shape[1:]
+
+    def body(ptr, _):
+        # Rate limiter: only the first ``active_budget`` slots of this round
+        # carry live requests; the pointer advances by the same amount, so a
+        # throttled node simply uses more of its (overprovisioned) rounds.
+        sub = jax.lax.dynamic_slice(want, (ptr,), (budget,))
+        lane = jnp.arange(budget)
+        sub = jnp.where(lane < active_budget, sub, FREE)
+        out = _round_pull(pool_local, sub, table, axis, num_nodes, edge_buffer)
+        return ptr + active_budget, (out, sub)
+
+    if rounds == 0:
+        return jnp.zeros((0,) + page_shape, pool_local.dtype)
+    ptr0 = _pvary(jnp.int32(0), axis)
+    _, (chunks, _) = jax.lax.scan(body, ptr0, None, length=rounds)
+    # Re-assemble in logical request order.  Round ``r`` served
+    # ``want[r*active_budget + k]`` in lane ``k`` (k < active_budget); lanes
+    # beyond the live budget carried FREE requests and yield zeros.
+    flat = chunks.reshape(rounds * budget, *page_shape)
+    r = jnp.arange(rounds * budget) // budget
+    k = jnp.arange(rounds * budget) % budget
+    dest = r * active_budget + k
+    live = (k < active_budget) & (dest < want.shape[0])
+    dest = jnp.where(live, dest, 0)
+    mask = live.reshape((-1,) + (1,) * len(page_shape))
+    upd = jnp.where(mask, flat, jnp.zeros_like(flat))
+    out = jnp.zeros((want.shape[0],) + page_shape, pool_local.dtype)
+    return out.at[dest].add(upd)
+
+
+def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
+                table: MemPortTable, *, axis: str, num_nodes: int,
+                budget: int, rounds: int) -> jax.Array:
+    """Write payload pages to their homes (single-writer contract)."""
+    my = jax.lax.axis_index(axis)
+    page_shape = pool_local.shape[1:]
+    ids = dest_ids.reshape(rounds, budget)
+    chunks = payload.reshape(rounds, budget, *page_shape)
+
+    def body(pool, xs):
+        sub, data = xs
+        home, slot = table.translate(sub)
+        dist = steering.ring_distance(home, my, num_nodes)
+        pool = _scatter_local(pool, jnp.where(dist == 0, slot, FREE), data)
+        for d in steering.default_route_schedule(num_nodes):
+            fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
+            req = jnp.where(dist == d, slot, FREE)
+            slot_at_home = jax.lax.ppermute(req, axis, perm=fwd)
+            data_at_home = jax.lax.ppermute(data, axis, perm=fwd)
+            pool = _scatter_local(pool, slot_at_home, data_at_home)
+        return pool, None
+
+    if rounds == 0:
+        return pool_local
+    pool_local, _ = jax.lax.scan(body, pool_local, (ids, chunks))
+    return pool_local
+
+
+# ---------------------------------------------------------------------------
+# Public API (shard_map wrappers)
+# ---------------------------------------------------------------------------
+
+def _mem_axis_size(mesh: Optional[Mesh], axis: str) -> int:
+    if mesh is None or axis not in mesh.axis_names:
+        return 1
+    return mesh.shape[axis]
+
+
+def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
+               *, mesh: Optional[Mesh], mem_axis: str = "data",
+               budget: int = 8, edge_buffer: bool = True,
+               overprovision: int = 1,
+               active_budget: Optional[jax.Array] = None,
+               table_nodes: int = 0) -> jax.Array:
+    """Pull logical pages through the bridge.
+
+    Args:
+      pool_pages: [num_nodes * pages_per_node, *page_shape], sharded on dim 0
+        over ``mem_axis`` (or unsharded when N == 1).
+      want: [num_nodes, R] per-node request lists (logical page ids, FREE pad),
+        sharded on dim 0.
+      table: replicated memport table.
+      table_nodes: logical node count of the table (0 = mesh size).  On a
+        1-device mesh the pool may still model several logical memory nodes
+        (loopback circuit); their slots flatten node-major.
+    Returns:
+      [num_nodes, R, *page_shape] gathered pages, sharded on dim 0.
+    """
+    n = _mem_axis_size(mesh, mem_axis)
+    r = want.shape[-1]
+    rounds = steering.num_rounds(r, budget, overprovision)
+    pad = rounds * budget - r
+    if pad:
+        want = jnp.concatenate(
+            [want, jnp.full(want.shape[:-1] + (pad,), FREE, want.dtype)], -1)
+    if active_budget is None:
+        active_budget = jnp.int32(budget)
+
+    if n == 1:
+        tn = table_nodes or 1
+        ppn = pool_pages.shape[0] // tn
+        home, slot = table.translate(want.reshape(-1))
+        flat = jnp.where(home >= 0, home * ppn + slot, FREE)
+        out = _gather_local(pool_pages, flat)
+        return out.reshape(want.shape + pool_pages.shape[1:])[..., :r, :]
+    if table_nodes and table_nodes != n:
+        raise ValueError(f"table has {table_nodes} nodes but mem axis "
+                         f"{mem_axis!r} has {n}")
+
+    pages_spec = P(mem_axis, *([None] * (pool_pages.ndim - 1)))
+    out_spec = P(mem_axis, *([None] * pool_pages.ndim))
+    body = functools.partial(
+        _pull_local, axis=mem_axis, num_nodes=n, budget=budget,
+        rounds=rounds, edge_buffer=edge_buffer)
+
+    def mapped(pool, want_l, table_l, ab):
+        out = body(pool, want_l[0], table_l, ab[0])
+        return out[None]
+
+    out = shard_map(
+        mapped, mesh,
+        in_specs=(pages_spec, P(mem_axis, None), P(), P(mem_axis)),
+        out_specs=out_spec, mem_axis=mem_axis,
+    )(pool_pages, want, table, jnp.broadcast_to(active_budget, (n,)))
+    return out[:, :r]
+
+
+def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
+               table: MemPortTable, *, mesh: Optional[Mesh],
+               mem_axis: str = "data", budget: int = 8,
+               table_nodes: int = 0) -> jax.Array:
+    """Write pages to their homes through the bridge (single-writer pages).
+
+    Args:
+      pool_pages: as in :func:`pull_pages` (returned updated).
+      dest: [num_nodes, R] logical page ids each node writes.
+      payload: [num_nodes, R, *page_shape].
+    """
+    n = _mem_axis_size(mesh, mem_axis)
+    r = dest.shape[-1]
+    rounds = steering.num_rounds(r, budget)
+    pad = rounds * budget - r
+    if pad:
+        dest = jnp.concatenate(
+            [dest, jnp.full(dest.shape[:-1] + (pad,), FREE, dest.dtype)], -1)
+        zeros = jnp.zeros(payload.shape[:1] + (pad,) + payload.shape[2:],
+                          payload.dtype)
+        payload = jnp.concatenate([payload, zeros], 1)
+
+    if n == 1:
+        tn = table_nodes or 1
+        ppn = pool_pages.shape[0] // tn
+        home, slot = table.translate(dest.reshape(-1))
+        flat = jnp.where(home >= 0, home * ppn + slot, FREE)
+        return _scatter_local(
+            pool_pages, flat, payload.reshape((-1,) + payload.shape[2:]))
+    if table_nodes and table_nodes != n:
+        raise ValueError(f"table has {table_nodes} nodes but mem axis "
+                         f"{mem_axis!r} has {n}")
+
+    pages_spec = P(mem_axis, *([None] * (pool_pages.ndim - 1)))
+    body = functools.partial(_push_local, axis=mem_axis, num_nodes=n,
+                             budget=budget, rounds=rounds)
+
+    def mapped(pool, dest_l, pay_l, table_l):
+        return body(pool, dest_l[0], pay_l[0], table_l)
+
+    return shard_map(
+        mapped, mesh,
+        in_specs=(pages_spec, P(mem_axis, None),
+                  P(mem_axis, None, *([None] * (payload.ndim - 2))), P()),
+        out_specs=pages_spec, mem_axis=mem_axis,
+    )(pool_pages, dest, payload, table)

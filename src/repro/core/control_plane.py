@@ -1,0 +1,200 @@
+"""The software control plane (paper §2: "deep software-defined support").
+
+Host-side orchestrator that owns the logical page space of every pooled
+region, programs memport tables at runtime, and reacts to infrastructure
+events — exactly the role the paper assigns to "datacenter orchestration
+tools":
+
+* region allocation with placement policies (striped / affinity / hashed),
+* runtime re-programming with **no recompilation** (tables are step inputs),
+* node-failure handling: pages homed on a dead node are re-homed onto
+  survivors and a migration plan is emitted (executed by ``repro.ft``),
+* straggler mitigation: step-time telemetry drives per-node rate limits
+  (the bridge's ``active_budget``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal
+
+import numpy as np
+
+from repro.core.memport import FREE, MemPortTable
+
+Policy = Literal["striped", "hashed", "affinity"]
+
+
+@dataclass
+class Region:
+    region_id: int
+    name: str
+    page_ids: np.ndarray          # logical ids owned by this region
+    policy: str
+
+
+@dataclass
+class MigrationStep:
+    page_id: int
+    old_home: int
+    old_slot: int
+    new_home: int
+    new_slot: int
+
+
+@dataclass
+class NodeState:
+    alive: bool = True
+    budget: int = 0               # 0 = unlimited (use static budget)
+    step_times: list = field(default_factory=list)
+
+
+class ControlPlane:
+    """Owns placement for one pool (num_nodes x pages_per_node slots)."""
+
+    def __init__(self, num_nodes: int, pages_per_node: int,
+                 num_logical: int, seed: int = 0):
+        self.num_nodes = num_nodes
+        self.pages_per_node = pages_per_node
+        self.num_logical = num_logical
+        self._rng = np.random.default_rng(seed)
+        self._free: list[list[int]] = [
+            list(range(pages_per_node)) for _ in range(num_nodes)]
+        self._home = np.full((num_logical,), FREE, np.int64)
+        self._slot = np.full((num_logical,), FREE, np.int64)
+        self._next_logical = 0
+        self._regions: dict[int, Region] = {}
+        self._next_region = 0
+        self.nodes = [NodeState() for _ in range(num_nodes)]
+
+    # -- table export ---------------------------------------------------------
+    def table(self) -> MemPortTable:
+        import jax.numpy as jnp
+        return MemPortTable(home=jnp.asarray(self._home, jnp.int32),
+                            slot=jnp.asarray(self._slot, jnp.int32))
+
+    def free_slots(self, node: int) -> int:
+        return len(self._free[node])
+
+    @property
+    def alive_nodes(self) -> list[int]:
+        return [i for i, n in enumerate(self.nodes) if n.alive]
+
+    # -- allocation -----------------------------------------------------------
+    def allocate(self, num_pages: int, name: str = "",
+                 policy: Policy = "striped", affinity: int = 0) -> Region:
+        if self._next_logical + num_pages > self.num_logical:
+            raise RuntimeError("logical page space exhausted")
+        ids = np.arange(self._next_logical, self._next_logical + num_pages)
+        self._next_logical += num_pages
+
+        alive = self.alive_nodes
+        if not alive:
+            raise RuntimeError("no alive nodes")
+        if policy == "striped":
+            homes = [alive[i % len(alive)] for i in range(num_pages)]
+        elif policy == "hashed":
+            homes = [alive[int(self._rng.integers(len(alive)))]
+                     for _ in range(num_pages)]
+        elif policy == "affinity":
+            homes = [affinity] * num_pages
+        else:
+            raise ValueError(policy)
+        for pid, h in zip(ids, homes):
+            if not self._free[h]:
+                h = max(alive, key=lambda n: len(self._free[n]))
+                if not self._free[h]:
+                    raise RuntimeError("pool out of slots")
+            s = self._free[h].pop(0)
+            self._home[pid] = h
+            self._slot[pid] = s
+        region = Region(self._next_region, name or f"region{self._next_region}",
+                        ids, policy)
+        self._regions[region.region_id] = region
+        self._next_region += 1
+        return region
+
+    def release(self, region: Region) -> None:
+        for pid in region.page_ids:
+            h, s = int(self._home[pid]), int(self._slot[pid])
+            if h != FREE:
+                self._free[h].append(s)
+            self._home[pid] = FREE
+            self._slot[pid] = FREE
+        self._regions.pop(region.region_id, None)
+
+    # -- failure handling (elastic remap) --------------------------------------
+    def fail_node(self, node: int) -> list[MigrationStep]:
+        """Mark ``node`` dead; re-home its pages; return the migration plan.
+
+        The *data* on the failed node is gone — the plan's executor decides
+        whether the new slots are refilled from a checkpoint shard, from a
+        replica, or recomputed (KV pages: sequence is re-prefetched).
+        """
+        self.nodes[node].alive = False
+        survivors = self.alive_nodes
+        if not survivors:
+            raise RuntimeError("all nodes dead")
+        plan: list[MigrationStep] = []
+        victims = np.nonzero(self._home == node)[0]
+        for i, pid in enumerate(victims):
+            h = survivors[i % len(survivors)]
+            if not self._free[h]:
+                h = max(survivors, key=lambda n: len(self._free[n]))
+                if not self._free[h]:
+                    raise RuntimeError("survivors out of slots during remap")
+            s = self._free[h].pop(0)
+            plan.append(MigrationStep(int(pid), node, int(self._slot[pid]),
+                                      int(h), int(s)))
+            self._home[pid] = h
+            self._slot[pid] = s
+        # Failed node's slots return to a quarantine (not reusable).
+        self._free[node] = []
+        return plan
+
+    def revive_node(self, node: int) -> None:
+        self.nodes[node].alive = True
+        self._free[node] = [s for s in range(self.pages_per_node)
+                            if not np.any((self._home == node)
+                                          & (self._slot == s))]
+
+    # -- straggler mitigation ---------------------------------------------------
+    def record_step_time(self, node: int, seconds: float) -> None:
+        t = self.nodes[node].step_times
+        t.append(seconds)
+        if len(t) > 32:
+            del t[:-32]
+
+    def detect_stragglers(self, threshold: float = 1.5) -> list[int]:
+        med = np.median([np.mean(n.step_times) for n in self.nodes
+                         if n.alive and n.step_times] or [0.0])
+        out = []
+        for i, n in enumerate(self.nodes):
+            if n.alive and n.step_times and np.mean(n.step_times) > threshold * med:
+                out.append(i)
+        return out
+
+    def rate_limits(self, static_budget: int, threshold: float = 1.5,
+                    factor: float = 0.5) -> np.ndarray:
+        """Per-node ``active_budget`` vector for the bridge (runtime input)."""
+        budgets = np.full((self.num_nodes,), static_budget, np.int32)
+        for i in self.detect_stragglers(threshold):
+            budgets[i] = max(1, int(static_budget * factor))
+        return budgets
+
+    # -- introspection ----------------------------------------------------------
+    def occupancy(self) -> np.ndarray:
+        occ = np.zeros((self.num_nodes,), np.int64)
+        for h in self._home:
+            if h != FREE:
+                occ[h] += 1
+        return occ
+
+    def describe(self) -> str:
+        occ = self.occupancy()
+        lines = [f"pool: {self.num_nodes} nodes x {self.pages_per_node} slots"]
+        for i, n in enumerate(self.nodes):
+            lines.append(
+                f"  node {i}: {'up ' if n.alive else 'DOWN'} occ={occ[i]}"
+                f" free={len(self._free[i])}")
+        return "\n".join(lines)

@@ -1,0 +1,101 @@
+"""The memport construct (paper Fig. 2), adapted to page-granular pools.
+
+The paper's memport is a per-master, runtime-configurable table that maps
+address *regions* to (physical-address offset, target transceiver).  Here a
+"region" is a logical page of a pooled tensor, and the table maps
+
+    logical page id  ->  (home node on the mem axis, slot in that node's pool)
+
+The two columns live as device arrays and are **inputs** to the jitted step
+functions, never compile-time constants: the control plane can re-program the
+table (re-home pages, migrate slots) at runtime without triggering any
+recompilation — this is the paper's "software-defined" property.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FREE = -1  # sentinel for unmapped pages / empty request slots
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class MemPortTable:
+    """Steering table: one row per logical page.
+
+    Attributes:
+      home:  i32[num_logical]  node id owning the page (FREE if unmapped)
+      slot:  i32[num_logical]  slot index within the home node's local pool
+    """
+
+    home: jax.Array
+    slot: jax.Array
+
+    @property
+    def num_logical(self) -> int:
+        return self.home.shape[0]
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def empty(num_logical: int) -> "MemPortTable":
+        return MemPortTable(
+            home=jnp.full((num_logical,), FREE, jnp.int32),
+            slot=jnp.full((num_logical,), FREE, jnp.int32),
+        )
+
+    @staticmethod
+    def striped(num_logical: int, num_nodes: int,
+                pages_per_node: int) -> "MemPortTable":
+        """Round-robin page placement (the default pooled layout)."""
+        pages = np.arange(num_logical)
+        home = (pages % num_nodes).astype(np.int32)
+        slot = (pages // num_nodes).astype(np.int32)
+        if num_logical and slot.max() >= pages_per_node:
+            raise ValueError(
+                f"pool too small: need {slot.max() + 1} slots/node, "
+                f"have {pages_per_node}")
+        return MemPortTable(home=jnp.asarray(home), slot=jnp.asarray(slot))
+
+    @staticmethod
+    def blocked(num_logical: int, num_nodes: int,
+                pages_per_node: int) -> "MemPortTable":
+        """Contiguous block placement: page p -> (p // ppn, p % ppn), so the
+        node-major flat row equals the logical id (identity layout)."""
+        pages = np.arange(num_logical)
+        home = (pages // pages_per_node).astype(np.int32)
+        if num_logical and home.max() >= num_nodes:
+            raise ValueError("pool too small for blocked layout")
+        slot = (pages % pages_per_node).astype(np.int32)
+        return MemPortTable(home=jnp.asarray(home), slot=jnp.asarray(slot))
+
+    # -- translation (the request-preparation unit reads these) --------------
+    def translate(self, page_ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """logical page ids -> (home node, remote slot); FREE passes through."""
+        valid = page_ids >= 0
+        safe = jnp.where(valid, page_ids, 0)
+        home = jnp.where(valid, self.home[safe], FREE)
+        slot = jnp.where(valid, self.slot[safe], FREE)
+        return home, slot
+
+    # -- runtime reprogramming (control plane) -------------------------------
+    def program(self, page_ids: np.ndarray, homes: np.ndarray,
+                slots: np.ndarray) -> "MemPortTable":
+        """Return a new table with rows ``page_ids`` rewritten."""
+        return MemPortTable(
+            home=self.home.at[page_ids].set(jnp.asarray(homes, jnp.int32)),
+            slot=self.slot.at[page_ids].set(jnp.asarray(slots, jnp.int32)),
+        )
+
+    def rehome(self, old_home: int, new_homes: np.ndarray,
+               new_slots: np.ndarray) -> "MemPortTable":
+        """Move every page homed at ``old_home`` (node failure path)."""
+        mask = np.asarray(self.home) == old_home
+        idx = np.nonzero(mask)[0]
+        if len(idx) != len(new_homes):
+            raise ValueError("rehome plan size mismatch")
+        return self.program(idx, new_homes, new_slots)

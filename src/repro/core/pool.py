@@ -1,0 +1,61 @@
+"""Pooled memory: the disaggregated "slave" side of the bridge.
+
+A :class:`MemoryPool` is a page array sharded over one mesh axis (the *mem*
+axis).  Each node on that axis contributes ``pages_per_node`` slots of
+``page_elems`` elements — its HBM plays the role of the remote DDR controller
+in the paper's prototype.  The pool is pure functional state: writes return a
+new pool (donated under jit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class MemoryPool:
+    """pages: [num_nodes * pages_per_node, page_elems], sharded on dim 0."""
+
+    pages: jax.Array
+
+    def node_view(self, num_nodes: int) -> jax.Array:
+        """[num_nodes, pages_per_node, page_elems] view (for shard_map)."""
+        total, elems = self.pages.shape
+        return self.pages.reshape(num_nodes, total // num_nodes, elems)
+
+
+def make_pool(num_nodes: int, pages_per_node: int, page_elems: int,
+              dtype=jnp.bfloat16, mesh: Optional[Mesh] = None,
+              mem_axis: str = "data") -> MemoryPool:
+    shape = (num_nodes * pages_per_node, page_elems)
+    if mesh is not None and mem_axis in mesh.axis_names:
+        sharding = NamedSharding(mesh, P(mem_axis, None))
+        pages = jax.device_put(jnp.zeros(shape, dtype), sharding)
+    else:
+        pages = jnp.zeros(shape, dtype)
+    return MemoryPool(pages=pages)
+
+
+def pool_spec(mem_axis: str = "data") -> P:
+    return P(mem_axis, None)
+
+
+def write_local(pool: MemoryPool, flat_slots: jax.Array,
+                payload: jax.Array) -> MemoryPool:
+    """Scatter pages into the pool by flat (node-major) slot index."""
+    safe = jnp.where(flat_slots >= 0, flat_slots, pool.pages.shape[0])
+    pages = pool.pages.at[safe].set(payload.astype(pool.pages.dtype),
+                                    mode="drop")
+    return replace(pool, pages=pages)
+
+
+def read_local(pool: MemoryPool, flat_slots: jax.Array) -> jax.Array:
+    valid = flat_slots >= 0
+    safe = jnp.where(valid, flat_slots, 0)
+    out = pool.pages[safe]
+    return jnp.where(valid[:, None], out, jnp.zeros_like(out))

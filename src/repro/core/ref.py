@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the bridge transfer engine (no collectives).
+
+These compute the same results as :mod:`repro.core.bridge` by direct global
+gather/scatter through the memport table.  Property tests assert bridge ==
+oracle for randomized placements, request lists and budgets.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.memport import MemPortTable
+
+
+def flat_index(table: MemPortTable, page_ids: jnp.ndarray,
+               pages_per_node: int) -> jnp.ndarray:
+    """logical page -> row in the node-major global pool array."""
+    home, slot = table.translate(page_ids)
+    flat = home * pages_per_node + slot
+    return jnp.where((home >= 0) & (slot >= 0), flat, -1)
+
+
+def pull_pages_ref(pool_pages: jnp.ndarray, want: jnp.ndarray,
+                   table: MemPortTable, pages_per_node: int) -> jnp.ndarray:
+    """Oracle for :func:`repro.core.bridge.pull_pages`.
+
+    Args:
+      pool_pages: [num_nodes * pages_per_node, *page_shape] (global view).
+      want: [num_nodes, R] logical ids (FREE-padded).
+    Returns: [num_nodes, R, *page_shape].
+    """
+    flat = flat_index(table, want.reshape(-1), pages_per_node)
+    valid = flat >= 0
+    safe = jnp.where(valid, flat, 0)
+    out = pool_pages[safe]
+    mask = valid.reshape(valid.shape + (1,) * (out.ndim - 1))
+    out = jnp.where(mask, out, jnp.zeros_like(out))
+    return out.reshape(want.shape + pool_pages.shape[1:])
+
+
+def push_pages_ref(pool_pages: jnp.ndarray, dest: jnp.ndarray,
+                   payload: jnp.ndarray, table: MemPortTable,
+                   pages_per_node: int) -> jnp.ndarray:
+    """Oracle for :func:`repro.core.bridge.push_pages`."""
+    flat = flat_index(table, dest.reshape(-1), pages_per_node)
+    safe = jnp.where(flat >= 0, flat, pool_pages.shape[0])
+    pay = payload.reshape((-1,) + payload.shape[2:]).astype(pool_pages.dtype)
+    return pool_pages.at[safe].set(pay, mode="drop")

@@ -1,0 +1,44 @@
+"""Request preparation & steering (paper Fig. 1, dotted box).
+
+Pure helpers shared by the transfer engine:
+
+* ring distances (which epoch serves which request),
+* round/budget splitting (the software rate limiter),
+* route schedules (which ring distance is wired at which epoch — the circuit
+  control plane can permute or prune this, e.g. to route around a dead link).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.memport import FREE
+
+
+def ring_distance(home: jnp.ndarray, my_rank, num_nodes: int) -> jnp.ndarray:
+    """Epoch (ring hop count) at which a request to ``home`` is served."""
+    d = jnp.mod(home - my_rank, num_nodes)
+    return jnp.where(home == FREE, -1, d)
+
+
+def num_rounds(num_requests: int, budget: int, overprovision: int = 1) -> int:
+    """Static round count for ``num_requests`` at ``budget`` pages/round."""
+    if num_requests == 0:
+        return 0
+    return -(-num_requests // max(budget, 1)) * max(overprovision, 1)
+
+
+def default_route_schedule(num_nodes: int) -> list[int]:
+    """Distances wired per epoch: one full ring rotation (1 .. N-1).
+
+    Epoch 0 (distance 0) is the local loopback fast path and never uses the
+    circuit network, matching the paper's locally-mapped regions.
+    """
+    return list(range(1, num_nodes))
+
+
+def pad_requests(want: np.ndarray, rounds: int, budget: int) -> np.ndarray:
+    """Pad a request list to [rounds * budget] with FREE sentinels."""
+    out = np.full((rounds * budget,), FREE, dtype=np.int32)
+    out[: len(want)] = want
+    return out

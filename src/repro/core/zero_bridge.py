@@ -1,0 +1,169 @@
+"""Disaggregated optimizer state through the bridge (ZeRO-3, paper-style).
+
+At pod scale the optimizer state (fp32 m, v and master weights: 12-16 B per
+parameter) dominates HBM next to the KV cache.  The bridge lets it live in
+the pooled memory of *memory-rich* nodes — the paper's compute-node /
+memory-node split — and stream through the circuit network once per step:
+
+    pull opt-state pages  ->  apply update  ->  push opt-state pages
+
+Tensors are packed into fixed-size pages (the bridge granule) with a
+host-side :class:`TreePacker` that records each leaf's page range; the
+memport table owns placement, so the control plane can re-home optimizer
+shards on node failure without touching the training step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import bridge
+from repro.core.control_plane import ControlPlane
+from repro.core.memport import FREE, MemPortTable
+
+
+@dataclass
+class TreePacker:
+    """Host-side layout: pytree leaves <-> page ranges in one pool."""
+
+    treedef: Any
+    shapes: list[tuple[int, ...]]
+    dtypes: list[Any]
+    offsets: list[int]          # first page of each leaf
+    counts: list[int]           # pages per leaf
+    page_elems: int
+    num_pages: int
+
+    @staticmethod
+    def plan(tree: Any, page_elems: int) -> "TreePacker":
+        leaves, treedef = jax.tree.flatten(tree)
+        shapes = [tuple(l.shape) for l in leaves]
+        dtypes = [l.dtype for l in leaves]
+        offsets, counts = [], []
+        at = 0
+        for l in leaves:
+            n = -(-max(int(np.prod(l.shape)), 1) // page_elems)
+            offsets.append(at)
+            counts.append(n)
+            at += n
+        return TreePacker(treedef, shapes, dtypes, offsets, counts,
+                          page_elems, at)
+
+    # -- pure-jnp pack/unpack (jit-friendly) ---------------------------------
+    def pack(self, tree: Any, dtype=jnp.float32) -> jax.Array:
+        """-> [num_pages, page_elems] page image of the tree."""
+        leaves = jax.tree.leaves(tree)
+        pages = []
+        for l, n in zip(leaves, self.counts):
+            flat = l.astype(dtype).reshape(-1)
+            pad = n * self.page_elems - flat.shape[0]
+            if pad:
+                flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype)])
+            pages.append(flat.reshape(n, self.page_elems))
+        return jnp.concatenate(pages, 0)
+
+    def unpack(self, pages: jax.Array) -> Any:
+        leaves = []
+        for shape, dt, off, n in zip(self.shapes, self.dtypes,
+                                     self.offsets, self.counts):
+            flat = pages[off: off + n].reshape(-1)
+            size = int(np.prod(shape)) if shape else 1
+            leaves.append(flat[:size].reshape(shape).astype(dt))
+        return jax.tree.unflatten(self.treedef, leaves)
+
+
+@dataclass
+class BridgeStore:
+    """A packed tree resident in a bridge pool."""
+
+    packer: TreePacker
+    table: MemPortTable
+    pool: jax.Array             # [num_slots, page_elems] sharded over mem axis
+    mem_axis: str
+    budget: int
+    table_nodes: int = 1        # logical memory nodes (== mesh size if > 1)
+
+
+def create_store(tree: Any, *, mesh: Optional[Mesh], mem_axis: str = "data",
+                 page_elems: int = 16_384, budget: int = 8,
+                 cp: Optional[ControlPlane] = None,
+                 policy: str = "striped", dtype=jnp.float32) -> BridgeStore:
+    """Allocate a pooled region for ``tree`` and write its initial image."""
+    packer = TreePacker.plan(tree, page_elems)
+    n = bridge._mem_axis_size(mesh, mem_axis)
+    if cp is None:
+        # Headroom so elastic remap has spare slots on survivors.
+        cp = ControlPlane(n, 2 * -(-packer.num_pages // n), packer.num_pages)
+    if n > 1 and cp.num_nodes != n:
+        raise ValueError(f"control plane has {cp.num_nodes} nodes, mesh axis "
+                         f"{mem_axis!r} has {n}")
+    cp.allocate(packer.num_pages, "zero", policy=policy)
+    table = cp.table()
+    # Pool geometry MUST match the control plane's slot space: remapped
+    # slots index the same rows the bridge scatters into.
+    pool = jnp.zeros((cp.num_nodes * cp.pages_per_node, page_elems), dtype)
+    store = BridgeStore(packer, table, pool, mem_axis, budget,
+                        table_nodes=cp.num_nodes)
+    return push_tree(store, tree, mesh=mesh)
+
+
+def _as_node_requests(ids: np.ndarray, n: int) -> np.ndarray:
+    """Split a flat page-id list evenly across the n requesting nodes."""
+    per = -(-len(ids) // n)
+    out = np.full((n, per), FREE, np.int32)
+    for i in range(n):
+        chunk = ids[i * per: (i + 1) * per]
+        out[i, : len(chunk)] = chunk
+    return out
+
+
+def pull_tree(store: BridgeStore, *, mesh: Optional[Mesh]) -> Any:
+    """Stream the packed tree out of the pool (each node pulls a stripe,
+    then stripes all-gather via the output sharding)."""
+    n = bridge._mem_axis_size(mesh, store.mem_axis)
+    want = jnp.asarray(_as_node_requests(
+        np.arange(store.packer.num_pages), n))
+    got = bridge.pull_pages(store.pool, want, store.table, mesh=mesh,
+                            mem_axis=store.mem_axis, budget=store.budget,
+                            table_nodes=store.table_nodes)
+    flat = got.reshape(-1, store.packer.page_elems)[: store.packer.num_pages]
+    return store.packer.unpack(flat)
+
+
+def push_tree(store: BridgeStore, tree: Any, *,
+              mesh: Optional[Mesh]) -> BridgeStore:
+    """Write a new image of the tree through the bridge."""
+    n = bridge._mem_axis_size(mesh, store.mem_axis)
+    pages = store.packer.pack(tree, dtype=store.pool.dtype)
+    ids = np.arange(store.packer.num_pages)
+    dest = _as_node_requests(ids, n)
+    per = dest.shape[1]
+    pad = n * per - store.packer.num_pages
+    if pad:
+        pages = jnp.concatenate(
+            [pages, jnp.zeros((pad, store.packer.page_elems),
+                              pages.dtype)], 0)
+    payload = pages.reshape(n, per, store.packer.page_elems)
+    pool = bridge.push_pages(store.pool, jnp.asarray(dest), payload,
+                             store.table, mesh=mesh, mem_axis=store.mem_axis,
+                             budget=store.budget,
+                             table_nodes=store.table_nodes)
+    return BridgeStore(store.packer, store.table, pool, store.mem_axis,
+                       store.budget, table_nodes=store.table_nodes)
+
+
+def rehome_after_failure(store: BridgeStore, cp: ControlPlane,
+                         failed_node: int, restore_tree: Any, *,
+                         mesh: Optional[Mesh]) -> BridgeStore:
+    """Elastic remap: re-home the failed node's pages and restore their
+    contents from a checkpointed tree image (the data on the node is lost)."""
+    cp.fail_node(failed_node)
+    table = cp.table()
+    store = BridgeStore(store.packer, table, store.pool, store.mem_axis,
+                        store.budget, table_nodes=store.table_nodes)
+    return push_tree(store, restore_tree, mesh=mesh)

@@ -1,0 +1,2 @@
+from repro.ft.elastic import ElasticTrainer, FailureEvent  # noqa: F401
+from repro.ft.heartbeat import HeartbeatMonitor  # noqa: F401

@@ -1,0 +1,120 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Blockwise online-softmax attention with explicit VMEM tiling:
+
+  grid = (B, H, Sq/bq, Sk/bk)   — the Sk axis iterates innermost, carrying
+  (m, l, acc) in VMEM scratch; the final Sk step normalizes and writes out.
+
+Tiling follows MXU alignment: bq and bk default to 128/512, head_dim is the
+lane dimension.  Supports GQA (kv_heads <= heads), causal and sliding-window
+masks with absolute positions (q_offset) — the same contract as the XLA
+reference ``repro.models.flash.attention_ref`` (the oracle for these tests).
+
+Note on TPU adaptation (DESIGN.md §2): the GPU flash algorithm tiles for
+shared memory per SM; here blocks are sized for VMEM (~16 MiB/core) and the
+MXU's 128x128 systolic shape, and the "parallel over blocks" dimension is
+the sequential grid walk of one core rather than a thread block swarm.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                      bq: int, bk: int, causal: bool, window: int,
+                      q_offset: int, sk_valid: int, num_kb: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # [bq, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)          # [bk, hd]
+    hd = q.shape[-1]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (hd ** -0.5)                               # [bq, bk]
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + q_offset
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < sk_valid
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=1)
+    acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(ki == num_kb - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, q_offset: int = 0,
+                    bq: int = 128, bk: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, Sq, H, hd]; k, v: [B, Sk, kv, hd] -> [B, Sq, H, hd]."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    sq_pad = (-sq) % bq
+    sk_pad = (-sk) % bk
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0)))
+    if sk_pad:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+    num_qb = q.shape[1] // bq
+    num_kb = k.shape[1] // bk
+    grid = (b, h, num_qb, num_kb)
+
+    q_spec = pl.BlockSpec((1, bq, 1, hd), lambda bi, hi, qi, ki: (bi, qi, hi, 0))
+    k_spec = pl.BlockSpec((1, bk, 1, hd),
+                          lambda bi, hi, qi, ki: (bi, ki, hi // g, 0))
+    o_spec = pl.BlockSpec((1, bq, 1, hd), lambda bi, hi, qi, ki: (bi, qi, hi, 0))
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, bq=bq, bk=bk, causal=causal, window=window,
+        q_offset=q_offset, sk_valid=sk, num_kb=num_kb)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[q_spec, k_spec, k_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

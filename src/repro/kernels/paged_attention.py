@@ -1,0 +1,120 @@
+"""Paged decode attention as a Pallas TPU kernel (the bridge's compute hot
+spot).
+
+One new token per sequence attends over its KV pages resident in the pooled
+cache.  The page table (logical page -> pool slot) is a **scalar-prefetch**
+operand: the TPU grid pipeline reads it to steer each step's HBM->VMEM DMA
+to the right pool slot — the memport table in hardware, exactly the paper's
+"request preparation & steering unit" fused into the kernel's DMA engine.
+
+  grid = (B, P)   — pages of one sequence iterate innermost with (m, l, acc)
+  carried in VMEM scratch; invalid / out-of-range pages are masked, the last
+  page normalizes and writes [H, hd] out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_sc, l_sc, acc_sc, *, page_tokens: int, max_pages: int,
+                  num_heads: int, kv_heads: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    g = num_heads // kv_heads
+    hd = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32)                    # [H, hd]
+    k = k_ref[0].astype(jnp.float32)                    # [T, kv, hd]
+    v = v_ref[0].astype(jnp.float32)
+
+    length = lengths_ref[b]
+    pos = p * page_tokens + jax.lax.broadcasted_iota(
+        jnp.int32, (page_tokens,), 0)
+    # only fully-flushed pooled pages participate (the tail lives in the
+    # local write buffer and is merged by the caller)
+    flushed = (length // page_tokens) * page_tokens
+    valid = pos < flushed                               # [T]
+
+    qg = q.reshape(kv_heads, g, hd)
+    s = jnp.einsum("kgd,tkd->kgt", qg, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    s = s.reshape(num_heads, page_tokens)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    pexp = jnp.exp(s - m_new[:, None])
+    pexp = jnp.where(valid[None, :], pexp, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * alpha + jnp.sum(pexp, axis=1)
+    pv = jnp.einsum("ht,tkd->hkd", pexp.reshape(num_heads, page_tokens), v,
+                    preferred_element_type=jnp.float32)
+    # fold kv dim: head h reads kv head h // g
+    pv = pv.reshape(kv_heads, g, kv_heads, hd)
+    eye = (jax.lax.broadcasted_iota(jnp.int32, (kv_heads, kv_heads), 0)
+           == jax.lax.broadcasted_iota(jnp.int32, (kv_heads, kv_heads), 1))
+    pv = jnp.einsum("kgjd,kj->kgd", pv, eye.astype(jnp.float32))
+    acc_sc[...] = acc_sc[...] * alpha[:, None] \
+        + pv.reshape(num_heads, hd)
+    m_sc[...] = m_new
+
+    @pl.when(p == max_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array, *,
+                    max_pages: int, interpret: bool = False) -> jax.Array:
+    """Decode attention over pooled pages.
+
+    q: [B, H, hd]; k_pool/v_pool: [slots, T, kv, hd];
+    page_table: i32[B, max_pages] pool slot of each page (-1 = unmapped);
+    lengths: i32[B] visible tokens.  -> [B, H, hd]
+    """
+    b, h, hd = q.shape
+    slots, t, kv, _ = k_pool.shape
+    table = jnp.where(page_table >= 0, page_table, 0).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_kernel, page_tokens=t, max_pages=max_pages, num_heads=h,
+        kv_heads=kv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda bi, pi, tbl, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, t, kv, hd),
+                         lambda bi, pi, tbl, ln: (tbl[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, t, kv, hd),
+                         lambda bi, pi, tbl, ln: (tbl[bi, pi], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda bi, pi, tbl, ln: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(table, lengths.astype(jnp.int32), q, k_pool, v_pool)
+    return out

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kvbridge import decode_attention_ref
+from repro.models.flash import attention_ref
+
+
+# -- STREAM -------------------------------------------------------------------
+
+def stream_copy_ref(c):
+    return jnp.asarray(c)
+
+
+def stream_scale_ref(c, q):
+    return (q * c.astype(jnp.float32)).astype(c.dtype)
+
+
+def stream_add_ref(a, b):
+    return a + b
+
+
+def stream_triad_ref(b, c, q):
+    return (b.astype(jnp.float32)
+            + q * c.astype(jnp.float32)).astype(b.dtype)
+
+
+# -- flash attention ------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset)
+
+
+# -- paged decode attention ------------------------------------------------------
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths, *,
+                        max_pages: int):
+    """Gather pages dense, then masked GQA decode attention over flushed
+    pages only (tail handled by the caller, as in the kernel)."""
+    b, h, hd = q.shape
+    slots, t, kv, _ = k_pool.shape
+    safe = jnp.where(page_table >= 0, page_table, 0)
+    k = k_pool[safe]                     # [B, P, T, kv, hd]
+    v = v_pool[safe]
+    k = k.reshape(b, max_pages * t, kv, hd)
+    v = v.reshape(b, max_pages * t, kv, hd)
+    flushed_tokens = (lengths // t) * t
+    return decode_attention_ref(q, k, v, flushed_tokens)

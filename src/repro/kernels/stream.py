@@ -1,0 +1,97 @@
+"""STREAM kernels (copy / scale / add / triad) as Pallas TPU kernels.
+
+The paper's evaluation vehicle (§3): STREAM measures sustainable memory
+bandwidth as perceived by the application.  On TPU the analogue is HBM->VMEM
+streaming through the VPU; these kernels tile 1-D arrays into MXU/VPU-aligned
+(rows, 128·k) VMEM blocks and express each STREAM kernel as one grid pass.
+
+Local mode streams HBM directly; "remote" mode (benchmarks) runs the same
+kernels against bridge-delivered pages — the byte-for-byte TPU equivalent of
+the paper's local-vs-disaggregated comparison.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES = 8
+DEFAULT_BLOCK_ROWS = 256  # rows of 128 lanes per VMEM block (128 KiB fp32)
+
+
+def _copy_kernel(src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def _scale_kernel(src_ref, dst_ref, *, q):
+    dst_ref[...] = (q * src_ref[...].astype(jnp.float32)).astype(dst_ref.dtype)
+
+
+def _add_kernel(a_ref, b_ref, dst_ref):
+    dst_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _triad_kernel(b_ref, c_ref, dst_ref, *, q):
+    acc = b_ref[...].astype(jnp.float32) + q * c_ref[...].astype(jnp.float32)
+    dst_ref[...] = acc.astype(dst_ref.dtype)
+
+
+def _grid_1d(x: jax.Array, block_rows: int):
+    n = x.shape[0]
+    rows = -(-n // LANES)
+    block_rows = min(block_rows, rows)
+    rows_pad = -(-rows // block_rows) * block_rows
+    flat = x
+    if rows_pad * LANES != n:
+        flat = jnp.pad(x, (0, rows_pad * LANES - n))
+    grid = (rows_pad // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return flat.reshape(rows_pad, LANES), grid, spec
+
+
+def _run(kernel, arrays, block_rows: int, interpret: bool):
+    n = arrays[0].shape[0]
+    shaped = [_grid_1d(a, block_rows) for a in arrays]
+    x0, grid, spec = shaped[0]
+    ins = [s[0] for s in shaped]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * len(ins),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x0.shape, x0.dtype),
+        interpret=interpret,
+    )(*ins)
+    return out.reshape(-1)[:n]
+
+
+def stream_copy(c: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool = False) -> jax.Array:
+    """a[i] = c[i]   (16 B/iter fp32, 0 flops — paper's 'copy')."""
+    return _run(_copy_kernel, [c], block_rows, interpret)
+
+
+def stream_scale(c: jax.Array, q: float, *,
+                 block_rows: int = DEFAULT_BLOCK_ROWS,
+                 interpret: bool = False) -> jax.Array:
+    """b[i] = q * c[i]   (16 B/iter, 1 flop — 'scale')."""
+    return _run(functools.partial(_scale_kernel, q=q), [c], block_rows,
+                interpret)
+
+
+def stream_add(a: jax.Array, b: jax.Array, *,
+               block_rows: int = DEFAULT_BLOCK_ROWS,
+               interpret: bool = False) -> jax.Array:
+    """c[i] = a[i] + b[i]   (24 B/iter, 1 flop — 'add')."""
+    return _run(_add_kernel, [a, b], block_rows, interpret)
+
+
+def stream_triad(b: jax.Array, c: jax.Array, q: float, *,
+                 block_rows: int = DEFAULT_BLOCK_ROWS,
+                 interpret: bool = False) -> jax.Array:
+    """a[i] = b[i] + q * c[i]   (24 B/iter, 2 flops — 'triad')."""
+    return _run(functools.partial(_triad_kernel, q=q), [b, c], block_rows,
+                interpret)

@@ -1,0 +1,21 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — device counts are locked at first jax init, and
+only launch/dryrun.py (or the real pod launcher) sets them.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 4, model: int = 2):
+    """Small mesh for the 8-virtual-device subprocess tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

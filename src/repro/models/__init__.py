@@ -1,0 +1,11 @@
+from repro.models.transformer import (  # noqa: F401
+    DenseCacheOps,
+    abstract_params,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    model_specs,
+    params_logical_axes,
+)

@@ -1,0 +1,125 @@
+"""GQA attention blocks: projections + RoPE + flash, train & decode paths."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SWA_ATTN
+from repro.models import flash, layers
+from repro.models.layers import Param
+
+
+def attn_specs(cfg: ModelConfig) -> dict[str, Param]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": Param((d, h * hd), (None, "heads")),
+        "wk": Param((d, kv * hd), (None, "kv_heads")),
+        "wv": Param((d, kv * hd), (None, "kv_heads")),
+        "wo": Param((h * hd, d), ("heads", None)),
+    }
+
+
+def qkv(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array,
+        positions: Optional[jax.Array] = None, use_rope: bool = True):
+    """x: [B, S, d] -> q [B,S,H,hd], k,v [B,S,kv,hd] (RoPE applied)."""
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, kvh, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, kvh, hd)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attend_train(cfg: ModelConfig, kind: str, q, k, v, *,
+                 causal: bool = True, chunk: int = 512,
+                 impl: str = "xla") -> jax.Array:
+    """Sequence attention by layer kind (full/global vs sliding-window).
+
+    impl="xla": chunked flash in XLA ops (custom VJP, trains).
+    impl="pallas": the Pallas TPU kernel (forward; serving/prefill path).
+    """
+    window = cfg.window_size if kind == SWA_ATTN else 0
+    s = q.shape[1]
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if s <= chunk:  # tiny sequences: dense reference path is cheaper
+        return flash.attention_ref(q, k, v, causal=causal, window=window)
+    return flash.flash_attention(q, k, v, causal, window, chunk, 0)
+
+
+def project_out(cfg: ModelConfig, p: dict[str, jax.Array],
+                attn_out: jax.Array) -> jax.Array:
+    b, s = attn_out.shape[:2]
+    flat = attn_out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("bse,ed->bsd", flat, p["wo"])
+
+
+# -- decode ------------------------------------------------------------------
+
+def qkv_step(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array,
+             position: jax.Array, use_rope: bool = True):
+    """x: [B, d], position: [B] -> q [B,H,hd], k,v [B,kv,hd]."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bd,de->be", x, p["wq"]).reshape(b, 1, h, hd)
+    k = jnp.einsum("bd,de->be", x, p["wk"]).reshape(b, 1, kvh, hd)
+    v = jnp.einsum("bd,de->be", x, p["wv"]).reshape(b, 1, kvh, hd)
+    if use_rope:
+        q = layers.rope(q, position[:, None], cfg.rope_theta)
+        k = layers.rope(k, position[:, None], cfg.rope_theta)
+    return q[:, 0], k[:, 0], v[:, 0]
+
+
+def project_out_step(cfg: ModelConfig, p: dict[str, jax.Array],
+                     attn_out: jax.Array) -> jax.Array:
+    flat = attn_out.reshape(attn_out.shape[0], cfg.num_heads * cfg.head_dim)
+    return jnp.einsum("be,ed->bd", flat, p["wo"])
+
+
+# -- cross attention (enc-dec) -------------------------------------------------
+
+def cross_attn_specs(cfg: ModelConfig) -> dict[str, Param]:
+    return attn_specs(cfg)
+
+
+def cross_attend(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array,
+                 enc_out: jax.Array) -> jax.Array:
+    """x: [B, S, d] attends enc_out [B, Se, d] bidirectionally."""
+    b, s, _ = x.shape
+    se = enc_out.shape[1]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", enc_out, p["wk"]).reshape(b, se, kvh, hd)
+    v = jnp.einsum("bsd,de->bse", enc_out, p["wv"]).reshape(b, se, kvh, hd)
+    out = attend_train(cfg, "full", q, k, v, causal=False)
+    return project_out(cfg, p, out)
+
+
+def cross_attend_step(cfg: ModelConfig, p: dict[str, jax.Array],
+                      x: jax.Array, enc_k: jax.Array,
+                      enc_v: jax.Array) -> jax.Array:
+    """Decode-time cross attention against precomputed enc K/V [B,Se,kv,hd]."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bd,de->be", x, p["wq"]).reshape(b, h, hd)
+    from repro.core.kvbridge import decode_attention_ref
+    lengths = jnp.full((b,), enc_k.shape[1], jnp.int32)
+    out = decode_attention_ref(q, enc_k, enc_v, lengths)
+    return project_out_step(cfg, p, out)
+
+
+def encode_cross_kv(cfg: ModelConfig, p: dict[str, jax.Array],
+                    enc_out: jax.Array):
+    b, se, _ = enc_out.shape
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,de->bse", enc_out, p["wk"]).reshape(b, se, kvh, hd)
+    v = jnp.einsum("bsd,de->bse", enc_out, p["wv"]).reshape(b, se, kvh, hd)
+    return k, v

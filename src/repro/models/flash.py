@@ -1,0 +1,276 @@
+"""Chunked (flash-style) attention in pure JAX with a custom VJP.
+
+Full-sequence attention materializes [B, H, S, S] scores — 17 GB/device at a
+32 k prefill — so every attention layer routes through this chunked
+implementation: the forward scans KV chunks through an online-softmax
+accumulator, and the backward recomputes per-chunk scores from the saved
+(q, k, v, out, lse) — the flash-attention recipe, expressed in XLA ops.
+The Pallas kernel (repro.kernels.flash_attention) implements the same
+contract with explicit VMEM tiling; this module doubles as its oracle.
+
+Supports GQA (kv_heads <= heads), causal and sliding-window masks, and
+bidirectional (encoder) attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """[Sq, Sk] boolean visibility mask."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def _chunk_scores(q, k_chunk, scale, mask_chunk):
+    # q: [B, Sq, kv, G, hd]; k_chunk: [B, C, kv, hd] -> s: [B, kv, G, Sq, C]
+    # dot inputs stay in their storage dtype (bf16 on the MXU) with f32
+    # accumulation; only the scores are f32.
+    s = jnp.einsum("bqkgd,bckd->bkgqc", q, k_chunk,
+                   preferred_element_type=jnp.float32) * scale
+    return jnp.where(mask_chunk[None, None, None], s, NEG_INF)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    chunk: int = 512, q_offset: int = 0) -> jax.Array:
+    """q: [B, Sq, H, hd]; k, v: [B, Sk, kv, hd] -> [B, Sq, H, hd].
+
+    ``q_offset``: absolute position of q[0] (prefill continuation); masks are
+    computed from absolute positions.
+    """
+    out, _ = _flash_fwd_inner(q, k, v, causal, window, chunk, q_offset)
+    return out
+
+
+def _live_chunk_range(q_lo: int, q_hi: int, sk: int, chunk: int,
+                      causal: bool, window: int,
+                      q_offset: int) -> tuple[int, int]:
+    """Static [k_chunk_lo, k_chunk_hi) with any unmasked position for the
+    query block [q_lo, q_hi) — causal blocks above the diagonal and windowed
+    blocks below q_lo - window are skipped entirely."""
+    hi = sk
+    if causal:
+        hi = min(hi, q_hi + q_offset)
+    lo = 0
+    if window > 0:
+        lo = max(0, q_lo + q_offset - window + 1)
+    c_lo = lo // chunk
+    c_hi = -(-hi // chunk) if hi > 0 else 0
+    return c_lo, max(c_hi, c_lo)
+
+
+def _flash_fwd_inner(q, k, v, causal, window, chunk, q_offset,
+                     q_block: int = 4096):
+    """Query-blocked, chunk-skipping online-softmax attention.
+
+    The outer (unrolled) loop walks q blocks; the inner scan walks only the
+    k chunks a block can see (causal upper triangle and sliding-window lower
+    band are skipped statically), halving causal traffic and reducing
+    windowed layers to O(window) per block.  The accumulator keeps the
+    [B, kv, G, q, d] layout so no big per-chunk transposes appear.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    nchunks = -(-sk // chunk)
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, kv, hd)
+    vc = v.reshape(b, nchunks, chunk, kv, hd)
+
+    q_block = min(q_block, sq)
+    outs, lses = [], []
+    for q_lo in range(0, sq, q_block):
+        q_hi = min(q_lo + q_block, sq)
+        bq = q_hi - q_lo
+        qg = q[:, q_lo:q_hi].reshape(b, bq, kv, g, hd)
+        q_pos = jnp.arange(q_lo, q_hi) + q_offset
+        c_lo, c_hi = _live_chunk_range(q_lo, q_hi, sk, chunk, causal,
+                                       window, q_offset)
+        if c_hi == c_lo:
+            outs.append(jnp.zeros((b, bq, h, hd), q.dtype))
+            lses.append(jnp.full((b, kv, g, bq), NEG_INF, jnp.float32))
+            continue
+
+        # Chunks fully inside the visible band skip masking entirely —
+        # boundary chunks (causal diagonal, window edge, seq padding) get
+        # the masked body.  exp(s_masked - m) underflows to 0, so no second
+        # select is needed after the exp.
+        def full_live(c):
+            if (c + 1) * chunk > sk:
+                return False
+            if causal and (c + 1) * chunk - 1 > q_lo + q_offset:
+                return False
+            if window > 0 and c * chunk < q_hi - 1 + q_offset - window + 1:
+                return False
+            return True
+
+        def body(carry, xs, masked, q_pos=q_pos, qg=qg):
+            m_prev, l_prev, acc = carry
+            k_ch, v_ch, ci = xs
+            if masked:
+                k_pos = ci * chunk + jnp.arange(chunk)
+                mask = _mask(q_pos, k_pos, causal, window) \
+                    & (k_pos < sk)[None]
+                s = _chunk_scores(qg, k_ch, scale, mask)  # [B,kv,G,bq,C]
+            else:
+                s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k_ch,
+                               preferred_element_type=jnp.float32) * scale
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            # keep [B,kv,G,q,d] layout end-to-end (no score transposes)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(v_ch.dtype), v_ch,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        carry = (jnp.full((b, kv, g, bq), NEG_INF, jnp.float32),
+                 jnp.zeros((b, kv, g, bq), jnp.float32),
+                 jnp.zeros((b, kv, g, bq, hd), jnp.float32))
+        # segment the chunk range into maximal masked/unmasked runs
+        runs: list[tuple[bool, int, int]] = []
+        for c in range(c_lo, c_hi):
+            m_flag = not full_live(c)
+            if runs and runs[-1][0] == m_flag and runs[-1][2] == c:
+                runs[-1] = (m_flag, runs[-1][1], c + 1)
+            else:
+                runs.append((m_flag, c, c + 1))
+        for masked, r_lo, r_hi in runs:
+            xs = (jnp.moveaxis(kc[:, r_lo:r_hi], 1, 0),
+                  jnp.moveaxis(vc[:, r_lo:r_hi], 1, 0),
+                  jnp.arange(r_lo, r_hi))
+            carry, _ = jax.lax.scan(
+                lambda c_, x_, mk=masked: body(c_, x_, mk), carry, xs)
+        m, l, acc = carry
+        l_safe = jnp.maximum(l, 1e-30)
+        out = acc / l_safe[..., None]                     # [B,kv,G,bq,hd]
+        out = jnp.moveaxis(out, 3, 1).reshape(b, bq, h, hd)
+        outs.append(out.astype(q.dtype))
+        lses.append(m + jnp.log(l_safe))
+    out = jnp.concatenate(outs, axis=1)
+    lse = jnp.concatenate(lses, axis=-1)                  # [B,kv,G,Sq]
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, chunk, q_offset):
+    out, lse = _flash_fwd_inner(q, k, v, causal, window, chunk, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, chunk, q_offset, res, dout):
+    """Query-blocked, chunk-skipping flash backward (mirrors the forward):
+    per q-block, only the statically-live k chunks are recomputed, and dk/dv
+    accumulate into full buffers with dynamic-update-slices."""
+    q, k, v, out, lse = res
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = hd ** -0.5
+    nchunks = -(-sk // chunk)
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, kv, hd)
+    vc = v.reshape(b, nchunks, chunk, kv, hd)
+    dk = jnp.zeros((b, nchunks, chunk, kv, hd), jnp.float32)
+    dv = jnp.zeros((b, nchunks, chunk, kv, hd), jnp.float32)
+
+    q_block = min(4096, sq)
+    dqs = []
+    for q_lo in range(0, sq, q_block):
+        q_hi = min(q_lo + q_block, sq)
+        bq = q_hi - q_lo
+        qg = q[:, q_lo:q_hi].reshape(b, bq, kv, g, hd)
+        og = out[:, q_lo:q_hi].reshape(b, bq, kv, g, hd).astype(jnp.float32)
+        dog = dout[:, q_lo:q_hi].reshape(b, bq, kv, g,
+                                         hd).astype(jnp.float32)
+        lse_b = lse[..., q_lo:q_hi]
+        delta = jnp.sum(og * dog, axis=-1).transpose(0, 2, 3, 1)  # [B,kv,G,bq]
+        q_pos = jnp.arange(q_lo, q_hi) + q_offset
+        c_lo, c_hi = _live_chunk_range(q_lo, q_hi, sk, chunk, causal,
+                                       window, q_offset)
+        if c_hi == c_lo:
+            dqs.append(jnp.zeros((b, bq, h, hd), q.dtype))
+            continue
+
+        def body(carry, xs, q_pos=q_pos, qg=qg, dog=dog, lse_b=lse_b,
+                 delta=delta):
+            dq_acc, dk_b, dv_b = carry
+            k_ch, v_ch, ci = xs
+            k_pos = ci * chunk + jnp.arange(chunk)
+            mask = _mask(q_pos, k_pos, causal, window) & (k_pos < sk)[None]
+            s = _chunk_scores(qg, k_ch, scale, mask)      # [B,kv,G,bq,C]
+            p = jnp.exp(s - lse_b[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            pb = p.astype(v_ch.dtype)
+            dv_ch = jnp.einsum("bkgqc,bqkgd->bckd", pb, dog.astype(pb.dtype),
+                               preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqkgd,bckd->bkgqc", dog.astype(v_ch.dtype),
+                            v_ch, preferred_element_type=jnp.float32)
+            ds = p * (dp - delta[..., None]) * scale
+            dsb = ds.astype(k_ch.dtype)
+            dq_acc = dq_acc + jnp.einsum(
+                "bkgqc,bckd->bqkgd", dsb, k_ch,
+                preferred_element_type=jnp.float32)
+            dk_ch = jnp.einsum("bkgqc,bqkgd->bckd", dsb,
+                               qg.astype(dsb.dtype),
+                               preferred_element_type=jnp.float32)
+            dk_b = jax.lax.dynamic_update_index_in_dim(
+                dk_b, jax.lax.dynamic_index_in_dim(
+                    dk_b, ci, 1, keepdims=False) + dk_ch, ci, 1)
+            dv_b = jax.lax.dynamic_update_index_in_dim(
+                dv_b, jax.lax.dynamic_index_in_dim(
+                    dv_b, ci, 1, keepdims=False) + dv_ch, ci, 1)
+            return (dq_acc, dk_b, dv_b), None
+
+        dq0 = jnp.zeros((b, bq, kv, g, hd), jnp.float32)
+        xs = (jnp.moveaxis(kc[:, c_lo:c_hi], 1, 0),
+              jnp.moveaxis(vc[:, c_lo:c_hi], 1, 0),
+              jnp.arange(c_lo, c_hi))
+        (dq_b, dk, dv), _ = jax.lax.scan(body, (dq0, dk, dv), xs)
+        dqs.append(dq_b.reshape(b, bq, h, hd).astype(q.dtype))
+
+    dq = jnp.concatenate(dqs, axis=1)
+    dk = dk.reshape(b, nchunks * chunk, kv, hd)[:, :sk]
+    dv = dv.reshape(b, nchunks * chunk, kv, hd)[:, :sk]
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference (for tests and tiny shapes)
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, causal=True, window=0, q_offset=0):
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s * hd ** -0.5
+    mask = _mask(jnp.arange(sq) + q_offset, jnp.arange(k.shape[1]),
+                 causal, window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)

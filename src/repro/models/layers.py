@@ -1,0 +1,140 @@
+"""Shared layers: norms, projections, embeddings, RoPE.
+
+Params are plain nested dicts.  Every constructor returns ``(init_fn,
+logical_axes)`` pairs indirectly via the ``Param`` spec helper so the same
+description drives initialization, ``jax.eval_shape`` and sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Declarative parameter: shape + logical sharding axes + init scale."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"           # normal | zeros | ones
+    scale: float = 1.0
+    stack_dims: int = 0            # leading scan-stacked dims (not fan-in)
+
+    def initialize(self, key, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        body = self.shape[self.stack_dims:]
+        fan_in = body[0] if len(body) > 1 else max(body[-1], 1)
+        std = self.scale / np.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape) * std).astype(dtype)
+
+
+def init_tree(spec_tree: Any, key: jax.Array, dtype) -> Any:
+    """Initialize a pytree of Params with split keys."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, Param))
+    keys = jax.random.split(key, len(leaves))
+    vals = [p.initialize(k, dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_tree(spec_tree: Any) -> Any:
+    """Logical-axes pytree parallel to the params tree."""
+    return jax.tree.map(lambda p: p.axes, spec_tree,
+                        is_leaf=lambda x: isinstance(x, Param))
+
+
+def shapes_tree(spec_tree: Any, dtype) -> Any:
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), spec_tree,
+        is_leaf=lambda x: isinstance(x, Param))
+
+
+def stack_specs(spec_tree: Any, n: int, axis_name: str = "layers") -> Any:
+    """Add a stacked leading dim (scan-over-layers) to every Param."""
+    return jax.tree.map(
+        lambda p: Param((n,) + p.shape, (axis_name,) + p.axes, p.init,
+                        p.scale, p.stack_dims + 1),
+        spec_tree, is_leaf=lambda x: isinstance(x, Param))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_spec(d: int) -> Param:
+    return Param((d,), (None,), init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(kind: str, x: jax.Array, scale: jax.Array) -> jax.Array:
+    return rmsnorm(x, scale) if kind == "rmsnorm" else layernorm(x, scale)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def act_fn(kind: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[kind]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                          # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_spec(vocab: int, d: int) -> Param:
+    return Param((vocab, d), ("vocab", None), scale=1.0)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array,
+            softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) — train scan + decode step.
+
+Block structure (Griffin "recurrent block"):
+
+    x -> { W_x -> causal conv1d(w=4) -> RG-LRU }  *  { W_y -> GeLU }  -> W_out
+
+RG-LRU (per channel):
+    r_t = sigmoid(W_r x_t),  i_t = sigmoid(W_i x_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The sequence form is a linear recurrence -> associative scan for training;
+decode keeps (h, conv buffer) as state.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers
+from repro.models.layers import Param
+
+C_RGLRU = 8.0
+
+
+def rglru_specs(cfg: ModelConfig) -> dict[str, Param]:
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "wx": Param((d, w), (None, "ff")),
+        "wy": Param((d, w), (None, "ff")),
+        "conv_w": Param((cfg.conv_width, w), (None, "ff"), scale=0.5),
+        "conv_b": Param((w,), ("ff",), init="zeros"),
+        "wr": Param((w, w), ("ff", None)),
+        "wi": Param((w, w), ("ff", None)),
+        "lam": Param((w,), ("ff",), init="normal", scale=4.0),
+        "wo": Param((w, d), ("ff", None)),
+    }
+
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(jnp.einsum("...w,wu->...u", x, p["wr"]))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wu->...u", x, p["wi"]))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * (i * x)
+    return a, gated_x
+
+
+def _conv_causal(p, x_seq, buf=None):
+    """Depthwise causal conv. x_seq: [B, S, W]; buf: [B, cw-1, W] history."""
+    cw = p["conv_w"].shape[0]
+    if buf is None:
+        buf = jnp.zeros(x_seq.shape[:1] + (cw - 1,) + x_seq.shape[2:],
+                        x_seq.dtype)
+    xp = jnp.concatenate([buf, x_seq], axis=1)
+    out = sum(xp[:, i: i + x_seq.shape[1]] * p["conv_w"][i]
+              for i in range(cw)) + p["conv_b"]
+    new_buf = xp[:, -(cw - 1):] if cw > 1 else buf
+    return out.astype(x_seq.dtype), new_buf
+
+
+def rglru_seq(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array,
+              h0=None) -> tuple[jax.Array, jax.Array]:
+    """Training/prefill path. x: [B, S, d] -> (out [B, S, d], h_last)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["wx"])
+    yb = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wy"]))
+    xc, _ = _conv_causal(p, xb)
+    a, gx = _gates(p, xc.astype(jnp.float32))
+    if h0 is None:
+        h0 = jnp.zeros(gx.shape[:1] + gx.shape[2:], jnp.float32)
+
+    # h_t = a_t h_{t-1} + gx_t  ==  associative scan on (a, gx) pairs.
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    h = a_s * h0[:, None] + b_s                            # [B, S, W]
+    out = jnp.einsum("bsw,wd->bsd", (h.astype(x.dtype) * yb), p["wo"])
+    return out, h[:, -1]
+
+
+def rglru_step(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array,
+               state: dict[str, jax.Array]) -> tuple[jax.Array, dict]:
+    """Decode step. x: [B, d]; state: {h: [B,W], conv: [B,cw-1,W]}."""
+    xb = jnp.einsum("bd,dw->bw", x, p["wx"])
+    yb = jax.nn.gelu(jnp.einsum("bd,dw->bw", x, p["wy"]))
+    xc, new_conv = _conv_causal(p, xb[:, None], state["conv"])
+    xc = xc[:, 0]
+    a, gx = _gates(p, xc.astype(jnp.float32))
+    h = a * state["h"] + gx
+    out = jnp.einsum("bw,wd->bd", (h.astype(x.dtype) * yb), p["wo"])
+    return out, {"h": h, "conv": new_conv}
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    w = cfg.lru_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.bfloat16)}
+
+
+def rglru_seq_ref(cfg: ModelConfig, p, x):
+    """Oracle: plain lax.scan over time (no associative scan)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["wx"])
+    yb = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wy"]))
+    xc, _ = _conv_causal(p, xb)
+    a, gx = _gates(p, xc.astype(jnp.float32))
+
+    def step(h, xs):
+        a_t, g_t = xs
+        h = a_t * h + g_t
+        return h, h
+
+    h0 = jnp.zeros((x.shape[0], cfg.lru_width), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), gx.transpose(1, 0, 2)))
+    h = hs.transpose(1, 0, 2)
+    return jnp.einsum("bsw,wd->bsd", (h.astype(x.dtype) * yb), p["wo"])

@@ -1,0 +1,445 @@
+"""Model assembly: all 10 assigned architectures from one block vocabulary.
+
+A model is a stack of blocks drawn from {full/global attention, sliding-window
+attention, RG-LRU, mLSTM, sLSTM}, optionally MoE FFNs, optionally an encoder
+stack with cross-attention (seamless), optionally embedding-stub inputs
+(internvl2 patches / seamless audio frames).
+
+Layers are **scanned by pattern period**: parameters for position *i* of the
+period are stacked with a leading ``n_periods`` dim, so HLO size is flat in
+depth and remat policy applies per period.  Pattern remainders (e.g.
+recurrentgemma's 38 = 12x(r,r,a) + (r,r)) live in an unscanned tail.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ATTENTION_KINDS, FULL_ATTN, GLOBAL_ATTN, MLSTM,
+                          ModelConfig, RGLRU, SLSTM, SWA_ATTN)
+from repro.models import attention, layers, moe, recurrent, xlstm
+from repro.models.layers import Param
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def ffn_specs(cfg: ModelConfig) -> dict[str, Param]:
+    d, ff = cfg.d_model, cfg.d_ff
+    spec = {"wi": Param((d, ff), (None, "ff")),
+            "wo": Param((ff, d), ("ff", None))}
+    if cfg.glu:
+        spec["wg"] = Param((d, ff), (None, "ff"))
+    return spec
+
+
+def block_specs(cfg: ModelConfig, kind: str,
+                with_cross: bool = False) -> dict[str, Any]:
+    d = cfg.d_model
+    spec: dict[str, Any] = {"norm1": layers.norm_spec(d)}
+    if kind in ATTENTION_KINDS:
+        spec["attn"] = attention.attn_specs(cfg)
+    elif kind == RGLRU:
+        spec["rglru"] = recurrent.rglru_specs(cfg)
+    elif kind == MLSTM:
+        spec["mlstm"] = xlstm.mlstm_specs(cfg)
+    elif kind == SLSTM:
+        spec["slstm"] = xlstm.slstm_specs(cfg)
+    else:
+        raise ValueError(kind)
+    if kind in ATTENTION_KINDS or kind == RGLRU:
+        spec["norm2"] = layers.norm_spec(d)
+        if cfg.is_moe:
+            spec["moe"] = moe.moe_specs(cfg)
+        elif cfg.d_ff > 0:
+            spec["ffn"] = ffn_specs(cfg)
+    if with_cross:
+        spec["norm_cross"] = layers.norm_spec(d)
+        spec["cross"] = attention.cross_attn_specs(cfg)
+    return spec
+
+
+def _pattern_split(cfg: ModelConfig) -> tuple[tuple[str, ...], int,
+                                              tuple[str, ...]]:
+    period = tuple(cfg.layer_pattern)
+    n_periods = cfg.num_layers // len(period)
+    tail = cfg.layers[n_periods * len(period):]
+    return period, n_periods, tail
+
+
+def model_specs(cfg: ModelConfig) -> dict[str, Any]:
+    d = cfg.d_model
+    period, n_periods, tail = _pattern_split(cfg)
+    spec: dict[str, Any] = {
+        "embed": layers.embed_spec(cfg.padded_vocab, d),
+        "out_norm": layers.norm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = Param((cfg.padded_vocab, d), ("vocab", None))
+    if n_periods > 0:
+        spec["periods"] = {
+            f"pos{i}": layers.stack_specs(
+                block_specs(cfg, kind, cfg.cross_attention), n_periods)
+            for i, kind in enumerate(period)}
+    if tail:
+        spec["tail"] = {
+            f"layer{i}": block_specs(cfg, kind, cfg.cross_attention)
+            for i, kind in enumerate(tail)}
+    if cfg.num_encoder_layers > 0:
+        spec["encoder"] = {
+            "blocks": layers.stack_specs(
+                block_specs(cfg, FULL_ATTN), cfg.num_encoder_layers),
+            "out_norm": layers.norm_spec(d),
+        }
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Any:
+    dtype = jnp.dtype(cfg.dtype)
+    return layers.init_tree(model_specs(cfg), key, dtype)
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return layers.shapes_tree(model_specs(cfg), jnp.dtype(cfg.dtype))
+
+
+def params_logical_axes(cfg: ModelConfig) -> Any:
+    return layers.axes_tree(model_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+
+def apply_ffn(cfg: ModelConfig, bp: dict[str, Any], x: jax.Array,
+              aux: dict) -> jax.Array:
+    h = layers.apply_norm(cfg.norm, x, bp["norm2"])
+    if cfg.is_moe:
+        out, metrics = moe.moe_ffn(cfg, bp["moe"], h)
+        aux["moe_aux_loss"] = aux.get("moe_aux_loss", 0.0) + metrics[
+            "moe_aux_loss"]
+    elif cfg.d_ff > 0:
+        act = layers.act_fn(cfg.act)
+        up = jnp.einsum("bsd,df->bsf", h, bp["ffn"]["wi"])
+        if cfg.glu:
+            up = act(jnp.einsum("bsd,df->bsf", h, bp["ffn"]["wg"])) * up
+        else:
+            up = act(up)
+        out = jnp.einsum("bsf,fd->bsd", up, bp["ffn"]["wo"])
+    else:
+        return x
+    return x + out
+
+
+def apply_block(cfg: ModelConfig, kind: str, bp: dict[str, Any],
+                x: jax.Array, aux: dict, *, causal: bool = True,
+                enc_out: Optional[jax.Array] = None,
+                attn_impl: str = "xla") -> jax.Array:
+    h = layers.apply_norm(cfg.norm, x, bp["norm1"])
+    if kind in ATTENTION_KINDS:
+        q, k, v = attention.qkv(cfg, bp["attn"], h)
+        att = attention.attend_train(cfg, kind, q, k, v, causal=causal,
+                                     impl=attn_impl)
+        x = x + attention.project_out(cfg, bp["attn"], att)
+        if "cross" in bp and enc_out is not None:
+            hc = layers.apply_norm(cfg.norm, x, bp["norm_cross"])
+            x = x + attention.cross_attend(cfg, bp["cross"], hc, enc_out)
+        x = apply_ffn(cfg, bp, x, aux)
+    elif kind == RGLRU:
+        out, _ = recurrent.rglru_seq(cfg, bp["rglru"], h)
+        x = x + out
+        x = apply_ffn(cfg, bp, x, aux)
+    elif kind == MLSTM:
+        x = x + xlstm.mlstm_seq(cfg, bp["mlstm"], h)
+    elif kind == SLSTM:
+        x = x + xlstm.slstm_seq(cfg, bp["slstm"], h)
+    else:
+        raise ValueError(kind)
+    return x
+
+
+def _embed_inputs(cfg: ModelConfig, params: Any, batch: dict) -> jax.Array:
+    if "embeds" in batch and batch["embeds"] is not None:
+        return batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    x = layers.embed(batch["tokens"], params["embed"])
+    return (x * jnp.asarray(cfg.d_model ** 0.5, x.dtype))
+
+
+def encoder_forward(cfg: ModelConfig, params: Any,
+                    enc_embeds: jax.Array, remat: str = "block") -> jax.Array:
+    """Bidirectional encoder over stub frame/patch embeddings."""
+    x = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    aux: dict = {}
+
+    def body(carry, bp):
+        return apply_block(cfg, FULL_ATTN, bp, carry, aux,
+                           causal=False), None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return layers.apply_norm(cfg.norm, x, params["encoder"]["out_norm"])
+
+
+def forward(cfg: ModelConfig, params: Any, batch: dict,
+            remat: str = "block",
+            attn_impl: str = "xla") -> tuple[jax.Array, dict]:
+    """-> (logits [B, S, V] fp32, aux metrics)."""
+    period, n_periods, tail = _pattern_split(cfg)
+    x = _embed_inputs(cfg, params, batch)
+    enc_out = None
+    if cfg.num_encoder_layers > 0:
+        enc_out = encoder_forward(cfg, params, batch["enc_embeds"], remat)
+    aux: dict = {}
+
+    if n_periods > 0:
+        def body(carry, period_params):
+            h, aux_moe = carry
+            a: dict = {}
+            for i, kind in enumerate(period):
+                h = apply_block(cfg, kind, period_params[f"pos{i}"], h, a,
+                                enc_out=enc_out, attn_impl=attn_impl)
+            aux_moe = aux_moe + a.get("moe_aux_loss", 0.0)
+            return (h, aux_moe), None
+
+        if remat != "none":
+            body = jax.checkpoint(body)
+        (x, aux_moe), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["periods"])
+        if cfg.is_moe:
+            aux["moe_aux_loss"] = aux_moe
+    for i, kind in enumerate(tail):
+        x = apply_block(cfg, kind, params["tail"][f"layer{i}"], x, aux,
+                        enc_out=enc_out, attn_impl=attn_impl)
+
+    x = layers.apply_norm(cfg.norm, x, params["out_norm"])
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(x, head, cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params: Any, batch: dict,
+            remat: str = "block") -> tuple[jax.Array, dict]:
+    logits, aux = forward(cfg, params, batch, remat)
+    labels = batch["labels"]
+    valid = (labels >= 0)
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(nll * valid) / denom
+    metrics = {"loss": loss, "tokens": denom}
+    if "moe_aux_loss" in aux:
+        loss = loss + 0.01 * aux["moe_aux_loss"]
+        metrics["moe_aux_loss"] = aux["moe_aux_loss"]
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def block_state_init(cfg: ModelConfig, kind: str, batch: int,
+                     cache_ops) -> Any:
+    if kind in ATTENTION_KINDS:
+        window = cfg.window_size if kind == SWA_ATTN else 0
+        return cache_ops.init_layer(cfg, batch, window=window)
+    if kind == RGLRU:
+        return recurrent.rglru_init_state(cfg, batch)
+    if kind == MLSTM:
+        return xlstm.mlstm_init_state(cfg, batch)
+    if kind == SLSTM:
+        return xlstm.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_ops,
+                      enc_out: Optional[jax.Array] = None,
+                      stacked: bool = True) -> dict:
+    """Whole-model decode state.
+
+    stacked=True: period states stack on a leading dim and the step scans
+    them (small HLO).  stacked=False: one pytree per period under
+    ``period_list`` and the step unrolls — no per-layer slice/copy of the
+    large KV pools (the memory-term win for bridge decode at long context).
+    """
+    period, n_periods, tail = _pattern_split(cfg)
+    state: dict[str, Any] = {"lengths": jnp.zeros((batch,), jnp.int32)}
+    if n_periods > 0 and not stacked:
+        state["period_list"] = [
+            {f"pos{i}": block_state_init(cfg, k, batch, cache_ops)
+             for i, k in enumerate(period)}
+            for _ in range(n_periods)]
+    elif n_periods > 0:
+        def stack(kind):
+            one = block_state_init(cfg, kind, batch, cache_ops)
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape), one)
+        state["periods"] = {f"pos{i}": stack(k)
+                            for i, k in enumerate(period)}
+    if tail:
+        state["tail"] = {f"layer{i}": block_state_init(cfg, k, batch,
+                                                       cache_ops)
+                         for i, k in enumerate(tail)}
+    if cfg.cross_attention and enc_out is not None:
+        state["enc_out"] = enc_out
+    shared = cache_ops.init_shared(cfg, batch)
+    if shared is not None:
+        state["kv_shared"] = shared
+    return state
+
+
+def apply_block_step(cfg: ModelConfig, kind: str, bp: dict, x: jax.Array,
+                     st: Any, lengths: jax.Array, cache_ops,
+                     enc_out: Optional[jax.Array],
+                     shared: Any = None) -> tuple[jax.Array, Any]:
+    h = layers.apply_norm(cfg.norm, x, bp["norm1"])
+    aux: dict = {}
+    if kind in ATTENTION_KINDS:
+        q, k_new, v_new = attention.qkv_step(cfg, bp["attn"], h, lengths)
+        window = cfg.window_size if kind == SWA_ATTN else 0
+        att, st = cache_ops.append_and_attend(cfg, st, shared, lengths, q,
+                                              k_new, v_new, window=window)
+        x = x + attention.project_out_step(cfg, bp["attn"], att)
+        if "cross" in bp and enc_out is not None:
+            hc = layers.apply_norm(cfg.norm, x, bp["norm_cross"])
+            ek, ev = attention.encode_cross_kv(cfg, bp["cross"], enc_out)
+            x = x + attention.cross_attend_step(cfg, bp["cross"], hc, ek, ev)
+        x2 = apply_ffn_step(cfg, bp, x, aux)
+        return x2, st
+    if kind == RGLRU:
+        out, st = recurrent.rglru_step(cfg, bp["rglru"], h, st)
+        x = x + out
+        return apply_ffn_step(cfg, bp, x, aux), st
+    if kind == MLSTM:
+        out, st = xlstm.mlstm_step(cfg, bp["mlstm"], h, st)
+        return x + out, st
+    if kind == SLSTM:
+        out, st = xlstm.slstm_step(cfg, bp["slstm"], h, st)
+        return x + out, st
+    raise ValueError(kind)
+
+
+def apply_ffn_step(cfg: ModelConfig, bp: dict, x: jax.Array,
+                   aux: dict) -> jax.Array:
+    if not (cfg.is_moe or cfg.d_ff > 0):
+        return x
+    x3 = apply_ffn(cfg, bp, x[:, None, :], aux)
+    return x3[:, 0, :]
+
+
+def decode_step(cfg: ModelConfig, params: Any, state: dict,
+                tokens: jax.Array, cache_ops) -> tuple[jax.Array, dict]:
+    """One decode step. tokens: [B] -> (logits [B, V], new state)."""
+    period, n_periods, tail = _pattern_split(cfg)
+    x = layers.embed(tokens, params["embed"])
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    lengths = state["lengths"]
+    enc_out = state.get("enc_out")
+    shared = state.get("kv_shared")
+    new_state: dict[str, Any] = dict(state)
+
+    if "period_list" in state:
+        # unrolled layout: per-period pytrees updated in place (no slicing)
+        new_list = []
+        for pi, ps in enumerate(state["period_list"]):
+            pp = jax.tree.map(lambda a, pi=pi: a[pi], params["periods"])
+            new_ps = {}
+            for i, kind in enumerate(period):
+                x, new_ps[f"pos{i}"] = apply_block_step(
+                    cfg, kind, pp[f"pos{i}"], x, ps[f"pos{i}"], lengths,
+                    cache_ops, enc_out, shared)
+            new_list.append(new_ps)
+        new_state["period_list"] = new_list
+    elif n_periods > 0:
+        def body(carry, xs):
+            h = carry
+            pp, ps = xs
+            new_ps = {}
+            for i, kind in enumerate(period):
+                h, new_ps[f"pos{i}"] = apply_block_step(
+                    cfg, kind, pp[f"pos{i}"], h, ps[f"pos{i}"], lengths,
+                    cache_ops, enc_out, shared)
+            return h, new_ps
+
+        x, new_periods = jax.lax.scan(
+            body, x, (params["periods"], state["periods"]))
+        new_state["periods"] = new_periods
+    if tail:
+        new_tail = {}
+        for i, kind in enumerate(tail):
+            x, new_tail[f"layer{i}"] = apply_block_step(
+                cfg, kind, params["tail"][f"layer{i}"], x,
+                state["tail"][f"layer{i}"], lengths, cache_ops, enc_out,
+                shared)
+        new_state["tail"] = new_tail
+
+    x = layers.apply_norm(cfg.norm, x, params["out_norm"])
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = layers.unembed(x, head, cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]
+    new_state["lengths"] = lengths + 1
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Dense (local) KV cache ops — the no-bridge baseline
+# ---------------------------------------------------------------------------
+
+class DenseCacheOps:
+    """Per-layer state: {k, v: [B, S_max, kv, hd]} on the batch shard.
+
+    SWA layers allocate only ``window`` slots (ring buffer semantics come
+    from masking by absolute position; the dense baseline keeps it simple
+    with a full-size buffer unless window < max_len).
+    """
+
+    def __init__(self, max_len: int, dtype=jnp.bfloat16):
+        self.max_len = max_len
+        self.dtype = dtype
+
+    def init_shared(self, cfg: ModelConfig, batch: int):
+        return None
+
+    def init_layer(self, cfg: ModelConfig, batch: int, window: int = 0):
+        shape = (batch, self.max_len, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, self.dtype),
+                "v": jnp.zeros(shape, self.dtype)}
+
+    def append_and_attend(self, cfg, st, shared, lengths, q, k_new, v_new, *,
+                          window: int = 0):
+        b = q.shape[0]
+        idx = jnp.arange(b)
+        k = st["k"].at[idx, lengths].set(k_new.astype(self.dtype))
+        v = st["v"].at[idx, lengths].set(v_new.astype(self.dtype))
+        visible = lengths + 1
+        if window > 0:
+            # sliding window: mask out positions older than window
+            lo = jnp.maximum(visible - window, 0)
+            pos = jnp.arange(self.max_len)[None, :]
+            mask = (pos >= lo[:, None]) & (pos < visible[:, None])
+            att = _masked_decode_attention(q, k, v, mask)
+        else:
+            from repro.core.kvbridge import decode_attention_ref
+            att = decode_attention_ref(q, k, v, visible)
+        return att, {"k": k, "v": v}
+
+
+def _masked_decode_attention(q, k, v, mask):
+    b, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)

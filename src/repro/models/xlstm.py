@@ -1,0 +1,220 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Faithful to arXiv:2405.04517 semantics with exponential gating + stabilizer
+state.  Both blocks run as ``lax.scan`` over time (exact recurrent form; the
+sLSTM is inherently sequential because h_{t-1} feeds its gates, and the
+mLSTM uses the same body so train == decode bit-for-bit).  Decode exposes a
+single-token step with O(1) state — this is what makes xlstm-125m a
+``long_500k``-capable architecture.
+
+State sizes per layer:
+  mLSTM: C [B, H, hd, hd], n [B, H, hd], m [B, H]   (+ conv buffer)
+  sLSTM: c, n, h [B, d], m [B, d]
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers
+from repro.models.layers import Param
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    heads = cfg.num_heads
+    hd = inner // heads
+    return inner, heads, hd
+
+
+def mlstm_specs(cfg: ModelConfig) -> dict[str, Param]:
+    d = cfg.d_model
+    inner, h, hd = _mlstm_dims(cfg)
+    return {
+        "up_x": Param((d, inner), (None, "ff")),
+        "up_z": Param((d, inner), (None, "ff")),
+        "conv_w": Param((cfg.conv_width, inner), (None, "ff"), scale=0.5),
+        "conv_b": Param((inner,), ("ff",), init="zeros"),
+        "wq": Param((inner, inner), ("ff", None)),
+        "wk": Param((inner, inner), ("ff", None)),
+        "wv": Param((inner, inner), ("ff", None)),
+        "wi": Param((inner, h), ("ff", None)),
+        "wf": Param((inner, h), ("ff", None)),
+        "wo_gate": Param((inner, inner), ("ff", None)),
+        "down": Param((inner, d), ("ff", None)),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    inner, h, hd = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, inner), jnp.bfloat16),
+    }
+
+
+def _mlstm_cell(q, k, v, i_raw, f_raw, state):
+    """One stabilized mLSTM cell step.  q,k,v: [B,H,hd]; gates [B,H]."""
+    hd = q.shape[-1]
+    m_prev = state["m"]
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m_prev, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(log_f + m_prev - m_new)
+    k_s = k / (hd ** 0.5)
+    c_new = (f_g[..., None, None] * state["C"]
+             + i_g[..., None, None] * v[..., :, None] * k_s[..., None, :])
+    n_new = f_g[..., None] * state["n"] + i_g[..., None] * k_s
+    num = jnp.einsum("bhij,bhj->bhi", c_new, q)
+    den = jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q))
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    h_t = num / den[..., None]
+    return h_t, {"C": c_new, "n": n_new, "m": m_new}
+
+
+def _mlstm_qkvif(cfg, p, x_in, conv_buf):
+    """Projections shared by seq and step paths. x_in: [B, S, inner]."""
+    xc, new_buf = _conv_step_or_seq(p, x_in, conv_buf)
+    xc = jax.nn.silu(xc)
+    inner, h, hd = _mlstm_dims(cfg)
+    b, s = x_in.shape[:2]
+    q = jnp.einsum("bsi,ij->bsj", xc, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsi,ij->bsj", xc, p["wk"]).reshape(b, s, h, hd)
+    v = jnp.einsum("bsi,ij->bsj", x_in, p["wv"]).reshape(b, s, h, hd)
+    i_raw = jnp.einsum("bsi,ih->bsh", x_in, p["wi"]).astype(jnp.float32)
+    f_raw = jnp.einsum("bsi,ih->bsh", x_in, p["wf"]).astype(jnp.float32)
+    return q.astype(jnp.float32), k.astype(jnp.float32), \
+        v.astype(jnp.float32), i_raw, f_raw, new_buf
+
+
+def _conv_step_or_seq(p, x, buf):
+    cw = p["conv_w"].shape[0]
+    if buf is None:
+        buf = jnp.zeros(x.shape[:1] + (cw - 1,) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([buf.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * p["conv_w"][i]
+              for i in range(cw)) + p["conv_b"]
+    return out.astype(x.dtype), xp[:, -(cw - 1):] if cw > 1 else buf
+
+
+def mlstm_seq(cfg: ModelConfig, p: dict[str, jax.Array],
+              x: jax.Array) -> jax.Array:
+    """Training path. x: [B, S, d] -> [B, S, d] (state starts at zero)."""
+    x_in = jnp.einsum("bsd,di->bsi", x, p["up_x"])
+    z = jnp.einsum("bsd,di->bsi", x, p["up_z"])
+    q, k, v, i_raw, f_raw, _ = _mlstm_qkvif(cfg, p, x_in, None)
+    state = mlstm_init_state(cfg, x.shape[0])
+    state.pop("conv")
+
+    def step(st, xs):
+        q_t, k_t, v_t, i_t, f_t = xs
+        h_t, st = _mlstm_cell(q_t, k_t, v_t, i_t, f_t, st)
+        return st, h_t
+
+    xs = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0),
+                      (q, k, v, i_raw, f_raw))
+    _, hs = jax.lax.scan(step, state, xs)
+    inner, h, hd = _mlstm_dims(cfg)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(x.shape[0], x.shape[1], inner)
+    out = hs.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", out, p["down"])
+
+
+def mlstm_step(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array,
+               state: dict[str, jax.Array]) -> tuple[jax.Array, dict]:
+    """Decode step. x: [B, d]."""
+    x_in = jnp.einsum("bd,di->bi", x, p["up_x"])[:, None]
+    z = jnp.einsum("bd,di->bi", x, p["up_z"])
+    q, k, v, i_raw, f_raw, new_buf = _mlstm_qkvif(
+        cfg, p, x_in, state["conv"])
+    cell = {k2: state[k2] for k2 in ("C", "n", "m")}
+    h_t, cell = _mlstm_cell(q[:, 0], k[:, 0], v[:, 0],
+                            i_raw[:, 0], f_raw[:, 0], cell)
+    inner, h, hd = _mlstm_dims(cfg)
+    out = h_t.reshape(x.shape[0], inner).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", out, p["down"])
+    return out, {**cell, "conv": new_buf}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _round64(n: int) -> int:
+    return ((n + 63) // 64) * 64
+
+
+def slstm_specs(cfg: ModelConfig) -> dict[str, Param]:
+    d = cfg.d_model
+    ff = _round64(int(d * cfg.slstm_proj_factor))  # shardable over TP=16
+    spec = {}
+    for g in ("i", "f", "z", "o"):
+        spec[f"w_{g}"] = Param((d, d), (None, "ff"))
+        spec[f"r_{g}"] = Param((d, d), (None, "ff"), scale=0.5)
+        spec[f"b_{g}"] = Param((d,), ("ff",), init="zeros")
+    spec["ffn_up"] = Param((d, ff), (None, "ff"))
+    spec["ffn_down"] = Param((ff, d), ("ff", None))
+    spec["ffn_norm"] = layers.norm_spec(d)
+    return spec
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e30,
+                                                  jnp.float32)}
+
+
+def _slstm_cell(p, x_t, st):
+    """x_t: [B, d] (fp32)."""
+    h_prev = st["h"]
+
+    def gate(g):
+        return (jnp.einsum("bd,de->be", x_t, p[f"w_{g}"].astype(jnp.float32))
+                + jnp.einsum("bd,de->be", h_prev,
+                             p[f"r_{g}"].astype(jnp.float32))
+                + p[f"b_{g}"].astype(jnp.float32))
+
+    i_raw, f_raw, z_raw, o_raw = gate("i"), gate("f"), gate("z"), gate("o")
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + st["m"], i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(log_f + st["m"] - m_new)
+    c_new = f_g * st["c"] + i_g * jnp.tanh(z_raw)
+    n_new = jnp.maximum(f_g * st["n"] + i_g, 1e-6)
+    h_new = jax.nn.sigmoid(o_raw) * c_new / n_new
+    return h_new, {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_seq(cfg: ModelConfig, p: dict[str, jax.Array],
+              x: jax.Array) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d]."""
+    xf = x.astype(jnp.float32)
+
+    def step(st, x_t):
+        h, st = _slstm_cell(p, x_t, st)
+        return st, h
+
+    _, hs = jax.lax.scan(step, slstm_init_state(cfg, x.shape[0]),
+                         jnp.moveaxis(xf, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = layers.rmsnorm(h, p["ffn_norm"])
+    up = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, p["ffn_up"]))
+    return jnp.einsum("bsf,fd->bsd", up, p["ffn_down"])
+
+
+def slstm_step(cfg: ModelConfig, p: dict[str, jax.Array], x: jax.Array,
+               state: dict[str, jax.Array]) -> tuple[jax.Array, dict]:
+    h, state = _slstm_cell(p, x.astype(jnp.float32), state)
+    h = layers.rmsnorm(h.astype(x.dtype), p["ffn_norm"])
+    up = jax.nn.gelu(jnp.einsum("bd,df->bf", h, p["ffn_up"]))
+    return jnp.einsum("bf,fd->bd", up, p["ffn_down"]), state

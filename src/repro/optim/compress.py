@@ -1,0 +1,104 @@
+"""Gradient compression: int8 ring all-reduce with error feedback.
+
+A distributed-optimization trick for slow/oversubscribed interconnects: DP
+gradients all-reduce in int8 (4x fewer bytes on the wire) with per-device
+error-feedback accumulators so quantization error is re-injected into the
+next step instead of lost (1-bit Adam / EF-SGD lineage).
+
+The reduce itself is a manual ring over the DP axis built from the same
+static-route ``ppermute`` epochs as the bridge (a gradient bucket is just
+another page stream through the circuit network):
+
+    reduce-scatter: N-1 epochs, each device accumulates its stripe in fp32,
+                    forwarding int8-quantized partials;
+    all-gather:     N-1 epochs of the finished int8 stripes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_ring_allreduce(x: jax.Array, axis: str,
+                              num_nodes: int) -> jax.Array:
+    """Mean-all-reduce of ``x`` (flat [L] fp32) over ``axis`` in int8 wire
+    format.  Must run inside shard_map manual over ``axis``."""
+    n = num_nodes
+    if n == 1:
+        return x
+    pad = (-x.shape[0]) % n
+    xf = jnp.pad(x, (0, pad)).reshape(n, -1)
+
+    my = jax.lax.axis_index(axis)
+    fwd = [(j, (j + 1) % n) for j in range(n)]
+    # Reduce-scatter: at epoch e, device d forwards its running partial of
+    # stripe (d - e - 1) to d+1, which accumulates it.  After N-1 epochs
+    # device d holds the fully-reduced stripe (d + 1) % n.
+    partial = xf
+    for e in range(n - 1):
+        # step e: node d forwards its running partial of stripe (d - e);
+        # the receiver (d+1) accumulates it into that same stripe, which it
+        # will forward at step e+1.
+        send_idx = (my - e) % n
+        stripe = jax.lax.dynamic_index_in_dim(partial, send_idx, 0,
+                                              keepdims=False)
+        q, s = quantize_int8(stripe)
+        q_in = jax.lax.ppermute(q, axis, perm=fwd)
+        s_in = jax.lax.ppermute(s, axis, perm=fwd)
+        recv_idx = (my - e - 1) % n
+        partial = partial.at[recv_idx].add(dequantize_int8(q_in, s_in))
+    own_idx = (my + 1) % n
+    own = jax.lax.dynamic_index_in_dim(partial, own_idx, 0,
+                                       keepdims=False) / n
+
+    # All-gather the finished stripes, still int8 on the wire: each node
+    # contributes its stripe at its slot (zeros elsewhere) and an int8 psum
+    # reconstructs the full vector.  psum also discharges the VMA type to
+    # invariant, so every DP replica ends bitwise identical (parameter
+    # consistency).  Wire cost: RS 1x int8 + psum 2x int8 = 3/8 of an fp32
+    # all-reduce.
+    q, s = quantize_int8(own)
+    onehot = (jnp.arange(n) == own_idx)
+    q_full = jnp.where(onehot[:, None], q[None, :],
+                       jnp.zeros_like(xf, dtype=jnp.int8))
+    s_full = jnp.where(onehot, s, 0.0)
+    q_full = jax.lax.psum(q_full, axis)
+    s_full = jax.lax.psum(s_full, axis)
+    out = q_full.astype(jnp.float32) * s_full[:, None]
+    flat = out.reshape(-1)
+    return flat[: x.shape[0]]
+
+
+class ErrorFeedback:
+    """Per-step residual re-injection: g' = g + e;  e = g' - decompress(...)."""
+
+    @staticmethod
+    def init(params: Any) -> Any:
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    @staticmethod
+    def apply(grads: Any, residual: Any) -> tuple[Any, Any]:
+        """-> (grads + residual, fn(compressed) -> new residual via closure)"""
+        boosted = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+        return boosted, residual
+
+    @staticmethod
+    def update(boosted: Any, transmitted: Any) -> Any:
+        return jax.tree.map(lambda b, t: b - t.astype(jnp.float32),
+                            boosted, transmitted)

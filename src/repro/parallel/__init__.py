@@ -1,0 +1,7 @@
+from repro.parallel.pipeline import pipeline_apply  # noqa: F401
+from repro.parallel.sharding import (  # noqa: F401
+    ShardingRules,
+    logical_to_physical,
+    make_rules,
+    shard_constraint,
+)

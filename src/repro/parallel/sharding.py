@@ -1,0 +1,113 @@
+"""Logical-axis sharding rules (MaxText-style) for the repro framework.
+
+Model code annotates tensors with *logical* axis names ("batch", "seq",
+"d_model", "heads", "kv_heads", "ff", "vocab", "experts", "layers", "pages",
+...).  :func:`make_rules` binds those names to mesh axes according to the
+:class:`repro.config.ShardingConfig`, and :func:`shard_constraint` applies a
+``with_sharding_constraint`` only for axes that exist on the current mesh —
+the same model code runs on a single CPU device, an 8-device test mesh, a
+(16,16) pod and a (2,16,16) multi-pod mesh without edits.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ShardingConfig
+
+Rule = Optional[tuple[str, ...]]  # mesh axes for one logical axis (None = replicate)
+
+
+class ShardingRules(dict):
+    """Mapping: logical axis name -> tuple of mesh axis names (or None)."""
+
+    def spec(self, *logical_axes: Optional[str]) -> P:
+        parts = []
+        for ax in logical_axes:
+            if ax is None:
+                parts.append(None)
+            else:
+                axes = self.get(ax)
+                parts.append(axes if axes else None)
+        return P(*parts)
+
+
+def make_rules(cfg: ShardingConfig, mesh: Mesh, *, seq_len: int = 0,
+               global_batch: int = 0, head_dim: int = 0,
+               kv_heads: int = 0, num_heads: int = 0) -> ShardingRules:
+    """Bind logical axes to the axes that actually exist on ``mesh``.
+
+    Divisibility-aware: batch axes are dropped when the global batch does
+    not divide by them (decode with tiny batches); the KV-cache inner dim
+    binds head_dim or kv_heads to the model axis only when divisible.
+    """
+    present = set(mesh.axis_names)
+
+    def only(axes: Sequence[str]) -> Optional[tuple[str, ...]]:
+        kept = tuple(a for a in axes if a in present and mesh.shape[a] > 1)
+        return kept or None
+
+    batch = only(cfg.batch_axes)
+    if batch and global_batch:
+        n = 1
+        for a in batch:
+            n *= mesh.shape[a]
+        if global_batch % n != 0:
+            # try dropping outer axes until divisible
+            while batch and global_batch % n != 0:
+                n //= mesh.shape[batch[0]]
+                batch = batch[1:] or None
+                if batch is None:
+                    break
+    model = only((cfg.model_axis,))
+    model_size = mesh.shape[cfg.model_axis] if model else 1
+    shard_seq = seq_len >= cfg.shard_seq_threshold
+    rules = ShardingRules(
+        batch=batch,
+        seq=only((cfg.seq_axis,)) if shard_seq else None,
+        one=None,
+        d_model=None,
+        heads=model,
+        kv_heads=model if (kv_heads and kv_heads % model_size == 0) else None,
+        head_dim=model if (head_dim and head_dim % model_size == 0) else None,
+        state_heads=model if (num_heads and num_heads % model_size == 0)
+        else None,
+        ff=model,
+        vocab=model,
+        experts=only((cfg.expert_axis,)),
+        expert_cap=None,
+        layers=None,
+        # bridge / pooled memory axes
+        pages=only((cfg.kv_pages_axis,)),
+        kv_seq=only((cfg.kv_pages_axis,)),
+        zero=only((cfg.zero_axis,)) if cfg.enable_zero else None,
+    )
+    return rules
+
+
+def logical_to_physical(rules: ShardingRules, mesh: Mesh,
+                        *logical_axes: Optional[str]) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(*logical_axes))
+
+
+def shard_constraint(x: jax.Array, rules: ShardingRules,
+                     *logical_axes: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` via logical names; no-op off-mesh."""
+    spec = rules.spec(*logical_axes)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, TypeError):
+        # Outside a mesh context (plain CPU tests) constraints are identity.
+        return x
+
+
+def tree_shardings(rules: ShardingRules, mesh: Mesh, logical_tree):
+    """Map a pytree of logical-axis tuples to a pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda axes: logical_to_physical(rules, mesh, *axes),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, str) or a is None for a in x),
+    )

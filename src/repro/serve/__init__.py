@@ -1,0 +1,2 @@
+from repro.serve.cache_ops import BridgeCacheOps, RingCacheOps  # noqa: F401
+from repro.serve.step import build_serve_step, init_serve_state  # noqa: F401

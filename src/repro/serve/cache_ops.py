@@ -1,0 +1,152 @@
+"""KV-cache placement strategies for decode (the serve-side bridge client).
+
+Three implementations of the cache-ops protocol used by
+``transformer.decode_step``:
+
+* ``DenseCacheOps``  (in repro.models.transformer) — local dense baseline;
+* ``RingCacheOps``   — bounded ring buffer for pure-SWA models (window slots
+  only: what makes ``long_500k`` feasible for h2o-danube without a bridge);
+* ``BridgeCacheOps`` — disaggregated paged KV through the software-defined
+  bridge.  Global/full-attention layers page through the pool (``pull`` =
+  paper-faithful, ``push`` = compute-at-memory); SWA layers keep a local
+  ring buffer (their state is bounded, pooling it would waste circuit
+  bandwidth — placement is per layer kind, chosen by the control plane).
+
+The protocol:
+    init_shared(cfg, batch) -> pytree | None        (memport table etc.)
+    init_layer(cfg, batch, window=0) -> pytree
+    append_and_attend(cfg, st, shared, lengths, q, k_new, v_new, *, window)
+        -> (att_out [B, H, hd], new_st)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.config import ModelConfig
+from repro.core import kvbridge
+from repro.core.memport import MemPortTable
+
+
+class RingCacheOps:
+    """Bounded sliding-window cache: stores the last ``window`` tokens."""
+
+    def __init__(self, max_len: int, dtype=jnp.bfloat16):
+        self.max_len = max_len
+        self.dtype = dtype
+
+    def init_shared(self, cfg: ModelConfig, batch: int):
+        return None
+
+    def init_layer(self, cfg: ModelConfig, batch: int, window: int = 0):
+        size = min(window, self.max_len) if window > 0 else self.max_len
+        shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, self.dtype),
+                "v": jnp.zeros(shape, self.dtype),
+                "pos": jnp.full((batch, size), -1, jnp.int32)}
+
+    def append_and_attend(self, cfg, st, shared, lengths, q, k_new, v_new, *,
+                          window: int = 0):
+        b = q.shape[0]
+        size = st["k"].shape[1]
+        idx = jnp.arange(b)
+        slot = lengths % size
+        k = st["k"].at[idx, slot].set(k_new.astype(self.dtype))
+        v = st["v"].at[idx, slot].set(v_new.astype(self.dtype))
+        pos = st["pos"].at[idx, slot].set(lengths)
+        visible = lengths + 1
+        lo = jnp.maximum(visible - window, 0) if window > 0 else 0
+        mask = (pos >= (lo[:, None] if window > 0 else 0)) & (pos >= 0) \
+            & (pos < visible[:, None])
+        att = _masked_gqa_attention(q, k, v, mask)
+        return att, {"k": k, "v": v, "pos": pos}
+
+
+class BridgeCacheOps:
+    """Disaggregated paged KV through the bridge (pull or push mode)."""
+
+    def __init__(self, *, mode: str, max_len: int, page_tokens: int,
+                 mesh: Optional[Mesh], mem_axis: str = "data",
+                 budget: int = 8, edge_buffer: bool = True,
+                 dtype=jnp.bfloat16):
+        assert mode in ("pull", "push"), mode
+        self.mode = mode
+        self.max_len = max_len
+        self.page_tokens = page_tokens
+        self.max_pages = -(-max_len // page_tokens)
+        self.mesh = mesh
+        self.mem_axis = mem_axis
+        self.budget = budget
+        self.edge_buffer = edge_buffer
+        self.dtype = dtype
+
+    # -- shared state: the memport table (a runtime input, reprogrammable) ---
+    def num_nodes(self) -> int:
+        from repro.core import bridge
+        return bridge._mem_axis_size(self.mesh, self.mem_axis)
+
+    def slots_per_node(self, batch: int) -> int:
+        return -(-batch * self.max_pages // self.num_nodes())
+
+    def init_shared(self, cfg: ModelConfig, batch: int):
+        table = MemPortTable.striped(batch * self.max_pages,
+                                     self.num_nodes(),
+                                     self.slots_per_node(batch))
+        return {"table": table}
+
+    def init_layer(self, cfg: ModelConfig, batch: int, window: int = 0):
+        if window > 0:  # SWA layers stay local (bounded state)
+            ring = RingCacheOps(self.max_len, self.dtype)
+            return {"ring": ring.init_layer(cfg, batch, window)}
+        n = self.num_nodes()
+        num_slots = n * self.slots_per_node(batch)
+        shape = (num_slots, self.page_tokens, cfg.num_kv_heads, cfg.head_dim)
+        tail = (batch, self.page_tokens, cfg.num_kv_heads, cfg.head_dim)
+        return {"paged": kvbridge.PagedKVLayer(
+            k_pool=jnp.zeros(shape, self.dtype),
+            v_pool=jnp.zeros(shape, self.dtype),
+            tail_k=jnp.zeros(tail, self.dtype),
+            tail_v=jnp.zeros(tail, self.dtype))}
+
+    def append_and_attend(self, cfg, st, shared, lengths, q, k_new, v_new, *,
+                          window: int = 0):
+        if window > 0:
+            ring = RingCacheOps(self.max_len, self.dtype)
+            att, new_ring = ring.append_and_attend(
+                cfg, st["ring"], None, lengths, q, k_new, v_new,
+                window=window)
+            return att, {"ring": new_ring}
+        table = shared["table"]
+        layer = kvbridge.append(
+            st["paged"], table, lengths, k_new, v_new,
+            page_tokens=self.page_tokens, max_pages=self.max_pages,
+            mesh=self.mesh, mem_axis=self.mem_axis, budget=self.budget)
+        visible = lengths + 1
+        if self.mode == "pull":
+            att = kvbridge.decode_attention_pull(
+                q, layer, table, visible, page_tokens=self.page_tokens,
+                max_pages=self.max_pages, mesh=self.mesh,
+                mem_axis=self.mem_axis, budget=self.budget,
+                edge_buffer=self.edge_buffer)
+        else:
+            att = kvbridge.decode_attention_push(
+                q, layer, table, visible, page_tokens=self.page_tokens,
+                max_pages=self.max_pages, mesh=self.mesh,
+                mem_axis=self.mem_axis)
+        return att, {"paged": layer}
+
+
+def _masked_gqa_attention(q, k, v, mask):
+    b, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k.astype(jnp.float32)) * hd ** -0.5
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,123 @@
+"""Serve-step builder: one batched decode step with a chosen KV placement."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import RunConfig
+from repro.models import transformer
+from repro.parallel.sharding import ShardingRules
+from repro.serve.cache_ops import BridgeCacheOps, RingCacheOps
+
+
+def make_cache_ops(run: RunConfig, mesh: Optional[Mesh],
+                   max_len: int, page_tokens: int = 512,
+                   dtype=jnp.bfloat16):
+    kp = run.kv_placement
+    if kp == "local":
+        cfgm = run.model
+        if all(k != "full" and k != "global" for k in cfgm.layers) \
+                and cfgm.window_size > 0:
+            return RingCacheOps(max_len, dtype)
+        return transformer.DenseCacheOps(max_len, dtype)
+    if kp == "ring":
+        return RingCacheOps(max_len, dtype)
+    if kp in ("bridge_pull", "bridge_push"):
+        return BridgeCacheOps(
+            mode=kp.split("_")[1], max_len=max_len, page_tokens=page_tokens,
+            mesh=mesh, mem_axis=run.bridge.mem_axis,
+            budget=run.bridge.epoch_budget,
+            edge_buffer=run.bridge.edge_buffer, dtype=dtype)
+    raise ValueError(kp)
+
+
+def init_serve_state(run: RunConfig, batch: int, cache_ops,
+                     enc_out: Optional[jax.Array] = None) -> dict:
+    return transformer.init_decode_state(run.model, batch, cache_ops,
+                                         enc_out=enc_out,
+                                         stacked=run.scan_layers)
+
+
+def abstract_serve_state(run: RunConfig, batch: int, cache_ops,
+                         enc_len: int = 0) -> dict:
+    cfg = run.model
+    enc = (jax.ShapeDtypeStruct((batch, enc_len, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+           if cfg.cross_attention and enc_len else None)
+
+    def build(enc_arr):
+        return transformer.init_decode_state(cfg, batch, cache_ops,
+                                             enc_out=enc_arr,
+                                             stacked=run.scan_layers)
+    if enc is not None:
+        return jax.eval_shape(build, enc)
+    return jax.eval_shape(lambda: build(None))
+
+
+def build_serve_step(run: RunConfig, cache_ops):
+    cfg = run.model
+
+    def serve_step(params, state, tokens):
+        logits, state = transformer.decode_step(cfg, params, state, tokens,
+                                                cache_ops)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, state
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding of the decode state: mirror init_decode_state leaf-for-leaf.
+# ---------------------------------------------------------------------------
+
+def decode_state_shardings(run: RunConfig, mesh: Mesh, rules: ShardingRules,
+                           state_abstract: dict) -> Any:
+    """Derive NamedShardings for every decode-state leaf by name + rank.
+
+    Leaves under ``periods`` carry a leading stacked dim (replicated).
+    """
+
+    def logical_axes(path: str, nd: int) -> tuple:
+        stacked = "periods" in path
+        lead = (None,) if stacked else ()
+        body = nd - len(lead)
+
+        def fit(*axes):
+            axes = axes[:body] + (None,) * max(0, body - len(axes))
+            return lead + axes
+
+        if "k_pool" in path or "v_pool" in path:
+            # pool slots shard over the mem axis, page *contents* shard
+            # head_dim over the model axis (divisibility-gated in rules)
+            return fit("pages", None, None, "head_dim")
+        if "tail_k" in path or "tail_v" in path:
+            return fit("batch", None, None, "head_dim")
+        if "table" in path:
+            return (None,) * nd
+        if "lengths" in path:
+            return (None,) * nd
+        if "enc_out" in path:
+            return ("batch",) + (None,) * (nd - 1)
+        if "ring" in path and "pos" in path:
+            return fit("batch", None)
+        if path.endswith("['k']") or path.endswith("['v']"):
+            return fit("batch", None, None, "head_dim")
+        if "conv" in path:
+            return fit("batch", None, "ff")
+        if path.endswith("['C']"):
+            return fit("batch", "state_heads", None, None)
+        if path.endswith(("['n']", "['m']", "['h']", "['c']")):
+            if body == 3:
+                return fit("batch", "state_heads", None)
+            return fit("batch", None)
+        return (None,) * nd
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(state_abstract)
+    out = []
+    for path, leaf in leaves:
+        axes = logical_axes(jax.tree_util.keystr(path), len(leaf.shape))
+        out.append(NamedSharding(mesh, rules.spec(*axes)))
+    return jax.tree_util.tree_unflatten(treedef, out)

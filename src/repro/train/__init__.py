@@ -1,0 +1,6 @@
+from repro.train.step import (  # noqa: F401
+    TrainState,
+    build_train_step,
+    make_train_state,
+    train_state_shardings,
+)

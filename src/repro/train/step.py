@@ -1,0 +1,231 @@
+"""Train-step builder: loss + grads + AdamW under pjit/GSPMD.
+
+Distribution is declarative: parameters carry logical axes (repro.parallel),
+batch shards over the DP axes, and XLA inserts the gradient all-reduce.  Two
+opt-in distributed-optimization features restructure the step:
+
+* ``microbatch > 1``     — gradient accumulation via lax.scan (same HLO size);
+* ``compress_grads``     — the DP gradient reduction is taken away from GSPMD
+  and done manually as an int8 ring all-reduce with error feedback
+  (repro.optim.compress) inside a partial-manual shard_map over the DP axes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import RunConfig
+from repro.models import transformer
+from repro.optim import adamw
+from repro.optim.adamw import AdamWState
+from repro.parallel.sharding import ShardingRules, logical_to_physical
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+    ef_residual: Any = None      # error-feedback state (compression only)
+
+
+def make_train_state(run: RunConfig, key: jax.Array,
+                     compress: bool = False, dp_size: int = 1) -> TrainState:
+    params = transformer.init_params(run.model, key)
+    state = TrainState(params=params, opt=adamw.adamw_init(params),
+                       step=jnp.zeros((), jnp.int32),
+                       ef_residual=(jax.tree.map(
+                           lambda p: jnp.zeros((dp_size,) + p.shape,
+                                               jnp.float32), params)
+                           if compress else None))
+    return state
+
+
+def abstract_train_state(run: RunConfig, compress: bool = False,
+                         dp_size: int = 1) -> TrainState:
+    params = transformer.abstract_params(run.model)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)  # noqa: E731
+    ef = lambda p: jax.ShapeDtypeStruct((dp_size,) + p.shape,  # noqa: E731
+                                        jnp.float32)
+    return TrainState(
+        params=params,
+        opt=AdamWState(m=jax.tree.map(f32, params),
+                       v=jax.tree.map(f32, params),
+                       count=jax.ShapeDtypeStruct((), jnp.int32)),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        ef_residual=jax.tree.map(ef, params) if compress else None)
+
+
+def train_state_shardings(run: RunConfig, mesh: Mesh,
+                          rules: ShardingRules,
+                          compress: bool = False) -> TrainState:
+    axes = transformer.params_logical_axes(run.model)
+    to_shard = lambda a: logical_to_physical(rules, mesh, *a)  # noqa: E731
+    p_shard = jax.tree.map(to_shard, axes,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    scalar = NamedSharding(mesh, P())
+
+    # ZeRO: optimizer moments additionally shard over the zero axis (data)
+    # on the first unsharded, divisible dim of each leaf.  fp32 m+v for a
+    # 42B model drop from 21 GiB/chip (TP-only) to ~1.3 GiB/chip.
+    zero_axes = rules.get("zero")
+    if run.sharding.enable_zero and zero_axes:
+        zsize = 1
+        for a in zero_axes:
+            zsize *= mesh.shape[a]
+        shapes = transformer.abstract_params(run.model)
+        is_axes = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+            isinstance(i, str) or i is None for i in x)
+
+        def zero_shard(axes_leaf, shape_leaf):
+            spec = list(rules.spec(*axes_leaf))
+            spec += [None] * (len(shape_leaf.shape) - len(spec))
+            for i, (ax, dim) in enumerate(zip(spec, shape_leaf.shape)):
+                if ax is None and dim % zsize == 0:
+                    spec[i] = zero_axes
+                    break
+            return NamedSharding(mesh, P(*spec))
+
+        m_shard = jax.tree.map(zero_shard, axes, shapes, is_leaf=is_axes)
+    else:
+        m_shard = p_shard
+    dp_axis = [a for a in run.sharding.batch_axes
+               if a in mesh.axis_names][-1:] or [None]
+    ef_shard = jax.tree.map(
+        lambda a: NamedSharding(mesh, P(dp_axis[0])), axes,
+        is_leaf=lambda x: isinstance(x, tuple))
+    return TrainState(
+        params=p_shard,
+        opt=AdamWState(m=m_shard, v=m_shard, count=scalar),
+        step=scalar,
+        ef_residual=ef_shard if compress else None)
+
+
+def batch_shardings(run: RunConfig, mesh: Mesh, rules: ShardingRules) -> dict:
+    bspec = rules.spec("batch", None)
+    out = {"labels": NamedSharding(mesh, bspec)}
+    if run.model.embed_inputs:
+        out["embeds"] = NamedSharding(mesh, rules.spec("batch", "seq", None))
+    else:
+        out["tokens"] = NamedSharding(mesh, bspec)
+    if run.model.num_encoder_layers > 0:
+        out["enc_embeds"] = NamedSharding(mesh, rules.spec("batch", None,
+                                                           None))
+    return out
+
+
+def build_train_step(run: RunConfig, mesh: Optional[Mesh] = None,
+                     rules: Optional[ShardingRules] = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    cfg = run.model
+
+    def loss_for(params, batch):
+        return transformer.loss_fn(cfg, params, batch, run.remat)
+
+    def grads_of(params, batch):
+        if run.microbatch <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        # gradient accumulation over microbatches
+        def split(x):
+            b = x.shape[0]
+            mb = run.microbatch
+            return x.reshape(mb, b // mb, *x.shape[1:])
+        mb_batch = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                               acc, grads)
+            return acc, (loss, metrics)
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        gsum, (losses, metrics) = jax.lax.scan(body, zero, mb_batch)
+        grads = jax.tree.map(lambda g: g / run.microbatch, gsum)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return losses.mean(), metrics, grads
+
+    def plain_step(state: TrainState, batch: dict):
+        loss, metrics, grads = grads_of(state.params, batch)
+        new_params, new_opt, opt_metrics = adamw.adamw_update(
+            run.optim, grads, state.opt, state.params)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1,
+                          ef_residual=state.ef_residual), metrics
+
+    if not run.optim.compress_grads or mesh is None:
+        return plain_step
+
+    # ---- compressed-DP variant -------------------------------------------
+    from repro.optim import compress as C
+    dp_axes = [a for a in run.sharding.batch_axes if a in mesh.axis_names
+               and mesh.shape[a] > 1]
+    if not dp_axes:
+        return plain_step
+    dp_axis = dp_axes[-1]          # ring over the innermost DP axis
+    n = mesh.shape[dp_axis]
+
+    def compressed_step(state: TrainState, batch: dict):
+        plain = TrainState(params=state.params, opt=state.opt,
+                           step=state.step, ef_residual=None)
+
+        def body(state_l, batch_l, res_l):
+            loss, metrics, grads = grads_of(state_l.params, batch_l)
+            flat, tdef = jax.tree.flatten(grads)
+            sizes = [x.size for x in flat]
+            vec = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                                   for x in flat])
+            res_vec = jnp.concatenate(
+                [x[0].reshape(-1) for x in jax.tree.leaves(res_l)])
+            boosted = vec + res_vec
+            # The ring ends in an int8 psum, so ``reduced`` is VMA-invariant
+            # over the DP axis (bitwise identical on every shard).
+            reduced = C.compressed_ring_allreduce(boosted, dp_axis, n)
+            new_res = boosted - reduced
+            outs, offs = [], 0
+            for x, sz in zip(flat, sizes):
+                outs.append(reduced[offs: offs + sz].reshape(x.shape)
+                            .astype(x.dtype))
+                offs += sz
+            grads = jax.tree.unflatten(tdef, outs)
+            ress, offs = [], 0
+            for x, sz in zip(flat, sizes):
+                ress.append(new_res[offs: offs + sz].reshape((1,) + x.shape))
+                offs += sz
+            residual = jax.tree.unflatten(tdef, ress)
+            new_params, new_opt, opt_metrics = adamw.adamw_update(
+                run.optim, grads, state_l.opt, state_l.params)
+            metrics = dict(metrics, **opt_metrics)
+            metrics = jax.tree.map(
+                lambda m: jax.lax.pmean(m, dp_axis), metrics)
+            new_plain = TrainState(params=new_params, opt=new_opt,
+                                   step=state_l.step + 1, ef_residual=None)
+            return new_plain, metrics, residual
+
+        # partial-manual shard_map over the DP ring axis only; params and
+        # optimizer state stay under GSPMD (model-axis sharding intact);
+        # the error-feedback residual is per-DP-shard state.
+        bspec = P(dp_axis)
+        rep = P()
+        mapped = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(rep, bspec, P(dp_axis)),
+            out_specs=(rep, rep, P(dp_axis)),
+            axis_names=frozenset({dp_axis}), check_vma=True)
+        new_plain, metrics, residual = mapped(plain, batch,
+                                              state.ef_residual)
+        return TrainState(params=new_plain.params, opt=new_plain.opt,
+                          step=new_plain.step,
+                          ef_residual=residual), metrics
+
+    return compressed_step

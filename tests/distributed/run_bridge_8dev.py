@@ -1,0 +1,183 @@
+"""Multi-node bridge validation on 8 virtual CPU devices.
+
+Run as a subprocess by tests/test_distributed.py (device count must be set
+before jax initializes, so this cannot live inside the main pytest process).
+Exits non-zero on any mismatch.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import bridge, ref, kvbridge  # noqa: E402
+from repro.core.memport import FREE, MemPortTable  # noqa: E402
+from repro.core.control_plane import ControlPlane  # noqa: E402
+
+
+def check(name, got, exp, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=atol,
+                               err_msg=name)
+    print(f"ok: {name}")
+
+
+def main():
+    assert jax.device_count() == 8, jax.devices()
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    n, ppn, page = 4, 8, 16
+    rng = np.random.default_rng(0)
+    pool = jnp.asarray(rng.normal(size=(n * ppn, page)).astype(np.float32))
+
+    with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
+        # --- pull: striped placement, every node asks across the ring -------
+        table = MemPortTable.striped(24, n, ppn)
+        want = rng.integers(-1, 24, size=(n, 7)).astype(np.int32)
+        got = bridge.pull_pages(pool, jnp.asarray(want), table, mesh=mesh,
+                                budget=3)
+        exp = ref.pull_pages_ref(pool, jnp.asarray(want), table,
+                                 pages_per_node=ppn)
+        check("pull striped", got, exp)
+
+        # --- pull: adversarial placement (all pages on node 2) --------------
+        cp = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=8)
+        cp.allocate(8, policy="affinity", affinity=2)
+        t2 = cp.table()
+        want2 = rng.integers(0, 8, size=(n, 5)).astype(np.int32)
+        got = bridge.pull_pages(pool, jnp.asarray(want2), t2, mesh=mesh,
+                                budget=2)
+        exp = ref.pull_pages_ref(pool, jnp.asarray(want2), t2,
+                                 pages_per_node=ppn)
+        check("pull affinity(2)", got, exp)
+
+        # --- pull: bufferless bridge gives identical results -----------------
+        got = bridge.pull_pages(pool, jnp.asarray(want), table, mesh=mesh,
+                                budget=3, edge_buffer=False)
+        exp = ref.pull_pages_ref(pool, jnp.asarray(want), table,
+                                 pages_per_node=ppn)
+        check("pull bufferless", got, exp)
+
+        # --- pull: runtime rate limiting (throttled budget) ------------------
+        want3 = np.arange(16).reshape(4, 4).astype(np.int32)
+        got = bridge.pull_pages(pool, jnp.asarray(want3), table, mesh=mesh,
+                                budget=4, overprovision=2,
+                                active_budget=jnp.int32(2))
+        exp = ref.pull_pages_ref(pool, jnp.asarray(want3), table,
+                                 pages_per_node=ppn)
+        check("pull throttled", got, exp)
+
+        # --- push: single-writer scatter -------------------------------------
+        dest = np.full((n, 4), FREE, np.int32)
+        for node in range(n):  # node i writes pages 6i .. 6i+3 (single writer)
+            dest[node] = np.arange(4) + 6 * node
+        payload = rng.normal(size=(n, 4, page)).astype(np.float32)
+        got = bridge.push_pages(pool, jnp.asarray(dest), jnp.asarray(payload),
+                                table, mesh=mesh, budget=2)
+        exp = ref.push_pages_ref(pool, jnp.asarray(dest), jnp.asarray(payload),
+                                 table, pages_per_node=ppn)
+        check("push", got, exp)
+
+        # --- elastic remap: fail a node, re-pull through new table -----------
+        cp2 = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=12)
+        cp2.allocate(12, policy="striped")
+        t3 = cp2.table()
+        payload3 = rng.normal(size=(1, 12, page)).astype(np.float32)
+        pool3 = jnp.zeros_like(pool)
+        dest3 = np.full((n, 12), FREE, np.int32)
+        dest3[0] = np.arange(12)
+        pool3 = bridge.push_pages(pool3, jnp.asarray(dest3),
+                                  jnp.asarray(np.broadcast_to(
+                                      payload3, (n, 12, page))),
+                                  t3, mesh=mesh, budget=4)
+        plan = cp2.fail_node(1)
+        t4 = cp2.table()
+        # executor: copy migrated pages into their new homes (from the old
+        # pool image, as a checkpoint restore would)
+        flat_old = np.asarray(
+            ref.flat_index(t3, jnp.arange(12, dtype=jnp.int32), ppn))
+        pool_np = np.array(pool3)  # mutable copy
+        for step in plan:
+            pool_np[step.new_home * ppn + step.new_slot] = (
+                pool_np[flat_old[step.page_id]])
+        pool4 = jnp.asarray(pool_np)
+        want4 = np.tile(np.arange(12, dtype=np.int32), (n, 1))
+        got = bridge.pull_pages(pool4, jnp.asarray(want4), t4, mesh=mesh,
+                                budget=4)
+        exp = np.broadcast_to(payload3[0], (n, 12, page))
+        check("pull after elastic remap", got, exp)
+
+        # --- kvbridge: pull & push decode attention vs dense oracle ----------
+        b, h, kv, hd, pt, mp = 4, 8, 4, 16, 4, 3
+        cache = kvbridge.init_cache(1, b, pt * mp, pt, kv, hd, mesh=mesh,
+                                    mem_axis="data", dtype=jnp.float32)
+        layer = jax.tree.map(lambda x: x[0], cache.layers)
+        lengths = jnp.asarray([5, 9, 0, 12], jnp.int32)
+        s_max = pt * mp
+        k_dense = rng.normal(size=(b, s_max, kv, hd)).astype(np.float32)
+        v_dense = rng.normal(size=(b, s_max, kv, hd)).astype(np.float32)
+        # fill pools + tails to mirror the dense cache
+        kp = np.zeros(layer.k_pool.shape, np.float32)
+        vp = np.zeros(layer.v_pool.shape, np.float32)
+        tk = np.zeros((b, pt, kv, hd), np.float32)
+        tv = np.zeros((b, pt, kv, hd), np.float32)
+        home = np.asarray(cache.table.home)
+        slot = np.asarray(cache.table.slot)
+        ppn_kv = layer.k_pool.shape[0] // 4
+        for bb in range(b):
+            ln = int(lengths[bb])
+            for p in range(mp):
+                pid = bb * mp + p
+                lo, hi = p * pt, min((p + 1) * pt, ln)
+                if hi <= lo:
+                    continue
+                if hi - lo == pt:  # full page -> pool
+                    row = home[pid] * ppn_kv + slot[pid]
+                    kp[row, : hi - lo] = k_dense[bb, lo:hi]
+                    vp[row, : hi - lo] = v_dense[bb, lo:hi]
+                else:  # tail
+                    tk[bb, : hi - lo] = k_dense[bb, lo:hi]
+                    tv[bb, : hi - lo] = v_dense[bb, lo:hi]
+        layer = kvbridge.PagedKVLayer(
+            k_pool=jnp.asarray(kp), v_pool=jnp.asarray(vp),
+            tail_k=jnp.asarray(tk), tail_v=jnp.asarray(tv))
+        q = jnp.asarray(rng.normal(size=(b, h, hd)).astype(np.float32))
+        oracle = kvbridge.decode_attention_ref(
+            q, jnp.asarray(k_dense), jnp.asarray(v_dense), lengths)
+        got_pull = kvbridge.decode_attention_pull(
+            q, layer, cache.table, lengths, page_tokens=pt, max_pages=mp,
+            mesh=mesh, mem_axis="data", budget=2)
+        check("kv decode pull", got_pull, oracle, atol=2e-5)
+        got_push = kvbridge.decode_attention_push(
+            q, layer, cache.table, lengths, page_tokens=pt, max_pages=mp,
+            mesh=mesh, mem_axis="data")
+        check("kv decode push", got_push, oracle, atol=2e-5)
+
+        # --- kvbridge append: tail write + page-boundary flush ---------------
+        lens2 = jnp.asarray([3, 3, 3, 3], jnp.int32)
+        layer2 = kvbridge.PagedKVLayer(
+            k_pool=jnp.zeros_like(layer.k_pool),
+            v_pool=jnp.zeros_like(layer.v_pool),
+            tail_k=jnp.asarray(tk), tail_v=jnp.asarray(tv))
+        k_new = jnp.asarray(rng.normal(size=(b, kv, hd)).astype(np.float32))
+        v_new = jnp.asarray(rng.normal(size=(b, kv, hd)).astype(np.float32))
+        layer3 = kvbridge.append(layer2, cache.table, lens2, k_new, v_new,
+                                 page_tokens=pt, max_pages=mp, mesh=mesh,
+                                 mem_axis="data")
+        # page 0 of every sequence flushed (length 3 -> 4 == page_tokens)
+        for bb in range(b):
+            row = home[bb * mp] * ppn_kv + slot[bb * mp]
+            exp_page = np.asarray(tk[bb]).copy()
+            exp_page[3] = np.asarray(k_new[bb])
+            check(f"append flush b{bb}",
+                  np.asarray(layer3.k_pool)[row], exp_page)
+        check("append tail reset", np.asarray(layer3.tail_k),
+              np.zeros_like(tk))
+
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced config, one forward + train-grad +
+decode step on CPU; asserts shapes and no NaNs.  (Assignment deliverable f.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import ATTENTION_KINDS
+from repro.models import transformer
+
+ARCHS = configs.lm_archs()
+
+
+def make_batch(cfg, batch=2, seq=16, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    if cfg.embed_inputs:
+        out["embeds"] = jnp.asarray(
+            rng.normal(size=(batch, seq, cfg.d_model)).astype(np.float32))
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32)
+    out["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32)
+    if cfg.num_encoder_layers > 0:
+        out["enc_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, 8, cfg.d_model)).astype(np.float32))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_grad(arch):
+    cfg = configs.get_reduced(arch)
+    cfg = __import__("dataclasses").replace(cfg, dtype="float32")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg)
+    logits, _ = jax.jit(lambda p, b: transformer.forward(cfg, p, b))(
+        params, batch)
+    b, s = batch["labels"].shape
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: transformer.loss_fn(cfg, p, batch)[0]))(params)
+    assert np.isfinite(float(loss))
+    gnorm = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.square(x.astype(jnp.float32)))),
+        grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = configs.get_reduced(arch)
+    cfg = __import__("dataclasses").replace(cfg, dtype="float32")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    b = 2
+    ops = transformer.DenseCacheOps(max_len=8, dtype=jnp.float32)
+    enc_out = None
+    if cfg.cross_attention:
+        enc_out = jnp.asarray(np.random.default_rng(0).normal(
+            size=(b, 8, cfg.d_model)).astype(np.float32))
+    state = transformer.init_decode_state(cfg, b, ops, enc_out=enc_out)
+    tokens = jnp.asarray([1, 2], jnp.int32)
+    step = jax.jit(lambda p, s, t: transformer.decode_step(cfg, p, s, t, ops))
+    for i in range(3):
+        logits, state = step(params, state, tokens)
+        assert logits.shape == (b, cfg.vocab_size)
+        assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+        tokens = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert int(state["lengths"][0]) == 3
+
+
+def test_decode_matches_forward_full_attn():
+    """Greedy decode logits == teacher-forced forward logits (dense arch)."""
+    cfg = configs.get_reduced("granite-3-8b")
+    cfg = __import__("dataclasses").replace(cfg, dtype="float32")
+    params = transformer.init_params(cfg, jax.random.key(1))
+    rng = np.random.default_rng(3)
+    b, s = 2, 6
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    logits_fwd, _ = transformer.forward(cfg, params, {"tokens": tokens})
+
+    ops = transformer.DenseCacheOps(max_len=s, dtype=jnp.float32)
+    state = transformer.init_decode_state(cfg, b, ops)
+    outs = []
+    for i in range(s):
+        lg, state = transformer.decode_step(cfg, params, state,
+                                            tokens[:, i], ops)
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_fwd), atol=2e-3)
+
+
+def test_decode_matches_forward_hybrid():
+    """Same equivalence for the RG-LRU + SWA hybrid (recurrentgemma)."""
+    cfg = configs.get_reduced("recurrentgemma-9b")
+    cfg = __import__("dataclasses").replace(cfg, dtype="float32")
+    params = transformer.init_params(cfg, jax.random.key(1))
+    rng = np.random.default_rng(3)
+    b, s = 2, 6
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    logits_fwd, _ = transformer.forward(cfg, params, {"tokens": tokens})
+    ops = transformer.DenseCacheOps(max_len=s, dtype=jnp.float32)
+    state = transformer.init_decode_state(cfg, b, ops)
+    outs = []
+    for i in range(s):
+        lg, state = transformer.decode_step(cfg, params, state,
+                                            tokens[:, i], ops)
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_fwd), atol=2e-3)
+
+
+def test_decode_matches_forward_xlstm():
+    """Recurrent (mLSTM/sLSTM) decode == sequence forward."""
+    cfg = configs.get_reduced("xlstm-125m")
+    cfg = __import__("dataclasses").replace(cfg, dtype="float32")
+    params = transformer.init_params(cfg, jax.random.key(1))
+    rng = np.random.default_rng(3)
+    b, s = 2, 6
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    logits_fwd, _ = transformer.forward(cfg, params, {"tokens": tokens})
+    ops = transformer.DenseCacheOps(max_len=s, dtype=jnp.float32)
+    state = transformer.init_decode_state(cfg, b, ops)
+    outs = []
+    for i in range(s):
+        lg, state = transformer.decode_step(cfg, params, state,
+                                            tokens[:, i], ops)
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_fwd), atol=2e-3)

@@ -1,0 +1,140 @@
+"""Bridge transfer-engine correctness: bridge == pure-jnp oracle.
+
+Single-device (N=1 loopback) cases run here; multi-node ring tests run in a
+subprocess with 8 virtual devices (see test_distributed.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bridge, ref
+from repro.core.memport import FREE, MemPortTable
+from repro.core.control_plane import ControlPlane
+
+
+def make_pool_np(num_slots, page, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(num_slots, page)).astype(np.float32))
+
+
+def test_pull_single_node_matches_ref():
+    pool = make_pool_np(16, 8)
+    table = MemPortTable.striped(12, 1, 16)
+    want = jnp.asarray([[3, 0, 7, FREE, 11, 2]], jnp.int32)
+    got = bridge.pull_pages(pool, want, table, mesh=None, budget=4)
+    exp = ref.pull_pages_ref(pool, want, table, pages_per_node=16)
+    np.testing.assert_allclose(got, exp)
+
+
+def test_push_single_node_matches_ref():
+    pool = make_pool_np(16, 8)
+    table = MemPortTable.striped(12, 1, 16)
+    dest = jnp.asarray([[5, 1, FREE, 9]], jnp.int32)
+    payload = jnp.ones((1, 4, 8), jnp.float32) * jnp.arange(4)[None, :, None]
+    got = bridge.push_pages(pool, dest, payload, table, mesh=None, budget=2)
+    exp = ref.push_pages_ref(pool, dest, payload, table, pages_per_node=16)
+    np.testing.assert_allclose(got, exp)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    num_logical=st.integers(1, 24),
+    budget=st.integers(1, 9),
+    seed=st.integers(0, 10_000),
+)
+def test_pull_property_random_requests(num_logical, budget, seed):
+    """Any request list (dups, FREE holes, unmapped pages) matches the oracle."""
+    rng = np.random.default_rng(seed)
+    pool = make_pool_np(32, 4, seed)
+    table = MemPortTable.striped(num_logical, 1, 32)
+    r = int(rng.integers(1, 16))
+    want = rng.integers(-1, num_logical, size=(1, r)).astype(np.int32)
+    got = bridge.pull_pages(pool, jnp.asarray(want), table,
+                            mesh=None, budget=budget)
+    exp = ref.pull_pages_ref(pool, jnp.asarray(want), table, pages_per_node=32)
+    np.testing.assert_allclose(got, exp)
+
+
+def test_memport_translate_free_passthrough():
+    t = MemPortTable.striped(8, 2, 4)
+    home, slot = t.translate(jnp.asarray([0, FREE, 7], jnp.int32))
+    assert home[1] == FREE and slot[1] == FREE
+    assert home[0] == 0 and slot[0] == 0
+    assert home[7 % 3 if False else 2] >= 0
+
+
+def test_memport_runtime_reprogram():
+    t = MemPortTable.striped(8, 2, 4)
+    t2 = t.program(np.array([3]), np.array([1]), np.array([2]))
+    assert int(t2.home[3]) == 1 and int(t2.slot[3]) == 2
+    # untouched rows preserved
+    assert int(t2.home[0]) == int(t.home[0])
+
+
+def test_control_plane_alloc_and_fail():
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=64)
+    region = cp.allocate(16, "kv", policy="striped")
+    occ = cp.occupancy()
+    assert occ.sum() == 16 and occ.max() == 4
+    plan = cp.fail_node(2)
+    assert len(plan) == 4  # node 2 held 4 pages
+    assert all(s.new_home != 2 for s in plan)
+    occ = cp.occupancy()
+    assert occ[2] == 0 and occ.sum() == 16
+    # table stays consistent
+    t = cp.table()
+    assert not np.any(np.asarray(t.home) == 2)
+    region2 = cp.allocate(8, policy="hashed")
+    t2 = cp.table()
+    homes = np.asarray(t2.home)[region2.page_ids]
+    assert not np.any(homes == 2)
+
+
+def test_control_plane_straggler_rate_limits():
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=8)
+    for step in range(8):
+        for n in range(4):
+            cp.record_step_time(n, 1.0 if n != 3 else 2.5)
+    budgets = cp.rate_limits(static_budget=8)
+    assert list(budgets[:3]) == [8, 8, 8]
+    assert budgets[3] == 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), nodes=st.integers(1, 6))
+def test_control_plane_invariants(seed, nodes):
+    """No slot double-booked; every mapped page has a live home."""
+    rng = np.random.default_rng(seed)
+    cp = ControlPlane(num_nodes=nodes, pages_per_node=8, num_logical=64)
+    regions = []
+    # Keep total allocation at <= half capacity so a failed node's pages
+    # always fit on survivors.
+    remaining = nodes * 8 // 2
+    for _ in range(int(rng.integers(1, 4))):
+        n = int(rng.integers(1, 8))
+        if n > remaining:
+            break
+        remaining -= n
+        regions.append(cp.allocate(n, policy=str(rng.choice(
+            ["striped", "hashed"]))))
+    if nodes > 1 and rng.random() < 0.5:
+        cp.fail_node(int(rng.integers(0, nodes)))
+    home, slot = np.asarray(cp._home), np.asarray(cp._slot)
+    mapped = home != FREE
+    pairs = set(zip(home[mapped].tolist(), slot[mapped].tolist()))
+    assert len(pairs) == mapped.sum(), "slot double-booked"
+    for h in home[mapped]:
+        assert cp.nodes[h].alive, "page homed on dead node"
+
+
+def test_rate_limited_pull_matches_ref():
+    """Throttled budget (overprovisioned rounds) still returns every page."""
+    pool = make_pool_np(32, 4)
+    table = MemPortTable.striped(24, 1, 32)
+    want = jnp.arange(24, dtype=jnp.int32)[None, :]
+    got = bridge.pull_pages(pool, want, table, mesh=None, budget=8,
+                            overprovision=2, active_budget=jnp.int32(5))
+    exp = ref.pull_pages_ref(pool, want, table, pages_per_node=32)
+    np.testing.assert_allclose(got, exp)

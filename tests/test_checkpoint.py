@@ -1,0 +1,126 @@
+"""Checkpoint manager: roundtrip, atomicity, retention, resume."""
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+
+
+def tree_of(seed, shapes=((4, 8), (3,), ())):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=shapes[0]).astype(np.float32)),
+        "b": {"c": jnp.asarray(rng.normal(size=shapes[1]).astype(np.float32)),
+              "count": jnp.asarray(rng.integers(0, 100), jnp.int32)},
+        "d": jnp.asarray(rng.normal(size=shapes[0]).astype(jnp.bfloat16)),
+    }
+
+
+def assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    tree = tree_of(0)
+    mgr.save(10, tree, extra={"step": 10, "note": "x"})
+    restored, extra = mgr.restore(tree)
+    assert_tree_equal(tree, restored)
+    assert extra["step"] == 10
+
+
+def test_latest_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (5, 10, 15, 20):
+        mgr.save(s, tree_of(s))
+    assert mgr.latest_step() == 20
+    assert mgr.steps() == [15, 20]  # older checkpoints garbage-collected
+
+
+def test_resume_restores_exact_step(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t1, t2 = tree_of(1), tree_of(2)
+    mgr.save(1, t1, extra={"step": 1})
+    mgr.save(2, t2, extra={"step": 2})
+    r1, _ = mgr.restore(t1, step=1)
+    assert_tree_equal(t1, r1)
+    r2, _ = mgr.restore(t2)       # latest
+    assert_tree_equal(t2, r2)
+
+
+def test_crash_mid_save_preserves_previous(tmp_path):
+    """A leftover .tmp dir must not shadow the committed checkpoint."""
+    mgr = CheckpointManager(tmp_path)
+    tree = tree_of(3)
+    mgr.save(1, tree)
+    # simulate a crashed save: partial tmp dir for step 2
+    crash = pathlib.Path(tmp_path) / "step_2.tmp"
+    crash.mkdir()
+    (crash / "manifest.json").write_text("{corrupt")
+    assert mgr.latest_step() == 1
+    restored, _ = mgr.restore(tree)
+    assert_tree_equal(tree, restored)
+    # a new save of step 2 succeeds despite the leftover tmp
+    mgr.save(2, tree)
+    assert mgr.latest_step() == 2
+
+
+def test_missing_leaf_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"a": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        mgr.restore({"a": jnp.zeros((2,)), "zz": jnp.zeros((3,))})
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), rows=st.integers(1, 32),
+       cols=st.integers(1, 64))
+def test_roundtrip_property(tmp_path_factory, seed, rows, cols):
+    tmp = tmp_path_factory.mktemp("ck")
+    mgr = CheckpointManager(tmp)
+    rng = np.random.default_rng(seed)
+    tree = {"w": jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32)),
+            "i": jnp.asarray(rng.integers(-5, 5, size=(cols,)), jnp.int32)}
+    mgr.save(seed, tree)
+    restored, _ = mgr.restore(tree, step=seed)
+    assert_tree_equal(tree, restored)
+
+
+# -- async manager ------------------------------------------------------------
+
+def test_async_roundtrip_and_ordering(tmp_path):
+    from repro.checkpoint import AsyncCheckpointManager
+    mgr = AsyncCheckpointManager(tmp_path, keep=2)
+    trees = {s: tree_of(s) for s in (1, 2, 3)}
+    for s in (1, 2, 3):
+        mgr.save(s, trees[s], extra={"step": s})
+    mgr.wait()
+    assert mgr.latest_step() == 3
+    assert mgr.steps() == [2, 3]  # retention applied in order
+    restored, extra = mgr.restore(trees[3])
+    assert_tree_equal(trees[3], restored)
+    assert extra["step"] == 3
+
+
+def test_async_snapshot_isolated_from_donation(tmp_path):
+    """Mutating (donating) the live state after save() must not corrupt
+    the image being written."""
+    import jax.numpy as jnp
+    from repro.checkpoint import AsyncCheckpointManager
+    mgr = AsyncCheckpointManager(tmp_path)
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    mgr.save(5, tree, extra={"step": 5})
+    # overwrite the live buffer immediately (simulates donation reuse)
+    tree = {"w": tree["w"] * 0 - 1.0}
+    mgr.wait()
+    restored, _ = mgr.restore({"w": jnp.zeros(8)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(8, dtype=np.float32))

@@ -1,0 +1,52 @@
+"""Multi-device (8 virtual CPU) validation, run in subprocesses.
+
+Device count must be fixed before jax initializes, so these scripts cannot
+import jax in the pytest process — each runs as ``python tests/distributed/
+run_*.py`` with XLA_FLAGS set inside the script itself.
+"""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+HERE = pathlib.Path(__file__).parent
+REPO = HERE.parent
+
+
+def run_script(name: str, timeout: int = 900) -> str:
+    proc = subprocess.run(
+        [sys.executable, str(HERE / "distributed" / name)],
+        capture_output=True, text=True, timeout=timeout,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{name} failed\n--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_bridge_8dev():
+    out = run_script("run_bridge_8dev.py")
+    assert "ALL OK" in out
+
+
+@pytest.mark.slow
+def test_zero_bridge_8dev():
+    out = run_script("run_zero_8dev.py")
+    assert "ALL OK" in out
+
+
+@pytest.mark.slow
+def test_compressed_dp_8dev():
+    out = run_script("run_compress_8dev.py")
+    assert "ALL OK" in out
+
+
+@pytest.mark.slow
+def test_pipeline_8dev():
+    out = run_script("run_pipeline_8dev.py")
+    assert "ALL OK" in out

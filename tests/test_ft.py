@@ -1,0 +1,85 @@
+"""Fault-tolerance: elastic trainer recovery, heartbeats, stragglers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.control_plane import ControlPlane
+from repro.ft.elastic import ElasticTrainer
+from repro.ft.heartbeat import HeartbeatMonitor
+
+
+def counting_step(state, batch):
+    return {"x": state["x"] + batch["inc"]}, {"loss": 1.0 / (state["x"] + 1)}
+
+
+def batches():
+    while True:
+        yield {"inc": jnp.asarray(1.0)}
+
+
+def test_elastic_recovery_resumes_from_checkpoint(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=16)
+    cp.allocate(8)
+    trainer = ElasticTrainer(step_fn=counting_step, ckpt=ckpt, cp=cp,
+                             ckpt_every=10)
+    state = {"x": jnp.asarray(0.0)}
+    state, hist = trainer.run(state, batches(), num_steps=30,
+                              failure_schedule={17: 1})
+    # failed at 17 -> restored to step 10 -> ran to 30: total = 30
+    assert float(state["x"]) == 30.0
+    kinds = [e.kind for e in trainer.events]
+    assert kinds == ["node_lost", "restored"]
+    # dead node's pages were re-homed
+    assert not np.any(np.asarray(cp.table().home) == 1)
+    assert not cp.nodes[1].alive
+
+
+def test_failure_without_checkpoint_raises(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    trainer = ElasticTrainer(step_fn=counting_step, ckpt=ckpt, ckpt_every=100)
+    state = {"x": jnp.asarray(0.0)}
+    try:
+        trainer.run(state, batches(), num_steps=10, failure_schedule={3: 0})
+        raise AssertionError("expected RuntimeError")
+    except RuntimeError as e:
+        assert "no checkpoint" in str(e)
+
+
+def test_heartbeat_detects_dead_node():
+    mon = HeartbeatMonitor(num_nodes=3, timeout=10.0)
+    for t in range(0, 30, 5):
+        mon.beat(0, float(t))
+        mon.beat(1, float(t))
+        if t < 10:
+            mon.beat(2, float(t))
+    dead = mon.tick(30.0)
+    assert dead == [2]
+    assert mon.tick(31.0) == []  # reported once
+
+
+def test_straggler_rate_limit_integration(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=8)
+    trainer = ElasticTrainer(step_fn=counting_step, ckpt=ckpt, cp=cp,
+                             ckpt_every=50)
+    # synthetic telemetry: node 3 is 3x slower
+    for _ in range(8):
+        for n in range(4):
+            cp.record_step_time(n, 0.1 if n != 3 else 0.3)
+    budgets = trainer.rate_limits(static_budget=8)
+    assert list(budgets) == [8, 8, 8, 4]
+
+
+def test_elastic_scaling_revive_node():
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=16)
+    cp.allocate(12)
+    cp.fail_node(2)
+    assert 2 not in cp.alive_nodes
+    cp.revive_node(2)
+    assert 2 in cp.alive_nodes
+    # new allocations can land on the revived node again
+    region = cp.allocate(4, policy="affinity", affinity=2)
+    homes = np.asarray(cp.table().home)[region.page_ids]
+    assert np.all(homes == 2)

@@ -1,0 +1,65 @@
+"""Paper-validation tests: the analytical model must reproduce the published
+prototype numbers (DESIGN.md §6.1).  These pins ARE the faithfulness check.
+"""
+import numpy as np
+import pytest
+
+from repro.core import perfmodel as pm
+
+
+def test_rtt_matches_paper():
+    assert abs(pm.PAPER_HW.rtt_ns - 800.0) < 1.0          # 134 cyc == 800 ns
+
+
+def test_link_ceiling_matches_paper():
+    assert pm.PAPER_HW.link_payload_mibps == pytest.approx(1280.0)
+
+
+def test_copy_one_core_remote_matches_paper():
+    bw = pm.stream_bandwidth_mibps("copy", 1, remote=True)
+    assert bw == pytest.approx(562.0, rel=0.02)           # paper: 562 MiB/s
+
+
+def test_copy_one_core_penalty_matches_paper():
+    assert pm.penalty("copy", 1) == pytest.approx(0.47, abs=0.01)
+
+
+def test_scale_penalty_matches_paper():
+    assert pm.penalty("scale", 1) == pytest.approx(0.25, abs=0.01)
+
+
+def test_link_saturates_beyond_two_cores():
+    """Paper: 'beyond 2 CPUs the transceiver becomes the bottleneck'."""
+    bw2 = pm.mem_bandwidth_mibps(pm.PAPER_HW, 2, remote=True)
+    bw3 = pm.mem_bandwidth_mibps(pm.PAPER_HW, 3, remote=True)
+    bw4 = pm.mem_bandwidth_mibps(pm.PAPER_HW, 4, remote=True)
+    assert bw2 < pm.PAPER_HW.link_payload_mibps * 0.99
+    assert bw3 == pytest.approx(pm.PAPER_HW.link_payload_mibps)
+    assert bw4 == pytest.approx(pm.PAPER_HW.link_payload_mibps)
+
+
+def test_flop_kernels_have_lower_penalty_than_copy():
+    """The paper's balance argument: more FLOPs/byte -> lower penalty."""
+    for kernel in ("scale", "add", "triad"):
+        assert pm.penalty(kernel, 1) < pm.penalty("copy", 1)
+
+
+def test_rtt_pipeline_sums_to_134():
+    assert sum(pm.RTT_PIPELINE_CYCLES.values()) == 134
+
+
+def test_stream_table_shape():
+    t = pm.stream_table()
+    assert set(t) == {"copy", "scale", "add", "triad"}
+    for sides in t.values():
+        assert len(sides["local"]) == 4 and len(sides["remote"]) == 4
+        # local >= remote always
+        assert all(l >= r for l, r in zip(sides["local"], sides["remote"]))
+
+
+def test_tpu_projection_monotone_in_page_size():
+    """Bigger pages amortize the hop latency -> more bandwidth."""
+    small = pm.tpu_remote_page_bandwidth_gbps(1 << 14)
+    big = pm.tpu_remote_page_bandwidth_gbps(1 << 20)
+    assert big > small
+    assert big <= pm.TPU_HW.ici_link_gbps
