@@ -5,31 +5,48 @@ sums to the published total, and measures the *software* path length of our
 bridge datapath (translation -> steering -> epochs) in ops/epochs per pull,
 which is the TPU-side analogue of the cycle count.
 
-Emits CSV rows: name,us_per_call,derived.
+Also compares route-program schedule variants (unidirectional /
+bidirectional / pruned): circuit epochs, wired slots, bytes per round and
+the analytical round latency from ``repro.core.perfmodel``.
+
+Emits CSV rows: name,us_per_call,derived — and writes the same data
+machine-readably to ``BENCH_bridge.json`` at the repo root so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bridge, perfmodel
+from repro.core import bridge, perfmodel, steering
 from repro.core.memport import MemPortTable
 
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
 
-def rows() -> list[str]:
-    out = []
-    total = sum(perfmodel.RTT_PIPELINE_CYCLES.values())
-    for stage, cyc in perfmodel.RTT_PIPELINE_CYCLES.items():
-        ns = cyc / perfmodel.PAPER_HW.clock_mhz * 1e3
-        out.append(f"rtt_stage_{stage.split('(')[0].strip().replace(' ', '_')},"
-                   f"0,{cyc}cyc={ns:.0f}ns")
-    out.append(f"rtt_total,0,{total}cyc={total/perfmodel.PAPER_HW.clock_mhz*1e3:.0f}ns"
-               f" (paper: 134cyc=800ns)")
+# Route-program comparison geometry: an 8-node mem ring moving 256 KiB pages
+# in rounds of 8; "pruned" keeps the three distances a blocked/affinity
+# placement typically exercises.
+ROUTE_NODES = 8
+ROUTE_PAGE_BYTES = 1 << 18
+ROUTE_BUDGET = 8
 
-    # software path: one-page pull latency through the loopback bridge
+
+def route_variants() -> dict[str, steering.RouteProgram]:
+    bi = steering.bidirectional_program(ROUTE_NODES)
+    return {
+        "unidirectional": steering.unidirectional_program(ROUTE_NODES),
+        "bidirectional": bi,
+        "pruned": steering.pruned_program(bi, [1, 2, 6]),
+    }
+
+
+def measure_sw_pull_us() -> float:
+    """One-page pull latency through the loopback bridge (jitted)."""
     table = MemPortTable.striped(16, 4, 4)
     pool = jnp.asarray(np.random.default_rng(0).normal(
         size=(16, 256)).astype(np.float32))
@@ -42,7 +59,20 @@ def rows() -> list[str]:
     for _ in range(reps):
         r = pull(pool, want, table)
     jax.block_until_ready(r)
-    us = (time.perf_counter() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows() -> list[str]:
+    out = []
+    total = sum(perfmodel.RTT_PIPELINE_CYCLES.values())
+    for stage, cyc in perfmodel.RTT_PIPELINE_CYCLES.items():
+        ns = cyc / perfmodel.PAPER_HW.clock_mhz * 1e3
+        out.append(f"rtt_stage_{stage.split('(')[0].strip().replace(' ', '_')},"
+                   f"0,{cyc}cyc={ns:.0f}ns")
+    out.append(f"rtt_total,0,{total}cyc={total/perfmodel.PAPER_HW.clock_mhz*1e3:.0f}ns"
+               f" (paper: 134cyc=800ns)")
+
+    us = measure_sw_pull_us()
     out.append(f"bridge_sw_pull_1page,{us:.1f},loopback_jitted")
 
     # modelled TPU pull-mode page latency (1 hop, 256 KiB page)
@@ -51,6 +81,33 @@ def rows() -> list[str]:
     out.append(f"bridge_tpu_page_rtt_model,0,{lat_us:.1f}us_per_256KiB_page")
     bw = perfmodel.tpu_remote_page_bandwidth_gbps(1 << 18)
     out.append(f"bridge_tpu_pull_bandwidth_model,0,{bw:.1f}GB/s_per_pair")
+
+    # route-program schedule variants (the software-defined circuit plane)
+    bench: dict[str, dict] = {"sw_pull_1page_us": round(us, 2),
+                              "num_nodes": ROUTE_NODES,
+                              "page_bytes": ROUTE_PAGE_BYTES,
+                              "budget": ROUTE_BUDGET, "variants": {}}
+    for name, prog in route_variants().items():
+        stats = perfmodel.route_epoch_stats(prog)
+        model_us = perfmodel.predict_round_latency_us(
+            prog, ROUTE_PAGE_BYTES, ROUTE_BUDGET)
+        model_us_nobuf = perfmodel.predict_round_latency_us(
+            prog, ROUTE_PAGE_BYTES, ROUTE_BUDGET, edge_buffer=False)
+        bytes_per_round = stats["live_slots"] * ROUTE_BUDGET * ROUTE_PAGE_BYTES
+        out.append(
+            f"bridge_route_{name},0,epochs={stats['num_epochs']}"
+            f" slots={stats['live_slots']} hops={stats['total_hops']}"
+            f" round_model={model_us:.0f}us")
+        bench["variants"][name] = {
+            "epochs": stats["num_epochs"],
+            "live_slots": stats["live_slots"],
+            "total_hops": stats["total_hops"],
+            "bytes_per_round": bytes_per_round,
+            "model_round_us": round(model_us, 2),
+            "model_round_us_bufferless": round(model_us_nobuf, 2),
+        }
+    BENCH_JSON.write_text(json.dumps(bench, indent=2) + "\n")
+    out.append(f"bridge_route_json,0,{BENCH_JSON.name}")
     return out
 
 

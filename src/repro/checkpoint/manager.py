@@ -19,9 +19,16 @@ import pathlib
 import shutil
 from typing import Any, Optional
 
+import zlib
+
 import jax
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # pragma: no cover - depends on environment
+    zstandard = None         # fall back to stdlib zlib (codec recorded in
+                             # the manifest, so either side can read both)
 
 SHARD_LEAVES = 64  # leaves per shard file
 
@@ -43,9 +50,15 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
 
+        codec = "zstd" if zstandard is not None else "zlib"
         manifest: dict[str, Any] = {"step": step, "extra": extra or {},
-                                    "leaves": []}
-        cctx = zstandard.ZstdCompressor(level=self.level)
+                                    "codec": codec, "leaves": []}
+        if zstandard is not None:
+            cctx = zstandard.ZstdCompressor(level=self.level)
+            compress = cctx.compress
+        else:
+            # zstd accepts levels up to 22; zlib caps at 9.
+            compress = lambda b: zlib.compress(b, min(self.level, 9))  # noqa: E731
         shard_id, buf, buf_items = 0, [], []
 
         def flush():
@@ -54,7 +67,7 @@ class CheckpointManager:
                 return
             path = tmp / f"shard_{shard_id}.bin.zst"
             with open(path, "wb") as f:
-                f.write(cctx.compress(b"".join(buf)))
+                f.write(compress(b"".join(buf)))
             offset = 0
             for item, nbytes in buf_items:
                 item["shard"] = shard_id
@@ -108,13 +121,21 @@ class CheckpointManager:
         base = self.dir / f"step_{step}"
         with open(base / "manifest.json") as f:
             manifest = json.load(f)
-        dctx = zstandard.ZstdDecompressor()
+        codec = manifest.get("codec", "zstd")
+        if codec == "zstd":
+            if zstandard is None:
+                raise RuntimeError(
+                    "checkpoint was written with zstd but zstandard is not "
+                    "installed")
+            decompress = zstandard.ZstdDecompressor().decompress
+        else:
+            decompress = zlib.decompress
         shards: dict[int, bytes] = {}
 
         def shard_bytes(sid: int) -> bytes:
             if sid not in shards:
                 with open(base / f"shard_{sid}.bin.zst", "rb") as f:
-                    shards[sid] = dctx.decompress(f.read())
+                    shards[sid] = decompress(f.read())
             return shards[sid]
 
         by_path = {item["path"]: item for item in manifest["leaves"]}

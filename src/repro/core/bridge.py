@@ -6,22 +6,35 @@ This is the paper's datapath (Fig. 1) mapped onto a TPU pod:
   (the software rate limiter; ``active_budget`` can be lowered at **runtime**
   without recompiling, the remaining requests spill into later rounds);
 * *request preparation & steering* — each request is translated through the
-  :class:`~repro.core.memport.MemPortTable` and assigned to the ring epoch
+  :class:`~repro.core.memport.MemPortTable` and assigned to the datapath slot
   equal to its ring distance (a circuit = one static ``ppermute`` route);
-* *serDES + circuit network* — one ``jax.lax.ppermute`` pair per epoch:
+* *software-defined circuit scheduling* — **which** slots are wired, in which
+  physical ring direction, and at which circuit epoch is a runtime
+  :class:`~repro.core.steering.RouteProgram` input compiled by the control
+  plane: unidirectional (the historical fixed ring), bidirectional
+  (min(d, N-d) shortest-way routing: ⌊N/2⌋ epochs instead of N-1), pruned to
+  the distances that actually carry traffic, or link-avoiding after a ring
+  failure.  Programs have fixed static length, so swapping them between
+  steps — like re-programming the memport table or lowering
+  ``active_budget`` — never triggers a retrace;
+* *serDES + circuit network* — one ``jax.lax.ppermute`` pair per live slot:
   request ids travel ``rank -> rank+d``, payload returns ``rank+d -> rank``.
-  Every epoch's route is **static** (circuit switching), only the *contents*
-  are runtime data (software-defined steering);
-* *edge buffering* — epochs within a round are independent dataflow chains, so
-  the compiler overlaps them exactly like the paper's decoupled serdes clock
-  domains pulling from edge buffers.  ``edge_buffer=False`` inserts
-  ``optimization_barrier`` between epochs to model a bufferless bridge;
+  Every slot's wire permutation is **static** (circuit switching; note the
+  +d and -(N-d) circuits are the *same permutation*, so direction is pure
+  steering data), only the *contents* are runtime values.  Dead slots carry
+  FREE requests, so their gather/scatter payload work is masked out;
+* *edge buffering* — live slots within a round are independent dataflow
+  chains, so the compiler overlaps them exactly like the paper's decoupled
+  serdes clock domains pulling from edge buffers.  ``edge_buffer=False``
+  inserts ``optimization_barrier`` between consecutive slots to model a
+  bufferless bridge (a conservative serialization: it ignores the program's
+  epoch pairing, which only affects the analytical cost model);
 * *lossless, no ack/retx* — ICI collectives are lossless and deterministic,
   so the assumption holds natively.
 
 All functions exist in two forms: a ``*_local`` body to be used inside
 ``shard_map`` (N nodes on the mem axis) and a reference oracle in
-``repro.core.ref`` used by tests.
+``repro.core.ref`` used by tests (the oracle honours arbitrary programs).
 """
 from __future__ import annotations
 
@@ -33,7 +46,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.memport import FREE, MemPortTable
+from repro.core import ref as _ref
 from repro.core import steering
+from repro.core.steering import RouteProgram
 
 
 def shard_map(f, mesh, in_specs, out_specs, mem_axis=None):
@@ -46,9 +61,31 @@ def shard_map(f, mesh, in_specs, out_specs, mem_axis=None):
     0.8 rebuilds specs over *all* mesh axes and rejects partial manual.
     """
     names = frozenset({mem_axis}) if mem_axis else frozenset(mesh.axis_names)
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, axis_names=names,
-                         check_vma=True)
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=names,
+                             check_vma=True)
+    # jax < 0.5: shard_map lives in jax.experimental and partial-manual mode
+    # (``auto``) is not usable (eager raises NotImplementedError, the jit
+    # path trips over PartitionId SPMD lowering).  Every bridge body is
+    # replicated over the non-mem axes anyway (specs never mention them), so
+    # go full-manual over all axes; replication checking (check_rep)
+    # predates VMA typing — disable it, the bridge's replicated inputs
+    # (table, program) are genuinely replicated.
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+
+
+def use_mesh(mesh: Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` on current jax; on jax < 0.5 a Mesh is itself the
+    context manager.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 # ---------------------------------------------------------------------------
@@ -56,11 +93,14 @@ def shard_map(f, mesh, in_specs, out_specs, mem_axis=None):
 # ---------------------------------------------------------------------------
 
 def _pvary(x: jax.Array, axis: str) -> jax.Array:
-    """Mark ``x`` as varying over ``axis`` (VMA typing for scan carries)."""
-    try:
-        return jax.lax.pcast(x, axis, to="varying")
-    except Exception:
+    """Mark ``x`` as varying over ``axis`` (VMA typing for scan carries).
+
+    jax < 0.5 has no VMA typing (and no ``jax.lax.pcast``): no-op there.
+    Where pcast exists, real errors must surface, not be swallowed.
+    """
+    if not hasattr(jax.lax, "pcast"):
         return x
+    return jax.lax.pcast(x, axis, to="varying")
 
 
 def _gather_local(pool_local: jax.Array, slots: jax.Array) -> jax.Array:
@@ -82,7 +122,8 @@ def _scatter_local(pool_local: jax.Array, slots: jax.Array,
 
 
 def _round_pull(pool_local: jax.Array, sub_ids: jax.Array, table: MemPortTable,
-                axis: str, num_nodes: int, edge_buffer: bool) -> jax.Array:
+                program: RouteProgram, axis: str, num_nodes: int,
+                edge_buffer: bool) -> jax.Array:
     """Serve one round of <=budget requests; returns [budget, *page_shape]."""
     my = jax.lax.axis_index(axis)
     home, slot = table.translate(sub_ids)
@@ -92,25 +133,30 @@ def _round_pull(pool_local: jax.Array, sub_ids: jax.Array, table: MemPortTable,
     out = _gather_local(pool_local, jnp.where(dist == 0, slot, FREE))
 
     prev = None
-    for d in steering.default_route_schedule(num_nodes):
-        req = jnp.where(dist == d, slot, FREE)                     # [B]
+    for k, d in enumerate(steering.default_route_schedule(num_nodes)):
+        # Runtime steering: slot k carries traffic only if the program wires
+        # it.  Dead slots move FREE requests, so their payload gathers are
+        # masked to zeros and their pages (if wrongly requested) are dropped.
+        serve = (dist == d) & program.live[k]
+        req = jnp.where(serve, slot, FREE)                         # [B]
         if not edge_buffer and prev is not None:
-            # A bufferless bridge serializes epochs: model it explicitly.
+            # A bufferless bridge serializes slots: model it explicitly.
             req, prev = jax.lax.optimization_barrier((req, prev))
         fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
         bwd = [(j, (j - d) % num_nodes) for j in range(num_nodes)]
         req_at_home = jax.lax.ppermute(req, axis, perm=fwd)        # request flits
         payload = _gather_local(pool_local, req_at_home)           # remote read
         payload = jax.lax.ppermute(payload, axis, perm=bwd)        # data flits
-        mask = (dist == d).reshape((-1,) + (1,) * (payload.ndim - 1))
+        mask = serve.reshape((-1,) + (1,) * (payload.ndim - 1))
         out = jnp.where(mask, payload, out)
         prev = payload
     return out
 
 
 def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
-                active_budget: jax.Array, *, axis: str, num_nodes: int,
-                budget: int, rounds: int, edge_buffer: bool) -> jax.Array:
+                active_budget: jax.Array, program: RouteProgram, *, axis: str,
+                num_nodes: int, budget: int, rounds: int,
+                edge_buffer: bool) -> jax.Array:
     """Pull ``want`` pages ([rounds*budget], FREE-padded) through the bridge."""
     want = want.reshape(-1)
     page_shape = pool_local.shape[1:]
@@ -122,7 +168,8 @@ def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
         sub = jax.lax.dynamic_slice(want, (ptr,), (budget,))
         lane = jnp.arange(budget)
         sub = jnp.where(lane < active_budget, sub, FREE)
-        out = _round_pull(pool_local, sub, table, axis, num_nodes, edge_buffer)
+        out = _round_pull(pool_local, sub, table, program, axis, num_nodes,
+                          edge_buffer)
         return ptr + active_budget, (out, sub)
 
     if rounds == 0:
@@ -145,8 +192,8 @@ def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
 
 
 def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
-                table: MemPortTable, *, axis: str, num_nodes: int,
-                budget: int, rounds: int) -> jax.Array:
+                table: MemPortTable, program: RouteProgram, *, axis: str,
+                num_nodes: int, budget: int, rounds: int) -> jax.Array:
     """Write payload pages to their homes (single-writer contract)."""
     my = jax.lax.axis_index(axis)
     page_shape = pool_local.shape[1:]
@@ -158,9 +205,9 @@ def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
         home, slot = table.translate(sub)
         dist = steering.ring_distance(home, my, num_nodes)
         pool = _scatter_local(pool, jnp.where(dist == 0, slot, FREE), data)
-        for d in steering.default_route_schedule(num_nodes):
+        for k, d in enumerate(steering.default_route_schedule(num_nodes)):
             fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
-            req = jnp.where(dist == d, slot, FREE)
+            req = jnp.where((dist == d) & program.live[k], slot, FREE)
             slot_at_home = jax.lax.ppermute(req, axis, perm=fwd)
             data_at_home = jax.lax.ppermute(data, axis, perm=fwd)
             pool = _scatter_local(pool, slot_at_home, data_at_home)
@@ -182,11 +229,41 @@ def _mem_axis_size(mesh: Optional[Mesh], axis: str) -> int:
     return mesh.shape[axis]
 
 
+def _resolve_program(program: Optional[RouteProgram],
+                     num_nodes: int) -> RouteProgram:
+    """Default program (full bidirectional coverage) + static shape check."""
+    if program is None:
+        return steering.bidirectional_program(num_nodes)
+    if program.num_slots != num_nodes - 1:
+        raise ValueError(
+            f"route program has {program.num_slots} slots; a {num_nodes}-node "
+            f"ring needs {num_nodes - 1}")
+    return program
+
+
+def _loopback_mask(flat: jax.Array, ids: jax.Array, table: MemPortTable,
+                   program: Optional[RouteProgram], tn: int) -> jax.Array:
+    """Apply a route program on the 1-device (loopback) fast path.
+
+    The loopback circuit still models ``tn`` logical ring nodes: row i of
+    ``ids`` is logical requester i, and requests whose logical ring distance
+    has no wired circuit are dropped — identical semantics (and oracle) as
+    the N-device path.
+    """
+    if program is None:
+        return flat
+    _resolve_program(program, tn)
+    rows = ids.reshape((-1, ids.shape[-1]))
+    served = _ref.served_mask(table, rows, program).reshape(-1)
+    return jnp.where(served, flat, FREE)
+
+
 def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
                *, mesh: Optional[Mesh], mem_axis: str = "data",
                budget: int = 8, edge_buffer: bool = True,
                overprovision: int = 1,
                active_budget: Optional[jax.Array] = None,
+               program: Optional[RouteProgram] = None,
                table_nodes: int = 0) -> jax.Array:
     """Pull logical pages through the bridge.
 
@@ -196,6 +273,9 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
       want: [num_nodes, R] per-node request lists (logical page ids, FREE pad),
         sharded on dim 0.
       table: replicated memport table.
+      program: runtime circuit schedule (default: full bidirectional
+        coverage).  A **runtime input**: swapping unidirectional /
+        bidirectional / pruned programs on a jitted caller never retraces.
       table_nodes: logical node count of the table (0 = mesh size).  On a
         1-device mesh the pool may still model several logical memory nodes
         (loopback circuit); their slots flatten node-major.
@@ -217,11 +297,20 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         ppn = pool_pages.shape[0] // tn
         home, slot = table.translate(want.reshape(-1))
         flat = jnp.where(home >= 0, home * ppn + slot, FREE)
+        # Rate-limiter parity with the N-device path: round ``r`` serves
+        # request indices [r*ab, (r+1)*ab), so anything past rounds*ab spills
+        # off the end of the (overprovisioned) round budget and is dropped.
+        ab = jnp.clip(jnp.asarray(active_budget).reshape(-1)[0], 0, budget)
+        idx = jnp.arange(want.shape[-1])
+        served = jnp.broadcast_to(idx < rounds * ab, want.shape).reshape(-1)
+        flat = jnp.where(served, flat, FREE)
+        flat = _loopback_mask(flat, want, table, program, tn)
         out = _gather_local(pool_pages, flat)
         return out.reshape(want.shape + pool_pages.shape[1:])[..., :r, :]
     if table_nodes and table_nodes != n:
         raise ValueError(f"table has {table_nodes} nodes but mem axis "
                          f"{mem_axis!r} has {n}")
+    program = _resolve_program(program, n)
 
     pages_spec = P(mem_axis, *([None] * (pool_pages.ndim - 1)))
     out_spec = P(mem_axis, *([None] * pool_pages.ndim))
@@ -229,21 +318,22 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         _pull_local, axis=mem_axis, num_nodes=n, budget=budget,
         rounds=rounds, edge_buffer=edge_buffer)
 
-    def mapped(pool, want_l, table_l, ab):
-        out = body(pool, want_l[0], table_l, ab[0])
+    def mapped(pool, want_l, table_l, ab, prog):
+        out = body(pool, want_l[0], table_l, ab[0], prog)
         return out[None]
 
     out = shard_map(
         mapped, mesh,
-        in_specs=(pages_spec, P(mem_axis, None), P(), P(mem_axis)),
+        in_specs=(pages_spec, P(mem_axis, None), P(), P(mem_axis), P()),
         out_specs=out_spec, mem_axis=mem_axis,
-    )(pool_pages, want, table, jnp.broadcast_to(active_budget, (n,)))
+    )(pool_pages, want, table, jnp.broadcast_to(active_budget, (n,)), program)
     return out[:, :r]
 
 
 def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
                table: MemPortTable, *, mesh: Optional[Mesh],
                mem_axis: str = "data", budget: int = 8,
+               program: Optional[RouteProgram] = None,
                table_nodes: int = 0) -> jax.Array:
     """Write pages to their homes through the bridge (single-writer pages).
 
@@ -251,6 +341,8 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
       pool_pages: as in :func:`pull_pages` (returned updated).
       dest: [num_nodes, R] logical page ids each node writes.
       payload: [num_nodes, R, *page_shape].
+      program: runtime circuit schedule (default: full bidirectional
+        coverage), same semantics as in :func:`pull_pages`.
     """
     n = _mem_axis_size(mesh, mem_axis)
     r = dest.shape[-1]
@@ -268,22 +360,24 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
         ppn = pool_pages.shape[0] // tn
         home, slot = table.translate(dest.reshape(-1))
         flat = jnp.where(home >= 0, home * ppn + slot, FREE)
+        flat = _loopback_mask(flat, dest, table, program, tn)
         return _scatter_local(
             pool_pages, flat, payload.reshape((-1,) + payload.shape[2:]))
     if table_nodes and table_nodes != n:
         raise ValueError(f"table has {table_nodes} nodes but mem axis "
                          f"{mem_axis!r} has {n}")
+    program = _resolve_program(program, n)
 
     pages_spec = P(mem_axis, *([None] * (pool_pages.ndim - 1)))
     body = functools.partial(_push_local, axis=mem_axis, num_nodes=n,
                              budget=budget, rounds=rounds)
 
-    def mapped(pool, dest_l, pay_l, table_l):
-        return body(pool, dest_l[0], pay_l[0], table_l)
+    def mapped(pool, dest_l, pay_l, table_l, prog):
+        return body(pool, dest_l[0], pay_l[0], table_l, prog)
 
     return shard_map(
         mapped, mesh,
         in_specs=(pages_spec, P(mem_axis, None),
-                  P(mem_axis, None, *([None] * (payload.ndim - 2))), P()),
+                  P(mem_axis, None, *([None] * (payload.ndim - 2))), P(), P()),
         out_specs=pages_spec, mem_axis=mem_axis,
-    )(pool_pages, dest, payload, table)
+    )(pool_pages, dest, payload, table, program)

@@ -10,16 +10,22 @@ tools":
 * node-failure handling: pages homed on a dead node are re-homed onto
   survivors and a migration plan is emitted (executed by ``repro.ft``),
 * straggler mitigation: step-time telemetry drives per-node rate limits
-  (the bridge's ``active_budget``).
+  (the bridge's ``active_budget``),
+* circuit scheduling: :meth:`ControlPlane.route_program` compiles the
+  bridge's runtime :class:`~repro.core.steering.RouteProgram` from the live
+  placement table — bidirectional by default, pruned to the ring distances
+  that actually carry traffic, rerouted around a failed ring link reported
+  by ``repro.ft``.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Literal
+from typing import Literal, Optional
 
 import numpy as np
 
+from repro.core import steering
 from repro.core.memport import FREE, MemPortTable
 
 Policy = Literal["striped", "hashed", "affinity"]
@@ -66,6 +72,7 @@ class ControlPlane:
         self._regions: dict[int, Region] = {}
         self._next_region = 0
         self.nodes = [NodeState() for _ in range(num_nodes)]
+        self._failed_link_direction: Optional[int] = None
 
     # -- table export ---------------------------------------------------------
     def table(self) -> MemPortTable:
@@ -181,6 +188,63 @@ class ControlPlane:
         for i in self.detect_stragglers(threshold):
             budgets[i] = max(1, int(static_budget * factor))
         return budgets
+
+    # -- circuit scheduling ------------------------------------------------------
+    def report_link_failure(self, direction: int) -> None:
+        """Record a failed directed ring link (from ``repro.ft`` telemetry).
+
+        ``direction`` is +1 (a clockwise serdes lane died) or -1.  Any
+        circuit in that direction crosses every directed link of the ring,
+        so subsequent :meth:`route_program` calls route all traffic the
+        other way round.
+        """
+        if direction not in (1, -1):
+            raise ValueError("direction must be +1 or -1")
+        self._failed_link_direction = direction
+
+    def clear_link_failure(self) -> None:
+        self._failed_link_direction = None
+
+    def live_distances(self, requesters: Optional[list[int]] = None
+                       ) -> list[int]:
+        """Ring distances that can carry traffic under current placement.
+
+        A distance d is live iff some requester r could address a page homed
+        at (r + d) mod N.  ``requesters`` defaults to every alive node.
+        """
+        if requesters is None:
+            requesters = self.alive_nodes
+        homed = set(np.nonzero(self.occupancy() > 0)[0].tolist())
+        dists = {(h - r) % self.num_nodes
+                 for h in homed for r in requesters}
+        return sorted(dists - {0})
+
+    def route_program(self, requesters: Optional[list[int]] = None,
+                      bidirectional: bool = True,
+                      prune: bool = True) -> steering.RouteProgram:
+        """Compile the bridge's runtime circuit schedule (no recompilation).
+
+        Like :meth:`rate_limits`, the result is a *step input*: the
+        orchestrator calls this after every placement change / telemetry
+        event and feeds the program to ``pull_pages`` / ``push_pages``.
+        Combines three policies:
+
+        * bidirectional min(d, N-d) routing (⌊N/2⌋ epochs instead of N-1),
+        * pruning of distances with zero homed pages in reach,
+        * rerouting around a failed directed ring link (everything drives
+          the surviving direction).
+        """
+        n = self.num_nodes
+        if self._failed_link_direction is not None:
+            base = steering.link_avoiding_program(
+                n, self._failed_link_direction)
+        elif bidirectional:
+            base = steering.bidirectional_program(n)
+        else:
+            base = steering.unidirectional_program(n)
+        if not prune:
+            return base
+        return steering.pruned_program(base, self.live_distances(requesters))
 
     # -- introspection ----------------------------------------------------------
     def occupancy(self) -> np.ndarray:

@@ -39,6 +39,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import bridge
 from repro.core.memport import FREE, MemPortTable
+from repro.core.steering import RouteProgram
 
 NEG_INF = -1e30
 
@@ -175,7 +176,8 @@ def _tail_partial(q, tail_k, tail_v, lengths, page_tokens):
 def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
            k_new: jax.Array, v_new: jax.Array, *, page_tokens: int,
            max_pages: int, mesh: Optional[Mesh], mem_axis: str = "data",
-           budget: int = 8) -> PagedKVLayer:
+           budget: int = 8,
+           program: Optional[RouteProgram] = None) -> PagedKVLayer:
     """Append one token's (k, v) [B, kv, hd] for one layer.
 
     Tokens land in the local tail buffer; when a sequence's tail page fills,
@@ -204,10 +206,10 @@ def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
     dest_n = shape_for(jnp.where(dest >= 0, dest, FREE).astype(jnp.int32))
     k_pool = bridge.push_pages(layer.k_pool, dest_n, shape_for(tail_k),
                                table, mesh=mesh, mem_axis=mem_axis,
-                               budget=budget)
+                               budget=budget, program=program)
     v_pool = bridge.push_pages(layer.v_pool, dest_n, shape_for(tail_v),
                                table, mesh=mesh, mem_axis=mem_axis,
-                               budget=budget)
+                               budget=budget, program=program)
     # A flushed tail restarts empty (zeros are fine: positions are masked).
     keep = ~page_full
     keep_m = keep[:, None, None, None]
@@ -230,11 +232,14 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
                           table: MemPortTable, lengths: jax.Array, *,
                           page_tokens: int, max_pages: int,
                           mesh: Optional[Mesh], mem_axis: str = "data",
-                          budget: int = 8, edge_buffer: bool = True) -> jax.Array:
+                          budget: int = 8, edge_buffer: bool = True,
+                          program: Optional[RouteProgram] = None) -> jax.Array:
     """Paper-faithful: pull pages through the bridge, attend locally.
 
     q: [B, H, hd] -> out [B, H, hd].  Pages stream through an online-softmax
     accumulator in rounds of ``budget`` pages (cut-through consumption).
+    ``program`` is the runtime circuit schedule threaded down to
+    :func:`repro.core.bridge.pull_pages`.
     """
     b, h, hd = q.shape
     kv = layer.k_pool.shape[-2]
@@ -253,10 +258,10 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
 
     k_pages = bridge.pull_pages(layer.k_pool, want, table, mesh=mesh,
                                 mem_axis=mem_axis, budget=budget,
-                                edge_buffer=edge_buffer)
+                                edge_buffer=edge_buffer, program=program)
     v_pages = bridge.pull_pages(layer.v_pool, want, table, mesh=mesh,
                                 mem_axis=mem_axis, budget=budget,
-                                edge_buffer=edge_buffer)
+                                edge_buffer=edge_buffer, program=program)
     # [n, per_node*max_pages, T, kv, hd] -> [B(+pad), P, T, kv, hd]
     k_pages = k_pages.reshape(n * per_node, max_pages, page_tokens, kv, hd)[:b]
     v_pages = v_pages.reshape(n * per_node, max_pages, page_tokens, kv, hd)[:b]

@@ -160,6 +160,55 @@ def tpu_remote_page_bandwidth_gbps(page_bytes: int, hops: int = 1,
     return min(eff, wire) / 1e9
 
 
+def route_epoch_stats(program) -> Dict[str, int]:
+    """Accounting view of a :class:`~repro.core.steering.RouteProgram`.
+
+    ``num_epochs`` is the circuit-switching depth (bidirectional programs
+    pair a clockwise and a counter-clockwise circuit per epoch, so it drops
+    from N-1 to ⌊N/2⌋); ``total_hops`` drives latency, ``live_slots`` the
+    wired-circuit count after pruning.
+    """
+    import numpy as np
+    live = np.asarray(program.live)
+    off = np.asarray(program.offsets)
+    hops = np.abs(off)
+    return {
+        "num_nodes": int(program.num_nodes),
+        "num_epochs": int(program.num_epochs()),
+        "live_slots": int(live.sum()),
+        "cw_slots": int((live & (off > 0)).sum()),
+        "ccw_slots": int((live & (off < 0)).sum()),
+        "total_hops": int(hops[live].sum()) if live.any() else 0,
+        "max_hops": int(hops[live].max()) if live.any() else 0,
+    }
+
+
+def predict_round_latency_us(program, page_bytes: int, budget: int,
+                             hw: TpuHW = TPU_HW,
+                             edge_buffer: bool = True) -> float:
+    """Predicted latency of one bridge round under a route program.
+
+    Each live slot is one circuit: RTT = 2 * hops * hop latency, payload =
+    ``budget`` pages over one link direction.  Bufferless bridges serialize
+    circuits end to end; edge-buffered bridges overlap them, bounded by the
+    busier direction's wire occupancy (circuits of one direction share that
+    direction's links) plus the deepest circuit's RTT.
+    """
+    import numpy as np
+    live = np.asarray(program.live)
+    off = np.asarray(program.offsets)
+    hops = np.abs(off)
+    if not live.any():
+        return 0.0
+    wire_us = budget * page_bytes / (hw.ici_link_gbps * 1e9) * 1e6
+    rtt_us = 2.0 * hops * hw.ici_hop_latency_us
+    if not edge_buffer:
+        return float((rtt_us[live] + wire_us).sum())
+    cw = int((live & (off > 0)).sum())
+    ccw = int((live & (off < 0)).sum())
+    return float(max(cw, ccw) * wire_us + rtt_us[live].max())
+
+
 def tpu_stream_penalty(kernel: str, page_bytes: int = 1 << 18,
                        hw: TpuHW = TPU_HW) -> float:
     """Paper Fig. 3 analogue on TPU: HBM-local vs bridge-remote STREAM."""

@@ -2,13 +2,16 @@
 
 These compute the same results as :mod:`repro.core.bridge` by direct global
 gather/scatter through the memport table.  Property tests assert bridge ==
-oracle for randomized placements, request lists and budgets.
+oracle for randomized placements, request lists, budgets and route programs.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 
 from repro.core.memport import MemPortTable
+from repro.core.steering import RouteProgram
 
 
 def flat_index(table: MemPortTable, page_ids: jnp.ndarray,
@@ -19,16 +22,38 @@ def flat_index(table: MemPortTable, page_ids: jnp.ndarray,
     return jnp.where((home >= 0) & (slot >= 0), flat, -1)
 
 
+def served_mask(table: MemPortTable, ids: jnp.ndarray,
+                program: Optional[RouteProgram]) -> jnp.ndarray:
+    """bool[num_nodes, R]: is this request's ring distance wired?
+
+    Row i of ``ids`` is node i's request list; distance 0 (the loopback
+    fast path) is always wired, other distances only if the program's slot
+    is live.  ``program=None`` means full coverage (everything served).
+    """
+    if program is None:
+        return jnp.ones(ids.shape, bool)
+    n = program.num_nodes
+    home, _ = table.translate(ids)
+    me = jnp.arange(ids.shape[0])[:, None]
+    dist = jnp.mod(home - me, n)
+    wired = jnp.concatenate([jnp.ones((1,), bool), program.live])
+    return jnp.where(home >= 0, wired[dist.clip(0, n - 1)], False)
+
+
 def pull_pages_ref(pool_pages: jnp.ndarray, want: jnp.ndarray,
-                   table: MemPortTable, pages_per_node: int) -> jnp.ndarray:
+                   table: MemPortTable, pages_per_node: int,
+                   program: Optional[RouteProgram] = None) -> jnp.ndarray:
     """Oracle for :func:`repro.core.bridge.pull_pages`.
 
     Args:
       pool_pages: [num_nodes * pages_per_node, *page_shape] (global view).
       want: [num_nodes, R] logical ids (FREE-padded).
+      program: optional route program; requests whose ring distance has no
+        wired circuit come back as zeros (matching the bridge's FREE-mask).
     Returns: [num_nodes, R, *page_shape].
     """
     flat = flat_index(table, want.reshape(-1), pages_per_node)
+    flat = jnp.where(served_mask(table, want, program).reshape(-1), flat, -1)
     valid = flat >= 0
     safe = jnp.where(valid, flat, 0)
     out = pool_pages[safe]
@@ -39,9 +64,11 @@ def pull_pages_ref(pool_pages: jnp.ndarray, want: jnp.ndarray,
 
 def push_pages_ref(pool_pages: jnp.ndarray, dest: jnp.ndarray,
                    payload: jnp.ndarray, table: MemPortTable,
-                   pages_per_node: int) -> jnp.ndarray:
+                   pages_per_node: int,
+                   program: Optional[RouteProgram] = None) -> jnp.ndarray:
     """Oracle for :func:`repro.core.bridge.push_pages`."""
     flat = flat_index(table, dest.reshape(-1), pages_per_node)
+    flat = jnp.where(served_mask(table, dest, program).reshape(-1), flat, -1)
     safe = jnp.where(flat >= 0, flat, pool_pages.shape[0])
     pay = payload.reshape((-1,) + payload.shape[2:]).astype(pool_pages.dtype)
     return pool_pages.at[safe].set(pay, mode="drop")

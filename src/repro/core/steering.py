@@ -2,14 +2,33 @@
 
 Pure helpers shared by the transfer engine:
 
-* ring distances (which epoch serves which request),
+* ring distances (which request is served by which circuit),
 * round/budget splitting (the software rate limiter),
-* route schedules (which ring distance is wired at which epoch — the circuit
-  control plane can permute or prune this, e.g. to route around a dead link).
+* **route programs** — runtime-reprogrammable circuit schedules (which ring
+  offset is wired at which circuit epoch, and in which direction).
+
+A :class:`RouteProgram` is the software-defined analogue of the paper's
+circuit control plane: a *runtime value* (registered pytree, arrays only)
+that the orchestrator can swap between steps — unidirectional, bidirectional,
+pruned, or link-avoiding — without ever recompiling the jitted datapath.
+
+Key identity the programs exploit: on an N-ring the permutation
+``rank -> rank + d (mod N)`` is *the same permutation* as
+``rank -> rank - (N - d) (mod N)``.  Slot ``k`` of the datapath (serving
+ring distance ``k + 1``) therefore has two physical realisations: a
+clockwise circuit of ``k + 1`` hops or a counter-clockwise circuit of
+``N - k - 1`` hops.  The program picks, per slot, the signed offset actually
+driven (sign = direction, magnitude = hop count / which directed links are
+held) and the circuit *epoch* at which the slot is wired.  One epoch can
+host one circuit per direction (disjoint wire sets), so a bidirectional
+program covers all N-1 distances in ⌊N/2⌋ epochs instead of N-1.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core.memport import FREE
@@ -29,12 +48,153 @@ def num_rounds(num_requests: int, budget: int, overprovision: int = 1) -> int:
 
 
 def default_route_schedule(num_nodes: int) -> list[int]:
-    """Distances wired per epoch: one full ring rotation (1 .. N-1).
+    """Distances wired per slot: one full ring rotation (1 .. N-1).
 
     Epoch 0 (distance 0) is the local loopback fast path and never uses the
-    circuit network, matching the paper's locally-mapped regions.
+    circuit network, matching the paper's locally-mapped regions.  Kept for
+    the datapath's static slot structure; the *runtime* schedule — which
+    slot is live, in which direction, at which epoch — is a
+    :class:`RouteProgram`.
     """
     return list(range(1, num_nodes))
+
+
+# ---------------------------------------------------------------------------
+# Route programs (runtime circuit schedules)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class RouteProgram:
+    """A runtime circuit schedule for an N-node ring bridge.
+
+    All three fields are arrays of static length ``N - 1`` (one entry per
+    datapath slot; slot ``k`` serves ring distance ``k + 1``), so swapping
+    programs on a jitted step never changes shapes and never retraces —
+    exactly like ``active_budget``.
+
+    Attributes:
+      offsets: i32[N-1]  signed ring offset driven for slot k.  Must satisfy
+        ``offsets[k] % N == k + 1`` when live; sign is the physical ring
+        direction (+ = clockwise), ``|offsets[k]|`` the hop count.  0 on
+        dead slots.
+      epoch:   i32[N-1]  circuit epoch at which slot k's circuit is wired
+        (two slots may share an epoch iff they drive opposite directions).
+        -1 on dead slots.
+      live:    bool[N-1] dead slots carry no traffic: the datapath
+        FREE-masks their requests, so their payload work is skipped and the
+        oracle drops their pages (pruning / link avoidance).
+    """
+
+    offsets: jax.Array
+    epoch: jax.Array
+    live: jax.Array
+
+    @property
+    def num_slots(self) -> int:
+        return self.offsets.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.num_slots + 1
+
+    # -- host-side accounting (benchmarks / perfmodel / tests) ---------------
+    def num_epochs(self) -> int:
+        """Circuit epochs the program occupies (max live epoch + 1)."""
+        ep, lv = np.asarray(self.epoch), np.asarray(self.live)
+        return int(ep[lv].max()) + 1 if lv.any() else 0
+
+    def live_distances(self) -> np.ndarray:
+        """Ring distances with a wired circuit (sorted)."""
+        return np.nonzero(np.asarray(self.live))[0] + 1
+
+    def hops(self) -> np.ndarray:
+        """Physical hop count per slot (0 on dead slots)."""
+        return np.abs(np.asarray(self.offsets))
+
+    def validate(self) -> None:
+        """Raise if any live slot's offset is not congruent to its distance."""
+        n = self.num_nodes
+        off, lv = np.asarray(self.offsets), np.asarray(self.live)
+        d = np.arange(1, n)
+        bad = lv & ((off % n) != d)
+        if bad.any():
+            raise ValueError(
+                f"slots {np.nonzero(bad)[0].tolist()} drive offsets "
+                f"{off[bad].tolist()} incongruent with their distances")
+
+
+def _program(off: np.ndarray, epoch: np.ndarray, live: np.ndarray
+             ) -> RouteProgram:
+    return RouteProgram(offsets=jnp.asarray(off, jnp.int32),
+                        epoch=jnp.asarray(epoch, jnp.int32),
+                        live=jnp.asarray(live, bool))
+
+
+def unidirectional_program(num_nodes: int, direction: int = 1) -> RouteProgram:
+    """One full ring rotation in one direction: N-1 circuit epochs.
+
+    ``direction=+1`` reproduces the historical fixed schedule
+    (``default_route_schedule``); ``-1`` drives every circuit the other way
+    round (all counter-clockwise links, no clockwise link touched).
+    """
+    d = np.arange(1, num_nodes)
+    off = d if direction >= 0 else -(num_nodes - d)
+    hops = np.abs(off)
+    return _program(off, hops - 1, np.ones_like(d, bool))
+
+
+def bidirectional_program(num_nodes: int) -> RouteProgram:
+    """Shortest-way routing: distance d drives min(d, N-d) hops.
+
+    Epoch e hosts the (e+1)-hop clockwise circuit and the (e+1)-hop
+    counter-clockwise circuit simultaneously (disjoint wire sets), so all
+    N-1 distances complete in ⌊N/2⌋ epochs — vs N-1 unidirectionally.
+    """
+    d = np.arange(1, num_nodes)
+    back = num_nodes - d
+    off = np.where(d <= back, d, -back)
+    return _program(off, np.abs(off) - 1, np.ones_like(d, bool))
+
+
+def pruned_program(base: RouteProgram, live_distances) -> RouteProgram:
+    """Keep only ``live_distances``; compact epochs per direction.
+
+    Dead slots are FREE-masked by the datapath (their pages, if any were
+    requested, come back as zeros — callers prune only distances they know
+    carry no traffic).  Surviving circuits re-pack into consecutive epochs,
+    shortest hop count first, one circuit per direction per epoch.
+    """
+    n = base.num_nodes
+    keep = np.zeros((n - 1,), bool)
+    for d in np.asarray(list(live_distances), np.int64).ravel():
+        if not 0 < d < n:
+            raise ValueError(f"distance {d} out of range for {n} nodes")
+        keep[d - 1] = True
+    off = np.asarray(base.offsets).copy()
+    live = np.asarray(base.live) & keep
+    off = np.where(live, off, 0)
+    epoch = np.full((n - 1,), -1, np.int64)
+    for sign in (1, -1):
+        idx = np.nonzero(live & (np.sign(off) == sign))[0]
+        order = np.argsort(np.abs(off[idx]), kind="stable")
+        epoch[idx[order]] = np.arange(len(idx))
+    return _program(off, epoch, live)
+
+
+def link_avoiding_program(num_nodes: int, failed_direction: int
+                          ) -> RouteProgram:
+    """Route every circuit away from a failed directed ring link.
+
+    A d-hop circuit in one direction occupies *every* link of that
+    direction (all N rank->rank+1 edges carry flits simultaneously), so a
+    single failed directed link takes the whole direction down; the
+    surviving direction still reaches every distance.  ``failed_direction``
+    is +1 (a clockwise link died) or -1.
+    """
+    if failed_direction not in (1, -1):
+        raise ValueError("failed_direction must be +1 or -1")
+    return unidirectional_program(num_nodes, direction=-failed_direction)
 
 
 def pad_requests(want: np.ndarray, rounds: int, budget: int) -> np.ndarray:

@@ -25,6 +25,7 @@ from jax.sharding import Mesh
 from repro.core import bridge
 from repro.core.control_plane import ControlPlane
 from repro.core.memport import FREE, MemPortTable
+from repro.core.steering import RouteProgram
 
 
 @dataclass
@@ -87,6 +88,7 @@ class BridgeStore:
     mem_axis: str
     budget: int
     table_nodes: int = 1        # logical memory nodes (== mesh size if > 1)
+    program: Optional[RouteProgram] = None  # circuit schedule (None = full)
 
 
 def create_store(tree: Any, *, mesh: Optional[Mesh], mem_axis: str = "data",
@@ -108,7 +110,7 @@ def create_store(tree: Any, *, mesh: Optional[Mesh], mem_axis: str = "data",
     # slots index the same rows the bridge scatters into.
     pool = jnp.zeros((cp.num_nodes * cp.pages_per_node, page_elems), dtype)
     store = BridgeStore(packer, table, pool, mem_axis, budget,
-                        table_nodes=cp.num_nodes)
+                        table_nodes=cp.num_nodes, program=cp.route_program())
     return push_tree(store, tree, mesh=mesh)
 
 
@@ -130,6 +132,7 @@ def pull_tree(store: BridgeStore, *, mesh: Optional[Mesh]) -> Any:
         np.arange(store.packer.num_pages), n))
     got = bridge.pull_pages(store.pool, want, store.table, mesh=mesh,
                             mem_axis=store.mem_axis, budget=store.budget,
+                            program=store.program,
                             table_nodes=store.table_nodes)
     flat = got.reshape(-1, store.packer.page_elems)[: store.packer.num_pages]
     return store.packer.unpack(flat)
@@ -151,10 +154,11 @@ def push_tree(store: BridgeStore, tree: Any, *,
     payload = pages.reshape(n, per, store.packer.page_elems)
     pool = bridge.push_pages(store.pool, jnp.asarray(dest), payload,
                              store.table, mesh=mesh, mem_axis=store.mem_axis,
-                             budget=store.budget,
+                             budget=store.budget, program=store.program,
                              table_nodes=store.table_nodes)
     return BridgeStore(store.packer, store.table, pool, store.mem_axis,
-                       store.budget, table_nodes=store.table_nodes)
+                       store.budget, table_nodes=store.table_nodes,
+                       program=store.program)
 
 
 def rehome_after_failure(store: BridgeStore, cp: ControlPlane,
@@ -164,6 +168,9 @@ def rehome_after_failure(store: BridgeStore, cp: ControlPlane,
     contents from a checkpointed tree image (the data on the node is lost)."""
     cp.fail_node(failed_node)
     table = cp.table()
+    # Placement changed: recompile the circuit schedule for the new homes.
+    program = cp.route_program() if store.program is not None else None
     store = BridgeStore(store.packer, table, store.pool, store.mem_axis,
-                        store.budget, table_nodes=store.table_nodes)
+                        store.budget, table_nodes=store.table_nodes,
+                        program=program)
     return push_tree(store, restore_tree, mesh=mesh)

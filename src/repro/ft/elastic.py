@@ -30,9 +30,10 @@ from repro.ft.heartbeat import HeartbeatMonitor
 
 @dataclass
 class FailureEvent:
-    node: int
+    node: int                  # -1 for non-node events (e.g. link failures)
     at_step: int
     kind: str = "node_lost"
+    direction: Optional[int] = None   # ring direction for link_lost events
 
 
 @dataclass
@@ -100,3 +101,14 @@ class ElasticTrainer:
         if self.cp is None:
             return None
         return self.cp.rate_limits(static_budget)
+
+    def handle_link_failure(self, step: int, direction: int):
+        """Ring-link failure path: no data is lost (pages stay homed), the
+        circuit schedule just reroutes around the dead direction.  Returns
+        the re-compiled RouteProgram to feed the next bridge step."""
+        if self.cp is None:
+            return None
+        self.events.append(FailureEvent(-1, step, kind="link_lost",
+                                        direction=direction))
+        self.cp.report_link_failure(direction)
+        return self.cp.route_program()

@@ -33,6 +33,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import configs  # noqa: E402
+from repro.core import bridge  # noqa: E402
 from repro.config import (SHAPES, BridgeConfig, RunConfig,  # noqa: E402
                           ShardingConfig)
 from repro.data.pipeline import make_batch_specs  # noqa: E402
@@ -112,7 +113,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
         batch_abs = make_batch_specs(cfg, shape)
         b_shard = train_step_mod.batch_shardings(run, mesh, rules)
         step = train_step_mod.build_train_step(run, mesh, rules)
-        with jax.set_mesh(mesh):
+        with bridge.use_mesh(mesh):
             lowered = jax.jit(
                 step, in_shardings=(s_shard, b_shard),
                 donate_argnums=(0,)).lower(state_abs, batch_abs)
@@ -129,7 +130,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
             # serving prefill emits only the last position's logits
             return logits[:, -1, :]
 
-        with jax.set_mesh(mesh):
+        with bridge.use_mesh(mesh):
             lowered = jax.jit(
                 prefill, in_shardings=(p_shard, b_shard)).lower(
                     params_abs, batch_abs)
@@ -147,7 +148,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
     step = serve_step_mod.build_serve_step(run, cache_ops)
     tok_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
     tok_shard = NamedSharding(mesh, P())
-    with jax.set_mesh(mesh):
+    with bridge.use_mesh(mesh):
         lowered = jax.jit(
             step, in_shardings=(p_shard, s_shard, tok_shard),
             donate_argnums=(1,)).lower(params_abs, state_abs, tok_abs)

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import bridge
+
 
 def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
                    params_staged: Any, x_mb: jax.Array, *, mesh: Mesh,
@@ -60,10 +62,8 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
             buf_next = jax.lax.ppermute(y, stage_axis, perm=fwd)
             return (buf_next, outs), None
 
-        buf0 = jax.lax.pcast(jnp.zeros_like(x_local[0]), stage_axis,
-                             to="varying")
-        outs0 = jax.lax.pcast(jnp.zeros_like(x_local), stage_axis,
-                              to="varying")
+        buf0 = bridge._pvary(jnp.zeros_like(x_local[0]), stage_axis)
+        outs0 = bridge._pvary(jnp.zeros_like(x_local), stage_axis)
         (_, outs), _ = jax.lax.scan(
             tick, (buf0, outs0), jnp.arange(ticks))
         # replicate the last stage's banked outputs to every stage
@@ -74,10 +74,10 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
     staged_spec = jax.tree.map(
         lambda _: P(stage_axis), params_staged,
         is_leaf=lambda x: hasattr(x, "shape"))
-    return jax.shard_map(
-        body, mesh=mesh,
+    return bridge.shard_map(
+        body, mesh,
         in_specs=(staged_spec, P()), out_specs=P(),
-        axis_names=frozenset({stage_axis}), check_vma=True,
+        mem_axis=stage_axis,
     )(params_staged, x_mb)
 
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import RunConfig
+from repro.core import bridge
 from repro.models import transformer
 from repro.optim import adamw
 from repro.optim.adamw import AdamWState
@@ -217,11 +218,11 @@ def build_train_step(run: RunConfig, mesh: Optional[Mesh] = None,
         # the error-feedback residual is per-DP-shard state.
         bspec = P(dp_axis)
         rep = P()
-        mapped = jax.shard_map(
-            body, mesh=mesh,
+        mapped = bridge.shard_map(
+            body, mesh,
             in_specs=(rep, bspec, P(dp_axis)),
             out_specs=(rep, rep, P(dp_axis)),
-            axis_names=frozenset({dp_axis}), check_vma=True)
+            mem_axis=dp_axis)
         new_plain, metrics, residual = mapped(plain, batch,
                                               state.ef_residual)
         return TrainState(params=new_plain.params, opt=new_plain.opt,

@@ -10,11 +10,13 @@ os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=8 "
     + os.environ.get("XLA_FLAGS", ""))
 
+import functools  # noqa: E402
+
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import bridge, ref, kvbridge  # noqa: E402
+from repro.core import bridge, ref, kvbridge, steering  # noqa: E402
 from repro.core.memport import FREE, MemPortTable  # noqa: E402
 from repro.core.control_plane import ControlPlane  # noqa: E402
 
@@ -176,7 +178,78 @@ def main():
         check("append tail reset", np.asarray(layer3.tail_k),
               np.zeros_like(tk))
 
+    route_program_checks()
+
     print("ALL OK")
+
+
+def route_program_checks():
+    """RouteProgram acceptance on a full 8-way mem ring.
+
+    * switching unidirectional -> bidirectional -> pruned on the same jitted
+      pull/push triggers no retrace (programs are runtime inputs),
+    * every program's result is bit-exact against the program-aware oracle,
+    * the bidirectional program covers all 7 distances in 8 // 2 = 4
+      circuit epochs (vs 7 unidirectionally).
+    """
+    mesh8 = jax.make_mesh((8,), ("data",))
+    n, ppn, page = 8, 8, 16
+    rng = np.random.default_rng(7)
+    pool = jnp.asarray(rng.normal(size=(n * ppn, page)).astype(np.float32))
+    table = MemPortTable.striped(48, n, ppn)
+    want = jnp.asarray(rng.integers(-1, 48, size=(n, 7)).astype(np.int32))
+
+    uni = steering.unidirectional_program(n)
+    bi = steering.bidirectional_program(n)
+    assert uni.num_epochs() == n - 1, uni.num_epochs()
+    # floor(N/2) in general; for the even 8-ring this equals ceil(8/2) = 4
+    assert bi.num_epochs() == n // 2, bi.num_epochs()
+    print(f"ok: route epochs uni={uni.num_epochs()} bi={bi.num_epochs()}")
+
+    pull = jax.jit(functools.partial(bridge.pull_pages, mesh=mesh8, budget=3))
+    exp = np.asarray(ref.pull_pages_ref(pool, want, table, pages_per_node=ppn))
+    for name, prog in [("uni", uni), ("bi", bi),
+                       ("avoid_cw", steering.link_avoiding_program(n, +1))]:
+        got = np.asarray(pull(pool, want, table, program=prog))
+        np.testing.assert_array_equal(got, exp, err_msg=f"pull {name}")
+        print(f"ok: pull {name} bit-exact")
+    # pruned-to-live-distances from the control plane (affinity placement)
+    cp = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=48)
+    cp.allocate(8, policy="affinity", affinity=2)
+    t_aff = cp.table()
+    pr = cp.route_program()
+    want_aff = jnp.asarray(rng.integers(0, 8, size=(n, 5)).astype(np.int32))
+    got = np.asarray(pull(pool, want_aff, t_aff, program=pr))
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.pull_pages_ref(pool, want_aff, t_aff,
+                                           pages_per_node=ppn, program=pr)))
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.pull_pages_ref(pool, want_aff, t_aff,
+                                           pages_per_node=ppn)))
+    print("ok: pull pruned (control-plane program) bit-exact")
+    # a *wrongly* pruned program drops exactly the pages the oracle drops
+    bad = steering.pruned_program(bi, range(2, n))
+    got = np.asarray(pull(pool, want, table, program=bad))
+    np.testing.assert_array_equal(
+        got, np.asarray(ref.pull_pages_ref(pool, want, table,
+                                           pages_per_node=ppn, program=bad)))
+    assert not np.array_equal(got, exp), "pruning distance 1 dropped nothing"
+    print("ok: pull wrong-prune drops distance-1 pages like the oracle")
+    assert pull._cache_size() == 2, pull._cache_size()  # 2 table shapes only
+    print("ok: program switches triggered no retrace")
+
+    push = jax.jit(functools.partial(bridge.push_pages, mesh=mesh8, budget=2))
+    dest = np.stack([np.arange(4) + 6 * node for node in range(n)])
+    payload = rng.normal(size=(n, 4, page)).astype(np.float32)
+    expp = np.asarray(ref.push_pages_ref(
+        pool, jnp.asarray(dest), jnp.asarray(payload), table,
+        pages_per_node=ppn))
+    for name, prog in [("uni", uni), ("bi", bi)]:
+        got = np.asarray(push(pool, jnp.asarray(dest), jnp.asarray(payload),
+                              table, program=prog))
+        np.testing.assert_array_equal(got, expp, err_msg=f"push {name}")
+    assert push._cache_size() == 1, push._cache_size()
+    print("ok: push programs bit-exact, no retrace")
 
 
 if __name__ == "__main__":

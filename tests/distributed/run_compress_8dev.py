@@ -19,6 +19,7 @@ import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro import configs  # noqa: E402
+from repro.core import bridge  # noqa: E402
 from repro.config import OptimConfig, RunConfig, ShapeConfig  # noqa: E402
 from repro.data.pipeline import SyntheticLM  # noqa: E402
 from repro.optim import compress as C  # noqa: E402
@@ -33,9 +34,8 @@ def test_ring_allreduce(mesh):
     def body(xl):
         return C.compressed_ring_allreduce(xl[0], "data", n)[None]
 
-    f = jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
-                      out_specs=P("data", None),
-                      axis_names=frozenset({"data"}), check_vma=True)
+    f = bridge.shard_map(body, mesh, in_specs=P("data", None),
+                         out_specs=P("data", None), mem_axis="data")
     got = np.asarray(f(jnp.asarray(x)))
     want = x.mean(axis=0)
     for i in range(n):
@@ -57,7 +57,7 @@ def test_compressed_training(mesh):
         base, optim=dataclasses.replace(base.optim, compress_grads=True))
 
     data = SyntheticLM(cfg, 8, 32)
-    with jax.set_mesh(mesh):
+    with bridge.use_mesh(mesh):
         state_p = train_step_mod.make_train_state(base, jax.random.key(0))
         state_c = train_step_mod.make_train_state(comp, jax.random.key(0),
                                                   compress=True, dp_size=4)

@@ -1,0 +1,77 @@
+"""Deterministic stand-in for hypothesis when it is not installed.
+
+``@given`` runs the test body over a fixed number of seeded draws instead of
+skipping the whole module, so property tests keep their coverage in minimal
+environments (the real hypothesis, pinned in requirements-dev.txt, is used
+when available — see the try/except imports in the test modules).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class st:
+    """The subset of hypothesis.strategies the test-suite uses."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
+    def sampled_from(seq):
+        elems = list(seq)
+        return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [
+            elem.draw(rng)
+            for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+
+def settings(*_args, **_kwargs):
+    def deco(f):
+        return f
+    return deco
+
+
+def given(**strategies):
+    def deco(f):
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            # Seed from the test name: stable across runs and processes.
+            rng = np.random.default_rng(
+                zlib.crc32(f.__qualname__.encode()))
+            for _ in range(MAX_EXAMPLES):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                f(*args, **drawn, **kwargs)
+        # Hide the drawn parameters from pytest's fixture resolution (real
+        # hypothesis does the same); __wrapped__ would leak the original
+        # signature through inspect.signature.
+        del wrapper.__wrapped__
+        sig = inspect.signature(f)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategies])
+        return wrapper
+    return deco

@@ -1,15 +1,15 @@
 """Bridge transfer-engine correctness: bridge == pure-jnp oracle.
 
 Single-device (N=1 loopback) cases run here; multi-node ring tests run in a
-subprocess with 8 virtual devices (see test_distributed.py).
+subprocess with 8 virtual devices (see test_distributed.py).  Randomized
+property tests live in test_bridge_properties.py (optional: hypothesis).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import bridge, ref
+from repro.core import bridge, perfmodel, ref, steering
 from repro.core.memport import FREE, MemPortTable
 from repro.core.control_plane import ControlPlane
 
@@ -35,25 +35,6 @@ def test_push_single_node_matches_ref():
     payload = jnp.ones((1, 4, 8), jnp.float32) * jnp.arange(4)[None, :, None]
     got = bridge.push_pages(pool, dest, payload, table, mesh=None, budget=2)
     exp = ref.push_pages_ref(pool, dest, payload, table, pages_per_node=16)
-    np.testing.assert_allclose(got, exp)
-
-
-@settings(max_examples=25, deadline=None)
-@given(
-    num_logical=st.integers(1, 24),
-    budget=st.integers(1, 9),
-    seed=st.integers(0, 10_000),
-)
-def test_pull_property_random_requests(num_logical, budget, seed):
-    """Any request list (dups, FREE holes, unmapped pages) matches the oracle."""
-    rng = np.random.default_rng(seed)
-    pool = make_pool_np(32, 4, seed)
-    table = MemPortTable.striped(num_logical, 1, 32)
-    r = int(rng.integers(1, 16))
-    want = rng.integers(-1, num_logical, size=(1, r)).astype(np.int32)
-    got = bridge.pull_pages(pool, jnp.asarray(want), table,
-                            mesh=None, budget=budget)
-    exp = ref.pull_pages_ref(pool, jnp.asarray(want), table, pages_per_node=32)
     np.testing.assert_allclose(got, exp)
 
 
@@ -102,33 +83,6 @@ def test_control_plane_straggler_rate_limits():
     assert budgets[3] == 4
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 10_000), nodes=st.integers(1, 6))
-def test_control_plane_invariants(seed, nodes):
-    """No slot double-booked; every mapped page has a live home."""
-    rng = np.random.default_rng(seed)
-    cp = ControlPlane(num_nodes=nodes, pages_per_node=8, num_logical=64)
-    regions = []
-    # Keep total allocation at <= half capacity so a failed node's pages
-    # always fit on survivors.
-    remaining = nodes * 8 // 2
-    for _ in range(int(rng.integers(1, 4))):
-        n = int(rng.integers(1, 8))
-        if n > remaining:
-            break
-        remaining -= n
-        regions.append(cp.allocate(n, policy=str(rng.choice(
-            ["striped", "hashed"]))))
-    if nodes > 1 and rng.random() < 0.5:
-        cp.fail_node(int(rng.integers(0, nodes)))
-    home, slot = np.asarray(cp._home), np.asarray(cp._slot)
-    mapped = home != FREE
-    pairs = set(zip(home[mapped].tolist(), slot[mapped].tolist()))
-    assert len(pairs) == mapped.sum(), "slot double-booked"
-    for h in home[mapped]:
-        assert cp.nodes[h].alive, "page homed on dead node"
-
-
 def test_rate_limited_pull_matches_ref():
     """Throttled budget (overprovisioned rounds) still returns every page."""
     pool = make_pool_np(32, 4)
@@ -138,3 +92,248 @@ def test_rate_limited_pull_matches_ref():
                             overprovision=2, active_budget=jnp.int32(5))
     exp = ref.pull_pages_ref(pool, want, table, pages_per_node=32)
     np.testing.assert_allclose(got, exp)
+
+
+def test_rate_limited_pull_single_node_drops_tail():
+    """Regression: the n == 1 fast path must honour ``active_budget``.
+
+    With budget=8, overprovision=1 and active_budget=5, 3 rounds serve only
+    the first 15 of 24 requests — on a 1-device mesh exactly like on an
+    N-device mesh (the rest spill off the final round and return zeros).
+    """
+    pool = make_pool_np(32, 4)
+    table = MemPortTable.striped(24, 1, 32)
+    want = jnp.arange(24, dtype=jnp.int32)[None, :]
+    got = np.asarray(bridge.pull_pages(
+        pool, want, table, mesh=None, budget=8, overprovision=1,
+        active_budget=jnp.int32(5)))
+    exp = np.asarray(ref.pull_pages_ref(pool, want, table, pages_per_node=32))
+    np.testing.assert_allclose(got[0, :15], exp[0, :15])
+    np.testing.assert_array_equal(got[0, 15:], np.zeros_like(exp[0, 15:]))
+
+
+# ---------------------------------------------------------------------------
+# Route programs (runtime circuit schedules)
+# ---------------------------------------------------------------------------
+
+def test_route_program_epoch_counts():
+    for n in (2, 3, 4, 5, 8, 16):
+        uni = steering.unidirectional_program(n)
+        bi = steering.bidirectional_program(n)
+        uni.validate()
+        bi.validate()
+        assert uni.num_epochs() == n - 1
+        assert bi.num_epochs() == n // 2
+        assert list(uni.live_distances()) == list(range(1, n))
+        assert list(bi.live_distances()) == list(range(1, n))
+
+
+def test_route_program_is_runtime_pytree():
+    """Programs are registered pytrees whose leaves are all arrays, so they
+    can flow through jit without becoming static (no retrace on swap)."""
+    p = steering.bidirectional_program(8)
+    leaves = jax.tree.leaves(p)
+    assert len(leaves) == 3
+    assert all(hasattr(l, "dtype") for l in leaves)
+    # identical treedef across program variants -> same jit cache entry
+    t1 = jax.tree.structure(steering.unidirectional_program(8))
+    t2 = jax.tree.structure(p)
+    assert t1 == t2
+
+
+def test_bidirectional_offsets_shortest_way():
+    p = steering.bidirectional_program(8)
+    off = np.asarray(p.offsets)
+    np.testing.assert_array_equal(off, [1, 2, 3, 4, -3, -2, -1])
+    assert p.hops().max() == 4
+
+
+def test_pruned_program_compacts_epochs():
+    base = steering.bidirectional_program(8)
+    p = steering.pruned_program(base, [2, 5, 7])
+    p.validate()
+    assert list(p.live_distances()) == [2, 5, 7]
+    # cw: {+2}; ccw: {-3 (d=5), -1 (d=7)} -> 2 epochs, shortest first
+    assert p.num_epochs() == 2
+    ep = np.asarray(p.epoch)
+    assert ep[6] == 0 and ep[4] == 1 and ep[1] == 0  # d=7, d=5, d=2
+    with pytest.raises(ValueError):
+        steering.pruned_program(base, [8])
+
+
+def test_link_avoiding_program_directions():
+    for bad in (+1, -1):
+        p = steering.link_avoiding_program(8, bad)
+        p.validate()
+        off = np.asarray(p.offsets)
+        assert (np.sign(off) == -bad).all()
+    with pytest.raises(ValueError):
+        steering.link_avoiding_program(8, 0)
+
+
+def test_route_program_validate_rejects_incongruent():
+    p = steering.unidirectional_program(4)
+    bad = steering.RouteProgram(offsets=jnp.asarray([1, 3, 3], jnp.int32),
+                                epoch=p.epoch, live=p.live)
+    with pytest.raises(ValueError):
+        bad.validate()
+
+
+def test_bridge_rejects_wrong_sized_program():
+    with pytest.raises(ValueError):
+        bridge._resolve_program(steering.unidirectional_program(4), 8)
+
+
+def test_ref_oracle_honours_programs():
+    """Requests whose ring distance has no wired circuit come back zeroed."""
+    n, ppn = 4, 8
+    pool = make_pool_np(n * ppn, 4)
+    table = MemPortTable.striped(12, n, ppn)
+    want = jnp.asarray(np.tile(np.arange(12, dtype=np.int32), (n, 1)))
+    full = np.asarray(ref.pull_pages_ref(pool, want, table,
+                                         pages_per_node=ppn))
+    pruned = steering.pruned_program(steering.bidirectional_program(n), [1, 3])
+    got = np.asarray(ref.pull_pages_ref(pool, want, table,
+                                        pages_per_node=ppn, program=pruned))
+    home = np.asarray(table.home)
+    for node in range(n):
+        for r in range(12):
+            d = (home[r] - node) % n
+            if d in (0, 1, 3):
+                np.testing.assert_allclose(got[node, r], full[node, r])
+            else:
+                np.testing.assert_array_equal(got[node, r], 0.0)
+
+
+def test_loopback_honours_program():
+    """The n == 1 fast path applies the same program semantics (and oracle)
+    as the N-device path: unwired logical distances drop their pages."""
+    tn, ppn = 4, 8
+    pool = make_pool_np(tn * ppn, 4)
+    table = MemPortTable.striped(12, tn, ppn)
+    want = jnp.asarray(np.arange(12, dtype=np.int32)[None, :])
+    prog = steering.pruned_program(steering.bidirectional_program(tn), [1, 3])
+    got = bridge.pull_pages(pool, want, table, mesh=None, budget=4,
+                            table_nodes=tn, program=prog)
+    exp = ref.pull_pages_ref(pool, want, table, pages_per_node=ppn,
+                             program=prog)
+    np.testing.assert_allclose(got, exp)
+    full = np.asarray(ref.pull_pages_ref(pool, want, table,
+                                         pages_per_node=ppn))
+    assert not np.array_equal(np.asarray(got), full)  # distance 2 dropped
+    # push path: unwired writes are dropped too
+    payload = jnp.ones((1, 12, 4), jnp.float32)
+    got_p = bridge.push_pages(pool, want, payload, table, mesh=None,
+                              budget=4, table_nodes=tn, program=prog)
+    exp_p = ref.push_pages_ref(pool, want, payload, table,
+                               pages_per_node=ppn, program=prog)
+    np.testing.assert_allclose(got_p, exp_p)
+    # wrong-sized programs are rejected on the loopback path as well
+    with pytest.raises(ValueError):
+        bridge.pull_pages(pool, want, table, mesh=None, budget=4,
+                          table_nodes=tn,
+                          program=steering.bidirectional_program(8))
+
+
+def test_control_plane_route_program():
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=64)
+    cp.allocate(8, policy="affinity", affinity=2)
+    # node-0 requesters only reach distance 2
+    p = cp.route_program(requesters=[0])
+    assert list(p.live_distances()) == [2]
+    # all requesters: distances {2-j mod 4} = {1, 2, 3}
+    assert list(cp.route_program().live_distances()) == [1, 2, 3]
+    # link failure reroutes everything the other way round
+    cp.report_link_failure(+1)
+    p = cp.route_program()
+    off = np.asarray(p.offsets)
+    assert (off[np.asarray(p.live)] < 0).all()
+    cp.clear_link_failure()
+    p = cp.route_program(prune=False)
+    assert p.num_epochs() == 2  # bidirectional again: ceil(4/2)
+
+
+def test_perfmodel_route_costs():
+    uni = steering.unidirectional_program(8)
+    bi = steering.bidirectional_program(8)
+    s_uni = perfmodel.route_epoch_stats(uni)
+    s_bi = perfmodel.route_epoch_stats(bi)
+    assert s_uni["num_epochs"] == 7 and s_bi["num_epochs"] == 4
+    assert s_bi["total_hops"] < s_uni["total_hops"]
+    for eb in (True, False):
+        assert (perfmodel.predict_round_latency_us(bi, 1 << 18, 8,
+                                                   edge_buffer=eb)
+                < perfmodel.predict_round_latency_us(uni, 1 << 18, 8,
+                                                     edge_buffer=eb))
+    pruned = steering.pruned_program(bi, [2])
+    assert perfmodel.route_epoch_stats(pruned)["live_slots"] == 1
+
+
+# ---------------------------------------------------------------------------
+# ControlPlane fail_node / revive_node interplay
+# ---------------------------------------------------------------------------
+
+def test_fail_node_quarantines_slots():
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=64)
+    cp.allocate(16, policy="striped")
+    cp.fail_node(1)
+    assert cp.free_slots(1) == 0  # quarantined, not reusable
+    # new allocations can never land on the dead node
+    region = cp.allocate(8, policy="hashed")
+    homes = np.asarray(cp.table().home)[region.page_ids]
+    assert not np.any(homes == 1)
+
+
+def test_revive_then_second_failure_rehomes_correctly():
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=64)
+    cp.allocate(12, policy="striped")
+    cp.fail_node(1)
+    cp.revive_node(1)
+    # revived node's free list excludes nothing (its pages all moved away)
+    assert cp.free_slots(1) == 8
+    cp.allocate(4, policy="affinity", affinity=1)
+    plan = cp.fail_node(1)
+    assert len(plan) == 4
+    assert all(s.old_home == 1 and s.new_home != 1 for s in plan)
+    home, slot = np.asarray(cp._home), np.asarray(cp._slot)
+    mapped = home != FREE
+    # no slot double-booked after the fail -> revive -> fail cycle
+    pairs = set(zip(home[mapped].tolist(), slot[mapped].tolist()))
+    assert len(pairs) == mapped.sum()
+    assert not np.any(home == 1)
+
+
+def test_revive_preserves_occupied_slots():
+    """Slots that still appear in the table are not handed back as free."""
+    cp = ControlPlane(num_nodes=2, pages_per_node=6, num_logical=8)
+    cp.allocate(2, policy="affinity", affinity=1)
+    cp.fail_node(1)          # pages rehomed to node 0
+    cp.revive_node(1)
+    assert cp.free_slots(1) == 6
+    cp.allocate(3, policy="affinity", affinity=1)
+    cp.fail_node(0)          # node 0's pages (incl. migrated) move to node 1
+    home = np.asarray(cp.table().home)
+    mapped = home != FREE
+    assert (home[mapped] == 1).all()
+
+
+def test_migration_plan_roundtrips_through_table():
+    """Applying the emitted MigrationSteps to the *old* table reproduces the
+    control plane's new table exactly (the plan is a complete delta)."""
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=64)
+    cp.allocate(16, policy="striped")
+    old_table = cp.table()
+    plan = cp.fail_node(2)
+    ids = np.asarray([s.page_id for s in plan])
+    homes = np.asarray([s.new_home for s in plan])
+    slots = np.asarray([s.new_slot for s in plan])
+    rebuilt = old_table.program(ids, homes, slots)
+    new_table = cp.table()
+    np.testing.assert_array_equal(np.asarray(rebuilt.home),
+                                  np.asarray(new_table.home))
+    np.testing.assert_array_equal(np.asarray(rebuilt.slot),
+                                  np.asarray(new_table.slot))
+    # and the old coordinates in the plan match the old table
+    for s in plan:
+        assert int(old_table.home[s.page_id]) == s.old_home
+        assert int(old_table.slot[s.page_id]) == s.old_slot

@@ -1,0 +1,96 @@
+"""Randomized property tests for the bridge.
+
+Split out of test_bridge.py so the deterministic suite is isolated from the
+property-testing machinery: real hypothesis when installed (pinned in
+requirements-dev.txt), the seeded fallback in hypofallback.py otherwise.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal environments
+    from hypofallback import given, settings, st
+
+from repro.core import bridge, ref, steering
+from repro.core.memport import FREE, MemPortTable
+from repro.core.control_plane import ControlPlane
+
+
+def make_pool_np(num_slots, page, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(num_slots, page)).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    num_logical=st.integers(1, 24),
+    budget=st.integers(1, 9),
+    seed=st.integers(0, 10_000),
+)
+def test_pull_property_random_requests(num_logical, budget, seed):
+    """Any request list (dups, FREE holes, unmapped pages) matches the oracle."""
+    rng = np.random.default_rng(seed)
+    pool = make_pool_np(32, 4, seed)
+    table = MemPortTable.striped(num_logical, 1, 32)
+    r = int(rng.integers(1, 16))
+    want = rng.integers(-1, num_logical, size=(1, r)).astype(np.int32)
+    got = bridge.pull_pages(pool, jnp.asarray(want), table,
+                            mesh=None, budget=budget)
+    exp = ref.pull_pages_ref(pool, jnp.asarray(want), table, pages_per_node=32)
+    np.testing.assert_allclose(got, exp)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), nodes=st.integers(1, 6))
+def test_control_plane_invariants(seed, nodes):
+    """No slot double-booked; every mapped page has a live home."""
+    rng = np.random.default_rng(seed)
+    cp = ControlPlane(num_nodes=nodes, pages_per_node=8, num_logical=64)
+    regions = []
+    # Keep total allocation at <= half capacity so a failed node's pages
+    # always fit on survivors.
+    remaining = nodes * 8 // 2
+    for _ in range(int(rng.integers(1, 4))):
+        n = int(rng.integers(1, 8))
+        if n > remaining:
+            break
+        remaining -= n
+        regions.append(cp.allocate(n, policy=str(rng.choice(
+            ["striped", "hashed"]))))
+    if nodes > 1 and rng.random() < 0.5:
+        cp.fail_node(int(rng.integers(0, nodes)))
+    home, slot = np.asarray(cp._home), np.asarray(cp._slot)
+    mapped = home != FREE
+    pairs = set(zip(home[mapped].tolist(), slot[mapped].tolist()))
+    assert len(pairs) == mapped.sum(), "slot double-booked"
+    for h in home[mapped]:
+        assert cp.nodes[h].alive, "page homed on dead node"
+
+
+@settings(max_examples=20, deadline=None)
+@given(num_nodes=st.integers(2, 12), seed=st.integers(0, 10_000))
+def test_route_program_properties(num_nodes, seed):
+    """Random prunings stay congruent, cover exactly what they keep, and
+    never use more epochs than the base program."""
+    rng = np.random.default_rng(seed)
+    base = (steering.bidirectional_program(num_nodes)
+            if rng.random() < 0.5 else
+            steering.unidirectional_program(num_nodes,
+                                            direction=1 if rng.random() < 0.5
+                                            else -1))
+    keep = [d for d in range(1, num_nodes) if rng.random() < 0.6]
+    p = steering.pruned_program(base, keep)
+    p.validate()
+    assert list(p.live_distances()) == sorted(keep)
+    assert p.num_epochs() <= base.num_epochs()
+    live = np.asarray(p.live)
+    ep = np.asarray(p.epoch)
+    off = np.asarray(p.offsets)
+    # dead slots fully cleared
+    assert (ep[~live] == -1).all() and (off[~live] == 0).all()
+    # at most one circuit per direction per epoch
+    for e in set(ep[live].tolist()):
+        at_e = live & (ep == e)
+        assert (off[at_e] > 0).sum() <= 1
+        assert (off[at_e] < 0).sum() <= 1

@@ -6,7 +6,10 @@ sweep it adversarially against the dense oracle.
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal environments
+    from hypofallback import given, settings, st
 
 from repro.models import flash
 
