@@ -6,15 +6,24 @@ bridge datapath (translation -> steering -> epochs) in ops/epochs per pull,
 which is the TPU-side analogue of the cycle count.
 
 Also compares route-program schedule variants (unidirectional /
-bidirectional / pruned): circuit epochs, wired slots, bytes per round and
-the analytical round latency from ``repro.core.perfmodel``.
+bidirectional / pruned / load_balanced): circuit epochs, wired slots, bytes
+per round and the analytical round latency from ``repro.core.perfmodel``.
+The ``load_balanced`` variant closes the software-defined loop: a skewed
+traffic scenario runs through the bridge with ``collect_telemetry=True``
+(on a real 8-way mem ring when 8 devices exist, through the telemetry
+oracle otherwise), the measured distance loads compile a load-balanced
+program, and its predicted round latency under the *measured* loads is
+recorded against the static bidirectional split's.
 
 Emits CSV rows: name,us_per_call,derived — and writes the same data
 machine-readably to ``BENCH_bridge.json`` at the repo root so the perf
-trajectory is tracked across PRs.
+trajectory is tracked across PRs (schema checked by
+``benchmarks/validate_bench.py`` in CI; ``--quick`` trims timing reps for
+the smoke job).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import time
@@ -23,8 +32,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bridge, perfmodel, steering
+from repro.core import bridge, perfmodel, ref, steering
+from repro.core.control_plane import ControlPlane
 from repro.core.memport import MemPortTable
+from repro.telemetry import TelemetryAggregator
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
 
@@ -34,6 +45,11 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json
 ROUTE_NODES = 8
 ROUTE_PAGE_BYTES = 1 << 18
 ROUTE_BUDGET = 8
+
+# Skewed-traffic scenario: every requester hammers its three nearest
+# clockwise neighbours 6:3:2 (hotspot locality) — the shape that makes the
+# static min(d, N-d) split pile every live circuit onto one direction.
+SKEW_PAGES = {1: 6, 2: 3, 3: 2}
 
 
 def route_variants() -> dict[str, steering.RouteProgram]:
@@ -45,7 +61,7 @@ def route_variants() -> dict[str, steering.RouteProgram]:
     }
 
 
-def measure_sw_pull_us() -> float:
+def measure_sw_pull_us(reps: int = 50) -> float:
     """One-page pull latency through the loopback bridge (jitted)."""
     table = MemPortTable.striped(16, 4, 4)
     pool = jnp.asarray(np.random.default_rng(0).normal(
@@ -55,14 +71,74 @@ def measure_sw_pull_us() -> float:
         p, w, t, mesh=None, budget=1, table_nodes=4))
     jax.block_until_ready(pull(pool, want, table))  # compile
     t0 = time.perf_counter()
-    reps = 50
     for _ in range(reps):
         r = pull(pool, want, table)
     jax.block_until_ready(r)
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def rows() -> list[str]:
+def skewed_traffic_scenario() -> tuple[dict, steering.RouteProgram]:
+    """Measure a skewed matrix, recompile, compare predicted latencies.
+
+    Returns ``(measured, program)``: the ``measured`` section of
+    BENCH_bridge.json — per-distance measured pages per round, the
+    static-bidirectional vs load-balanced predicted round latency under
+    those loads, and how the telemetry was captured (real 8-device ring or
+    oracle counters) — plus the telemetry-compiled load-balanced program.
+    """
+    n, ppn = ROUTE_NODES, 16
+    cp = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=n * ppn)
+    cp.allocate(n * ppn, policy="striped")   # page p -> home p % n
+    table = cp.table()
+    # Node i requests SKEW_PAGES[d] pages homed at (i + d) % n.
+    want_rows = []
+    for i in range(n):
+        row = []
+        for d, count in SKEW_PAGES.items():
+            h = (i + d) % n
+            row += [h + n * k for k in range(count)]   # striped: home = id % n
+        want_rows.append(row)
+    want = np.asarray(want_rows, np.int32)
+    rounds = steering.num_rounds(want.shape[1], ROUTE_BUDGET)
+
+    source = "oracle"
+    if jax.device_count() >= n:
+        source = f"{n}-device ring"
+        mesh = jax.make_mesh((n,), ("data",))
+        pool = jnp.zeros((n * ppn, 4), jnp.float32)
+        with bridge.use_mesh(mesh):
+            _, telem = bridge.pull_pages(
+                pool, jnp.asarray(want), table, mesh=mesh,
+                budget=ROUTE_BUDGET, collect_telemetry=True)
+    else:
+        telem = ref.expected_transfer_telemetry(
+            want, table, steering.bidirectional_program(n), num_nodes=n,
+            budget=ROUTE_BUDGET)
+
+    agg = TelemetryAggregator(n, page_bytes=ROUTE_PAGE_BYTES)
+    agg.update(telem)
+    lb = cp.route_program(telemetry=agg)
+    lb.validate()
+    # Measured pages per slot per requester-round: what one bridge round
+    # actually moves under this matrix.
+    slot_pages = agg.distance_pages() / (n * rounds)
+    bi = steering.bidirectional_program(n)
+    lat_bi = perfmodel.predict_round_latency_us(
+        bi, ROUTE_PAGE_BYTES, ROUTE_BUDGET, slot_pages=slot_pages)
+    lat_lb = perfmodel.predict_round_latency_us(
+        lb, ROUTE_PAGE_BYTES, ROUTE_BUDGET, slot_pages=slot_pages)
+    return {
+        "source": source,
+        "skew_pages": {str(d): c for d, c in SKEW_PAGES.items()},
+        "distance_pages_per_round": [round(float(x), 3) for x in slot_pages],
+        "spilled": int(np.asarray(telem.spilled).sum()),
+        "pruned": int(np.asarray(telem.pruned).sum()),
+        "static_bidirectional_us": round(lat_bi, 2),
+        "load_balanced_us": round(lat_lb, 2),
+    }, lb
+
+
+def rows(quick: bool = False) -> list[str]:
     out = []
     total = sum(perfmodel.RTT_PIPELINE_CYCLES.values())
     for stage, cyc in perfmodel.RTT_PIPELINE_CYCLES.items():
@@ -72,7 +148,7 @@ def rows() -> list[str]:
     out.append(f"rtt_total,0,{total}cyc={total/perfmodel.PAPER_HW.clock_mhz*1e3:.0f}ns"
                f" (paper: 134cyc=800ns)")
 
-    us = measure_sw_pull_us()
+    us = measure_sw_pull_us(reps=5 if quick else 50)
     out.append(f"bridge_sw_pull_1page,{us:.1f},loopback_jitted")
 
     # modelled TPU pull-mode page latency (1 hop, 256 KiB page)
@@ -87,7 +163,11 @@ def rows() -> list[str]:
                               "num_nodes": ROUTE_NODES,
                               "page_bytes": ROUTE_PAGE_BYTES,
                               "budget": ROUTE_BUDGET, "variants": {}}
-    for name, prog in route_variants().items():
+    # the measured closed loop: skew -> telemetry -> load-balanced program
+    measured, lb_prog = skewed_traffic_scenario()
+    variants = dict(route_variants())
+    variants["load_balanced"] = lb_prog
+    for name, prog in variants.items():
         stats = perfmodel.route_epoch_stats(prog)
         model_us = perfmodel.predict_round_latency_us(
             prog, ROUTE_PAGE_BYTES, ROUTE_BUDGET)
@@ -106,15 +186,23 @@ def rows() -> list[str]:
             "model_round_us": round(model_us, 2),
             "model_round_us_bufferless": round(model_us_nobuf, 2),
         }
+    bench["measured"] = measured
+    out.append(
+        f"bridge_route_measured,0,source={measured['source']}"
+        f" static_bi={measured['static_bidirectional_us']}us"
+        f" load_balanced={measured['load_balanced_us']}us")
     BENCH_JSON.write_text(json.dumps(bench, indent=2) + "\n")
     out.append(f"bridge_route_json,0,{BENCH_JSON.name}")
     return out
 
 
-def run() -> list[str]:
-    return rows()
+def run(quick: bool = False) -> list[str]:
+    return rows(quick=quick)
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timing reps (CI smoke job)")
+    for r in run(quick=ap.parse_args().quick):
         print(r)

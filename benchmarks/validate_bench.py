@@ -1,0 +1,65 @@
+"""Schema + acceptance check for BENCH_bridge.json (CI smoke job).
+
+Run after ``benchmarks/bridge_latency.py``: validates that the emitted
+perf record has the expected shape (so the cross-PR trajectory stays
+machine-readable) and that the closed control loop held — the
+telemetry-compiled load-balanced program predicts a strictly lower round
+latency than the static bidirectional split under the measured skew.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
+
+TOP_KEYS = {"sw_pull_1page_us", "num_nodes", "page_bytes", "budget",
+            "variants", "measured"}
+VARIANTS = {"unidirectional", "bidirectional", "pruned", "load_balanced"}
+VARIANT_KEYS = {"epochs", "live_slots", "total_hops", "bytes_per_round",
+                "model_round_us", "model_round_us_bufferless"}
+MEASURED_KEYS = {"source", "skew_pages", "distance_pages_per_round",
+                 "spilled", "pruned", "static_bidirectional_us",
+                 "load_balanced_us"}
+
+
+def fail(msg: str) -> None:
+    print(f"BENCH_bridge.json invalid: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    if not BENCH_JSON.exists():
+        fail(f"{BENCH_JSON} missing (run benchmarks/bridge_latency.py)")
+    bench = json.loads(BENCH_JSON.read_text())
+    missing = TOP_KEYS - bench.keys()
+    if missing:
+        fail(f"missing top-level keys {sorted(missing)}")
+    if not VARIANTS <= bench["variants"].keys():
+        fail(f"missing variants {sorted(VARIANTS - bench['variants'].keys())}")
+    for name, v in bench["variants"].items():
+        gone = VARIANT_KEYS - v.keys()
+        if gone:
+            fail(f"variant {name!r} missing keys {sorted(gone)}")
+        bad = [k for k in VARIANT_KEYS if not isinstance(v[k], (int, float))]
+        if bad:
+            fail(f"variant {name!r} non-numeric keys {bad}")
+    m = bench["measured"]
+    gone = MEASURED_KEYS - m.keys()
+    if gone:
+        fail(f"measured section missing keys {sorted(gone)}")
+    if len(m["distance_pages_per_round"]) != bench["num_nodes"] - 1:
+        fail("distance histogram length != N-1")
+    # The acceptance bar: measured steering strictly beats static routing.
+    if not m["load_balanced_us"] < m["static_bidirectional_us"]:
+        fail(f"load-balanced ({m['load_balanced_us']}us) not below static "
+             f"bidirectional ({m['static_bidirectional_us']}us) under the "
+             f"measured skew")
+    print(f"BENCH_bridge.json ok: {len(bench['variants'])} variants, "
+          f"measured {m['source']}: static {m['static_bidirectional_us']}us "
+          f"-> load-balanced {m['load_balanced_us']}us")
+
+
+if __name__ == "__main__":
+    main()

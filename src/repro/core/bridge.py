@@ -30,7 +30,12 @@ This is the paper's datapath (Fig. 1) mapped onto a TPU pod:
   bufferless bridge (a conservative serialization: it ignores the program's
   epoch pairing, which only affects the analytical cost model);
 * *lossless, no ack/retx* — ICI collectives are lossless and deterministic,
-  so the assumption holds natively.
+  so the assumption holds natively;
+* *in-band telemetry* — ``collect_telemetry=True`` additionally returns a
+  :class:`~repro.telemetry.counters.BridgeTelemetry` of per-slot served
+  counts, spills, pruned drops and a traffic-matrix row, computed as masked
+  integer sums with static shapes (swapping programs with collection on
+  never retraces); the control plane closes the loop on it.
 
 All functions exist in two forms: a ``*_local`` body to be used inside
 ``shard_map`` (N nodes on the mem axis) and a reference oracle in
@@ -49,6 +54,7 @@ from repro.core.memport import FREE, MemPortTable
 from repro.core import ref as _ref
 from repro.core import steering
 from repro.core.steering import RouteProgram
+from repro.telemetry import counters as _telemetry
 
 
 def shard_map(f, mesh, in_specs, out_specs, mem_axis=None):
@@ -192,16 +198,28 @@ def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
 
 
 def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
-                table: MemPortTable, program: RouteProgram, *, axis: str,
-                num_nodes: int, budget: int, rounds: int) -> jax.Array:
-    """Write payload pages to their homes (single-writer contract)."""
+                table: MemPortTable, active_budget: jax.Array,
+                program: RouteProgram, *, axis: str, num_nodes: int,
+                budget: int, rounds: int) -> jax.Array:
+    """Write payload pages to their homes (single-writer contract).
+
+    Rate-limiter parity with :func:`_pull_local`: each round writes only the
+    first ``active_budget`` lanes and the pointer advances by the same
+    amount, so requests past ``rounds * active_budget`` spill off the end of
+    the (overprovisioned) round budget and are dropped.
+    """
     my = jax.lax.axis_index(axis)
     page_shape = pool_local.shape[1:]
-    ids = dest_ids.reshape(rounds, budget)
-    chunks = payload.reshape(rounds, budget, *page_shape)
+    ids = dest_ids.reshape(-1)
+    pay = payload.reshape((-1,) + page_shape)
 
-    def body(pool, xs):
-        sub, data = xs
+    def body(carry, _):
+        pool, ptr = carry
+        sub = jax.lax.dynamic_slice(ids, (ptr,), (budget,))
+        data = jax.lax.dynamic_slice(
+            pay, (ptr,) + (0,) * len(page_shape), (budget,) + page_shape)
+        lane = jnp.arange(budget)
+        sub = jnp.where(lane < active_budget, sub, FREE)
         home, slot = table.translate(sub)
         dist = steering.ring_distance(home, my, num_nodes)
         pool = _scatter_local(pool, jnp.where(dist == 0, slot, FREE), data)
@@ -211,11 +229,13 @@ def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
             slot_at_home = jax.lax.ppermute(req, axis, perm=fwd)
             data_at_home = jax.lax.ppermute(data, axis, perm=fwd)
             pool = _scatter_local(pool, slot_at_home, data_at_home)
-        return pool, None
+        return (pool, ptr + active_budget), None
 
     if rounds == 0:
         return pool_local
-    pool_local, _ = jax.lax.scan(body, pool_local, (ids, chunks))
+    ptr0 = _pvary(jnp.int32(0), axis)
+    (pool_local, _), _ = jax.lax.scan(body, (pool_local, ptr0), None,
+                                      length=rounds)
     return pool_local
 
 
@@ -241,6 +261,33 @@ def _resolve_program(program: Optional[RouteProgram],
     return program
 
 
+def _loopback_telemetry(ids: jax.Array, table: MemPortTable,
+                        program: Optional[RouteProgram], tn: int,
+                        active_budget, budget: int,
+                        rounds: int) -> _telemetry.BridgeTelemetry:
+    """Telemetry for the 1-device path: row i of ``ids`` is logical
+    requester i; the whole batch shares ``active_budget``'s first element
+    (mirroring the loopback rate limiter)."""
+    prog = _resolve_program(program, tn)
+    ab = jnp.clip(jnp.asarray(active_budget).reshape(-1)[0], 0, budget)
+    rows = ids.reshape((-1, ids.shape[-1]))
+
+    def per_row(row, my):
+        return _telemetry.transfer_telemetry(
+            row, table, prog, ab, my=my, num_nodes=tn, budget=budget,
+            rounds=rounds)
+
+    return jax.vmap(per_row)(rows, jnp.arange(rows.shape[0]))
+
+
+def _telemetry_specs(mem_axis: str) -> _telemetry.BridgeTelemetry:
+    """shard_map out_specs for per-node telemetry (leading node dim)."""
+    return _telemetry.BridgeTelemetry(
+        slot_served=P(mem_axis, None), loopback_served=P(mem_axis),
+        spilled=P(mem_axis), pruned=P(mem_axis), traffic=P(mem_axis, None),
+        epoch_cw=P(mem_axis, None), epoch_ccw=P(mem_axis, None))
+
+
 def _loopback_mask(flat: jax.Array, ids: jax.Array, table: MemPortTable,
                    program: Optional[RouteProgram], tn: int) -> jax.Array:
     """Apply a route program on the 1-device (loopback) fast path.
@@ -264,7 +311,7 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
                overprovision: int = 1,
                active_budget: Optional[jax.Array] = None,
                program: Optional[RouteProgram] = None,
-               table_nodes: int = 0) -> jax.Array:
+               table_nodes: int = 0, collect_telemetry: bool = False):
     """Pull logical pages through the bridge.
 
     Args:
@@ -279,8 +326,15 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
       table_nodes: logical node count of the table (0 = mesh size).  On a
         1-device mesh the pool may still model several logical memory nodes
         (loopback circuit); their slots flatten node-major.
+      collect_telemetry: also return a per-node
+        :class:`~repro.telemetry.counters.BridgeTelemetry` of what this
+        transfer served/spilled/pruned.  The counters have static shapes, so
+        with collection on, swapping programs / tables / budgets still never
+        retraces (the flag itself is static: toggling it changes the output
+        structure).
     Returns:
-      [num_nodes, R, *page_shape] gathered pages, sharded on dim 0.
+      [num_nodes, R, *page_shape] gathered pages, sharded on dim 0 — or
+      ``(pages, telemetry)`` when ``collect_telemetry`` is set.
     """
     n = _mem_axis_size(mesh, mem_axis)
     r = want.shape[-1]
@@ -306,7 +360,14 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         flat = jnp.where(served, flat, FREE)
         flat = _loopback_mask(flat, want, table, program, tn)
         out = _gather_local(pool_pages, flat)
-        return out.reshape(want.shape + pool_pages.shape[1:])[..., :r, :]
+        out = out.reshape(want.shape + pool_pages.shape[1:])
+        # Trim the round padding on the *request* dim (pages may be
+        # multi-dimensional, so slice by position, not from the back).
+        out = out[(slice(None),) * (want.ndim - 1) + (slice(0, r),)]
+        if collect_telemetry:
+            return out, _loopback_telemetry(want, table, program, tn,
+                                            active_budget, budget, rounds)
+        return out
     if table_nodes and table_nodes != n:
         raise ValueError(f"table has {table_nodes} nodes but mem axis "
                          f"{mem_axis!r} has {n}")
@@ -317,36 +378,55 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
     body = functools.partial(
         _pull_local, axis=mem_axis, num_nodes=n, budget=budget,
         rounds=rounds, edge_buffer=edge_buffer)
+    ab_vec = jnp.clip(jnp.broadcast_to(active_budget, (n,)), 0, budget)
 
     def mapped(pool, want_l, table_l, ab, prog):
         out = body(pool, want_l[0], table_l, ab[0], prog)
-        return out[None]
+        if not collect_telemetry:
+            return out[None]
+        telem = _telemetry.transfer_telemetry(
+            want_l[0], table_l, prog, ab[0],
+            my=jax.lax.axis_index(mem_axis), num_nodes=n, budget=budget,
+            rounds=rounds)
+        return out[None], jax.tree.map(lambda x: x[None], telem)
 
+    out_specs = ((out_spec, _telemetry_specs(mem_axis))
+                 if collect_telemetry else out_spec)
     out = shard_map(
         mapped, mesh,
         in_specs=(pages_spec, P(mem_axis, None), P(), P(mem_axis), P()),
-        out_specs=out_spec, mem_axis=mem_axis,
-    )(pool_pages, want, table, jnp.broadcast_to(active_budget, (n,)), program)
+        out_specs=out_specs, mem_axis=mem_axis,
+    )(pool_pages, want, table, ab_vec, program)
+    if collect_telemetry:
+        return out[0][:, :r], out[1]
     return out[:, :r]
 
 
 def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
                table: MemPortTable, *, mesh: Optional[Mesh],
                mem_axis: str = "data", budget: int = 8,
+               overprovision: int = 1,
+               active_budget: Optional[jax.Array] = None,
                program: Optional[RouteProgram] = None,
-               table_nodes: int = 0) -> jax.Array:
+               table_nodes: int = 0, collect_telemetry: bool = False):
     """Write pages to their homes through the bridge (single-writer pages).
 
     Args:
       pool_pages: as in :func:`pull_pages` (returned updated).
       dest: [num_nodes, R] logical page ids each node writes.
       payload: [num_nodes, R, *page_shape].
+      active_budget: runtime rate limiter, same spill semantics as
+        :func:`pull_pages`: each round writes only the first
+        ``active_budget`` lanes, writes past ``rounds * active_budget``
+        spill off the (overprovisioned) round budget and are dropped.
       program: runtime circuit schedule (default: full bidirectional
         coverage), same semantics as in :func:`pull_pages`.
+      collect_telemetry: also return per-node write-path counters
+        (:class:`~repro.telemetry.counters.BridgeTelemetry`).
     """
     n = _mem_axis_size(mesh, mem_axis)
     r = dest.shape[-1]
-    rounds = steering.num_rounds(r, budget)
+    rounds = steering.num_rounds(r, budget, overprovision)
     pad = rounds * budget - r
     if pad:
         dest = jnp.concatenate(
@@ -354,15 +434,26 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
         zeros = jnp.zeros(payload.shape[:1] + (pad,) + payload.shape[2:],
                           payload.dtype)
         payload = jnp.concatenate([payload, zeros], 1)
+    if active_budget is None:
+        active_budget = jnp.int32(budget)
 
     if n == 1:
         tn = table_nodes or 1
         ppn = pool_pages.shape[0] // tn
         home, slot = table.translate(dest.reshape(-1))
         flat = jnp.where(home >= 0, home * ppn + slot, FREE)
+        # Rate-limiter parity with the N-device path (see pull_pages).
+        ab = jnp.clip(jnp.asarray(active_budget).reshape(-1)[0], 0, budget)
+        idx = jnp.arange(dest.shape[-1])
+        served = jnp.broadcast_to(idx < rounds * ab, dest.shape).reshape(-1)
+        flat = jnp.where(served, flat, FREE)
         flat = _loopback_mask(flat, dest, table, program, tn)
-        return _scatter_local(
+        out = _scatter_local(
             pool_pages, flat, payload.reshape((-1,) + payload.shape[2:]))
+        if collect_telemetry:
+            return out, _loopback_telemetry(dest, table, program, tn,
+                                            active_budget, budget, rounds)
+        return out
     if table_nodes and table_nodes != n:
         raise ValueError(f"table has {table_nodes} nodes but mem axis "
                          f"{mem_axis!r} has {n}")
@@ -371,13 +462,24 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
     pages_spec = P(mem_axis, *([None] * (pool_pages.ndim - 1)))
     body = functools.partial(_push_local, axis=mem_axis, num_nodes=n,
                              budget=budget, rounds=rounds)
+    ab_vec = jnp.clip(jnp.broadcast_to(active_budget, (n,)), 0, budget)
 
-    def mapped(pool, dest_l, pay_l, table_l, prog):
-        return body(pool, dest_l[0], pay_l[0], table_l, prog)
+    def mapped(pool, dest_l, pay_l, table_l, ab, prog):
+        out = body(pool, dest_l[0], pay_l[0], table_l, ab[0], prog)
+        if not collect_telemetry:
+            return out
+        telem = _telemetry.transfer_telemetry(
+            dest_l[0], table_l, prog, ab[0],
+            my=jax.lax.axis_index(mem_axis), num_nodes=n, budget=budget,
+            rounds=rounds)
+        return out, jax.tree.map(lambda x: x[None], telem)
 
+    out_specs = ((pages_spec, _telemetry_specs(mem_axis))
+                 if collect_telemetry else pages_spec)
     return shard_map(
         mapped, mesh,
         in_specs=(pages_spec, P(mem_axis, None),
-                  P(mem_axis, None, *([None] * (payload.ndim - 2))), P(), P()),
-        out_specs=pages_spec, mem_axis=mem_axis,
-    )(pool_pages, dest, payload, table, program)
+                  P(mem_axis, None, *([None] * (payload.ndim - 2))), P(),
+                  P(mem_axis), P()),
+        out_specs=out_specs, mem_axis=mem_axis,
+    )(pool_pages, dest, payload, table, ab_vec, program)

@@ -16,6 +16,22 @@ tools":
   placement table — bidirectional by default, pruned to the ring distances
   that actually carry traffic, rerouted around a failed ring link reported
   by ``repro.ft``.
+
+The **closed control loop** (measure -> aggregate -> recompile): the
+datapath's in-band counters (``pull_pages`` / ``push_pages`` with
+``collect_telemetry=True``) fold into a
+:class:`~repro.telemetry.TelemetryAggregator`, and every policy here can
+consume the aggregate instead of steering blind —
+:meth:`ControlPlane.route_program` ``(telemetry=...)`` compiles a
+load-balanced bidirectional program (each live distance on the direction
+minimizing the bottleneck direction's measured bytes) pruned from
+*measured* traffic instead of placement reachability;
+:meth:`ControlPlane.rate_limits` ``(telemetry=...)`` restores throttled
+budgets when observed spill rates show the limiter dropping real work; and
+:meth:`ControlPlane.affinity_migration` re-homes hot pages toward their
+dominant requester as :class:`MigrationStep` plans.  Every output stays a
+*runtime input* to the jitted datapath: one iteration of the loop never
+recompiles anything.
 """
 from __future__ import annotations
 
@@ -27,6 +43,7 @@ import numpy as np
 
 from repro.core import steering
 from repro.core.memport import FREE, MemPortTable
+from repro.telemetry.aggregate import dominant_requester
 
 Policy = Literal["striped", "hashed", "affinity"]
 
@@ -51,7 +68,8 @@ class MigrationStep:
 @dataclass
 class NodeState:
     alive: bool = True
-    budget: int = 0               # 0 = unlimited (use static budget)
+    budget: int = 0               # manual rate-limit override; 0 = unlimited
+                                  # (use the static/adaptive budget)
     step_times: list = field(default_factory=list)
 
 
@@ -124,7 +142,11 @@ class ControlPlane:
     def release(self, region: Region) -> None:
         for pid in region.page_ids:
             h, s = int(self._home[pid]), int(self._slot[pid])
-            if h != FREE:
+            # Slot quarantine: a dead node's slots must not return to its
+            # free list (a monitor may mark a node dead before/without a
+            # fail_node remap).  revive_node rebuilds the free list from the
+            # table, so slots released while the node was down reappear then.
+            if h != FREE and self.nodes[h].alive:
                 self._free[h].append(s)
             self._home[pid] = FREE
             self._slot[pid] = FREE
@@ -182,11 +204,37 @@ class ControlPlane:
         return out
 
     def rate_limits(self, static_budget: int, threshold: float = 1.5,
-                    factor: float = 0.5) -> np.ndarray:
-        """Per-node ``active_budget`` vector for the bridge (runtime input)."""
+                    factor: float = 0.5, telemetry=None) -> np.ndarray:
+        """Per-node ``active_budget`` vector for the bridge (runtime input).
+
+        Three layers, weakest to strongest:
+
+        * straggler throttling from step-time telemetry (the static policy);
+        * **measured feedback** (``telemetry``: a
+          :class:`~repro.telemetry.TelemetryAggregator`): a node whose
+          observed spill rate is positive is having real requests dropped by
+          the limiter — its budget is restored to ``static_budget``, so one
+          measure -> recompile iteration drives spills to zero;
+        * a manual per-node override (:attr:`NodeState.budget` > 0) pinned
+          by the operator, which wins over both.
+        """
         budgets = np.full((self.num_nodes,), static_budget, np.int32)
         for i in self.detect_stragglers(threshold):
             budgets[i] = max(1, int(static_budget * factor))
+        if telemetry is not None:
+            # Key on the LAST measurement's raw spills where available: the
+            # EWMA rate only decays and would keep overriding the straggler
+            # throttle long after the drops stopped.  A bare BridgeTelemetry
+            # (one step's counters) works too via its ``spilled`` field.
+            spill = np.asarray(
+                telemetry.last_spilled if hasattr(telemetry, "last_spilled")
+                else telemetry.spilled).reshape(-1)
+            for i in range(min(self.num_nodes, spill.shape[0])):
+                if spill[i] > 0:
+                    budgets[i] = static_budget
+        for i, node in enumerate(self.nodes):
+            if node.budget > 0:
+                budgets[i] = node.budget
         return budgets
 
     # -- circuit scheduling ------------------------------------------------------
@@ -210,41 +258,140 @@ class ControlPlane:
         """Ring distances that can carry traffic under current placement.
 
         A distance d is live iff some requester r could address a page homed
-        at (r + d) mod N.  ``requesters`` defaults to every alive node.
+        at (r + d) mod N.  ``requesters`` defaults to every mesh rank — a
+        failed node loses its *memory*, not its mesh slot: the rank keeps
+        issuing bridge requests (the mesh never shrinks), so the distances
+        it needs must stay wired or its traffic is silently FREE-masked.
         """
         if requesters is None:
-            requesters = self.alive_nodes
+            requesters = range(self.num_nodes)
         homed = set(np.nonzero(self.occupancy() > 0)[0].tolist())
         dists = {(h - r) % self.num_nodes
                  for h in homed for r in requesters}
         return sorted(dists - {0})
 
     def route_program(self, requesters: Optional[list[int]] = None,
-                      bidirectional: bool = True,
-                      prune: bool = True) -> steering.RouteProgram:
+                      bidirectional: bool = True, prune: bool = True,
+                      telemetry=None) -> steering.RouteProgram:
         """Compile the bridge's runtime circuit schedule (no recompilation).
 
         Like :meth:`rate_limits`, the result is a *step input*: the
         orchestrator calls this after every placement change / telemetry
         event and feeds the program to ``pull_pages`` / ``push_pages``.
-        Combines three policies:
+        Combines the policies:
 
         * bidirectional min(d, N-d) routing (⌊N/2⌋ epochs instead of N-1),
         * pruning of distances with zero homed pages in reach,
         * rerouting around a failed directed ring link (everything drives
-          the surviving direction).
+          the surviving direction),
+        * **measured steering** (``telemetry``: a
+          :class:`~repro.telemetry.TelemetryAggregator` or a raw ``[N-1]``
+          per-distance load vector): circuit pruning from distances that
+          *measurably* carry traffic instead of placement reachability, and
+          a load-balanced direction assignment putting each live distance on
+          the direction that minimizes the bottleneck direction's bytes
+          (``steering.load_balanced_program``).  An empty measurement (no
+          traffic observed yet) falls back to the placement-based compile.
+
+        Censorship guard: only served requests are binned by distance, so a
+        measurement taken while the limiter spilled (or a previous program
+        pruned) requests is blind to the demand it dropped.  While the
+        aggregate shows drops, distances are *not* pruned — every distance
+        stays wired as a zero-weight free rider of the balanced split —
+        and pruning resumes after the first clean (drop-free) measurement.
         """
         n = self.num_nodes
+        w = None
+        if telemetry is not None:
+            w = np.asarray(telemetry.distance_pages()
+                           if hasattr(telemetry, "distance_pages")
+                           else telemetry, float).reshape(-1)
+            if w.sum() <= 0:
+                w = None  # nothing measured yet: steer from placement
+        # The guard reads the LAST measurement's raw drops (an aggregator's
+        # EWMA decays but never reaches zero); a bare BridgeTelemetry's
+        # spilled/pruned are per-step already.
+        drops = 0.0
+        for names in (("last_spilled", "last_pruned"), ("spilled", "pruned")):
+            if telemetry is not None and any(hasattr(telemetry, f)
+                                             for f in names):
+                drops = sum(float(np.asarray(getattr(telemetry, f)).sum())
+                            for f in names if hasattr(telemetry, f))
+                break
+        measured_prune = prune and drops <= 0
         if self._failed_link_direction is not None:
             base = steering.link_avoiding_program(
                 n, self._failed_link_direction)
-        elif bidirectional:
+            if not prune:
+                return base
+            if w is not None:
+                live = ((np.nonzero(w > 0)[0] + 1).tolist() if measured_prune
+                        else self.live_distances(requesters))
+            else:
+                live = self.live_distances(requesters)
+            return steering.pruned_program(base, live)
+        if w is not None and bidirectional:
+            return steering.load_balanced_program(n, w, prune=measured_prune)
+        if bidirectional:
             base = steering.bidirectional_program(n)
         else:
+            # bidirectional=False pins one ring direction: honour it even
+            # under measured steering (there is nothing to balance), only
+            # the pruning side of the measurement applies.
             base = steering.unidirectional_program(n)
         if not prune:
             return base
+        if w is not None and measured_prune:
+            return steering.pruned_program(base,
+                                           (np.nonzero(w > 0)[0] + 1).tolist())
         return steering.pruned_program(base, self.live_distances(requesters))
+
+    def affinity_migration(self, telemetry, min_share: float = 0.5,
+                           limit: Optional[int] = None
+                           ) -> list[MigrationStep]:
+        """Re-home hot pages toward their dominant requester (measured).
+
+        For every home node whose measured traffic (the aggregator's EWMA
+        requester->home matrix) is dominated by one *remote* requester —
+        its share of all pages served from that home exceeds ``min_share``
+        — pages homed there migrate into the dominant requester's free
+        slots, turning circuit traffic into loopback hits.  The placement
+        table is updated (a runtime reprogram, like :meth:`fail_node`) and
+        the plan is returned for the executor to copy page contents.
+        ``limit`` caps the total moves per call (migration bandwidth).
+        """
+        tm = np.asarray(telemetry.traffic_matrix()
+                        if hasattr(telemetry, "traffic_matrix")
+                        else telemetry, float)
+        if tm.shape != (self.num_nodes, self.num_nodes):
+            raise ValueError(f"traffic matrix shape {tm.shape} != "
+                             f"({self.num_nodes}, {self.num_nodes})")
+        plan: list[MigrationStep] = []
+        for h in range(self.num_nodes):
+            if limit is not None and len(plan) >= limit:
+                break
+            # Slot quarantine (symmetric to release()): a dead home is no
+            # migration source — its data is gone and its vacated slots must
+            # not re-enter the free list.  fail_node owns that path.
+            if not self.nodes[h].alive:
+                continue
+            r, share = dominant_requester(tm, h)
+            if r == h or share < min_share:
+                continue
+            if not self.nodes[r].alive:
+                continue
+            for pid in np.nonzero(self._home == h)[0]:
+                if not self._free[r]:
+                    break
+                if limit is not None and len(plan) >= limit:
+                    break
+                s = self._free[r].pop(0)
+                plan.append(MigrationStep(int(pid), h, int(self._slot[pid]),
+                                          r, s))
+                self._free[h].append(int(self._slot[pid]))
+                self._home[pid] = r
+                self._slot[pid] = s
+        return plan
 
     # -- introspection ----------------------------------------------------------
     def occupancy(self) -> np.ndarray:

@@ -40,6 +40,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import bridge
 from repro.core.memport import FREE, MemPortTable
 from repro.core.steering import RouteProgram
+from repro.telemetry import counters as telemetry_counters
 
 NEG_INF = -1e30
 
@@ -176,13 +177,15 @@ def _tail_partial(q, tail_k, tail_v, lengths, page_tokens):
 def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
            k_new: jax.Array, v_new: jax.Array, *, page_tokens: int,
            max_pages: int, mesh: Optional[Mesh], mem_axis: str = "data",
-           budget: int = 8,
-           program: Optional[RouteProgram] = None) -> PagedKVLayer:
+           budget: int = 8, program: Optional[RouteProgram] = None,
+           collect_telemetry: bool = False):
     """Append one token's (k, v) [B, kv, hd] for one layer.
 
     Tokens land in the local tail buffer; when a sequence's tail page fills,
     that page is flushed through the bridge to its pooled home (one masked
     ``push_pages`` — sequences not at a boundary contribute FREE slots).
+    With ``collect_telemetry`` the write-path counters of both pushes (k and
+    v pages both cross the wire) come back summed: ``(layer, telemetry)``.
     """
     b = lengths.shape[0]
     off = lengths % page_tokens
@@ -206,17 +209,27 @@ def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
     dest_n = shape_for(jnp.where(dest >= 0, dest, FREE).astype(jnp.int32))
     k_pool = bridge.push_pages(layer.k_pool, dest_n, shape_for(tail_k),
                                table, mesh=mesh, mem_axis=mem_axis,
-                               budget=budget, program=program)
+                               budget=budget, program=program,
+                               collect_telemetry=collect_telemetry)
     v_pool = bridge.push_pages(layer.v_pool, dest_n, shape_for(tail_v),
                                table, mesh=mesh, mem_axis=mem_axis,
-                               budget=budget, program=program)
+                               budget=budget, program=program,
+                               collect_telemetry=collect_telemetry)
+    telem = None
+    if collect_telemetry:
+        k_pool, telem_k = k_pool
+        v_pool, telem_v = v_pool
+        telem = telemetry_counters.add(telem_k, telem_v)
     # A flushed tail restarts empty (zeros are fine: positions are masked).
     keep = ~page_full
     keep_m = keep[:, None, None, None]
     tail_k = jnp.where(keep_m, tail_k, jnp.zeros_like(tail_k))
     tail_v = jnp.where(keep_m, tail_v, jnp.zeros_like(tail_v))
-    return replace(layer, k_pool=k_pool, v_pool=v_pool,
-                   tail_k=tail_k, tail_v=tail_v)
+    out = replace(layer, k_pool=k_pool, v_pool=v_pool,
+                  tail_k=tail_k, tail_v=tail_v)
+    if collect_telemetry:
+        return out, telem
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -233,13 +246,15 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
                           page_tokens: int, max_pages: int,
                           mesh: Optional[Mesh], mem_axis: str = "data",
                           budget: int = 8, edge_buffer: bool = True,
-                          program: Optional[RouteProgram] = None) -> jax.Array:
+                          program: Optional[RouteProgram] = None,
+                          collect_telemetry: bool = False):
     """Paper-faithful: pull pages through the bridge, attend locally.
 
     q: [B, H, hd] -> out [B, H, hd].  Pages stream through an online-softmax
     accumulator in rounds of ``budget`` pages (cut-through consumption).
     ``program`` is the runtime circuit schedule threaded down to
-    :func:`repro.core.bridge.pull_pages`.
+    :func:`repro.core.bridge.pull_pages`.  With ``collect_telemetry`` the
+    summed counters of the k and v pulls come back too: ``(out, telemetry)``.
     """
     b, h, hd = q.shape
     kv = layer.k_pool.shape[-2]
@@ -258,10 +273,17 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
 
     k_pages = bridge.pull_pages(layer.k_pool, want, table, mesh=mesh,
                                 mem_axis=mem_axis, budget=budget,
-                                edge_buffer=edge_buffer, program=program)
+                                edge_buffer=edge_buffer, program=program,
+                                collect_telemetry=collect_telemetry)
     v_pages = bridge.pull_pages(layer.v_pool, want, table, mesh=mesh,
                                 mem_axis=mem_axis, budget=budget,
-                                edge_buffer=edge_buffer, program=program)
+                                edge_buffer=edge_buffer, program=program,
+                                collect_telemetry=collect_telemetry)
+    telem = None
+    if collect_telemetry:
+        k_pages, telem_k = k_pages
+        v_pages, telem_v = v_pages
+        telem = telemetry_counters.add(telem_k, telem_v)
     # [n, per_node*max_pages, T, kv, hd] -> [B(+pad), P, T, kv, hd]
     k_pages = k_pages.reshape(n * per_node, max_pages, page_tokens, kv, hd)[:b]
     v_pages = v_pages.reshape(n * per_node, max_pages, page_tokens, kv, hd)[:b]
@@ -281,7 +303,10 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
     m_t, l_t, o_t = _tail_partial(q, layer.tail_k, layer.tail_v,
                                   lengths, page_tokens)
     m, l, o = _merge(m_s, l_s, o_s, m_t, l_t, o_t)
-    return _finalize(m, l, o).astype(q.dtype)
+    out = _finalize(m, l, o).astype(q.dtype)
+    if collect_telemetry:
+        return out, telem
+    return out
 
 
 def decode_attention_push(q: jax.Array, layer: PagedKVLayer,

@@ -184,8 +184,8 @@ def route_epoch_stats(program) -> Dict[str, int]:
 
 
 def predict_round_latency_us(program, page_bytes: int, budget: int,
-                             hw: TpuHW = TPU_HW,
-                             edge_buffer: bool = True) -> float:
+                             hw: TpuHW = TPU_HW, edge_buffer: bool = True,
+                             slot_pages=None) -> float:
     """Predicted latency of one bridge round under a route program.
 
     Each live slot is one circuit: RTT = 2 * hops * hop latency, payload =
@@ -193,6 +193,13 @@ def predict_round_latency_us(program, page_bytes: int, budget: int,
     circuits end to end; edge-buffered bridges overlap them, bounded by the
     busier direction's wire occupancy (circuits of one direction share that
     direction's links) plus the deepest circuit's RTT.
+
+    ``slot_pages`` switches from the worst-case assumption (every live slot
+    moves a full ``budget`` of pages) to *measured* per-slot loads — e.g.
+    ``TelemetryAggregator.distance_pages()`` normalized to one round — which
+    is what makes a telemetry-compiled
+    :func:`~repro.core.steering.load_balanced_program` comparable against
+    the static bidirectional split under the observed traffic matrix.
     """
     import numpy as np
     live = np.asarray(program.live)
@@ -200,13 +207,21 @@ def predict_round_latency_us(program, page_bytes: int, budget: int,
     hops = np.abs(off)
     if not live.any():
         return 0.0
-    wire_us = budget * page_bytes / (hw.ici_link_gbps * 1e9) * 1e6
+    if slot_pages is None:
+        pages = np.where(live, float(budget), 0.0)
+    else:
+        pages = np.asarray(slot_pages, float).reshape(-1)
+        if pages.shape != live.shape:
+            raise ValueError(f"slot_pages has shape {pages.shape}; program "
+                             f"has {live.shape[0]} slots")
+        pages = np.where(live, pages, 0.0)
+    wire_us = pages * page_bytes / (hw.ici_link_gbps * 1e9) * 1e6
     rtt_us = 2.0 * hops * hw.ici_hop_latency_us
     if not edge_buffer:
-        return float((rtt_us[live] + wire_us).sum())
-    cw = int((live & (off > 0)).sum())
-    ccw = int((live & (off < 0)).sum())
-    return float(max(cw, ccw) * wire_us + rtt_us[live].max())
+        return float((rtt_us[live] + wire_us[live]).sum())
+    cw_us = float(wire_us[live & (off > 0)].sum())
+    ccw_us = float(wire_us[live & (off < 0)].sum())
+    return float(max(cw_us, ccw_us) + rtt_us[live].max())
 
 
 def tpu_stream_penalty(kernel: str, page_bytes: int = 1 << 18,

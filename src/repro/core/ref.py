@@ -1,14 +1,20 @@
-"""Pure-jnp oracles for the bridge transfer engine (no collectives).
+"""Oracles for the bridge transfer engine (no collectives).
 
 These compute the same results as :mod:`repro.core.bridge` by direct global
 gather/scatter through the memport table.  Property tests assert bridge ==
 oracle for randomized placements, request lists, budgets and route programs.
+
+:func:`expected_transfer_telemetry` is the oracle for the measurement plane:
+a per-request numpy walk (independent of the datapath's masked-sum
+implementation) that the bridge's ``collect_telemetry`` counters must match
+exactly.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.memport import MemPortTable
 from repro.core.steering import RouteProgram
@@ -60,6 +66,90 @@ def pull_pages_ref(pool_pages: jnp.ndarray, want: jnp.ndarray,
     mask = valid.reshape(valid.shape + (1,) * (out.ndim - 1))
     out = jnp.where(mask, out, jnp.zeros_like(out))
     return out.reshape(want.shape + pool_pages.shape[1:])
+
+
+def rate_limit_mask(num_requests: int, budget: int, active_budget,
+                    overprovision: int = 1) -> np.ndarray:
+    """bool[num_requests]: which request indices the rate limiter serves.
+
+    Round ``r`` serves indices [r*ab, (r+1)*ab): everything past
+    ``rounds * ab`` spills off the (overprovisioned) round budget.  Used to
+    build throttled-transfer expectations for both pull and push.
+    """
+    from repro.core import steering
+    rounds = steering.num_rounds(num_requests, budget, overprovision)
+    ab = int(np.clip(np.asarray(active_budget).reshape(-1)[0], 0, budget))
+    return np.arange(num_requests) < rounds * ab
+
+
+def expected_transfer_telemetry(ids, table: MemPortTable,
+                                program: Optional[RouteProgram], *,
+                                num_nodes: int, budget: int,
+                                active_budget=None, overprovision: int = 1):
+    """Oracle for ``pull_pages`` / ``push_pages`` ``collect_telemetry``.
+
+    Walks every request of every row (row i = requester i) with plain
+    python/numpy — deliberately nothing like the datapath's masked segment
+    sums — and bins it the way the bridge must have: rate-limiter spill,
+    loopback hit, pruned-circuit drop, or served by its distance's slot.
+
+    ``active_budget`` may be per-requester ([rows]) for the N-device path or
+    a scalar shared by every row (what the loopback path actually applies).
+    Returns a :class:`~repro.telemetry.counters.BridgeTelemetry` with
+    [rows, ...] leaves.
+    """
+    from repro.core import steering
+    from repro.telemetry.counters import BridgeTelemetry
+
+    ids = np.asarray(ids)
+    rows, r = ids.shape
+    n = num_nodes
+    rounds = steering.num_rounds(r, budget, overprovision)
+    ab = np.broadcast_to(
+        np.asarray(budget if active_budget is None else active_budget,
+                   np.int64).reshape(-1), (rows,))
+    if program is None:
+        program = steering.bidirectional_program(n)
+    live = np.asarray(program.live)
+    off = np.asarray(program.offsets)
+    epoch = np.asarray(program.epoch)
+    home_col = np.asarray(table.home)
+
+    s = max(n - 1, 0)
+    slot_served = np.zeros((rows, s), np.int32)
+    loopback = np.zeros((rows,), np.int32)
+    spilled = np.zeros((rows,), np.int32)
+    pruned = np.zeros((rows,), np.int32)
+    traffic = np.zeros((rows, n), np.int32)
+    epoch_cw = np.zeros((rows, s), np.int32)
+    epoch_ccw = np.zeros((rows, s), np.int32)
+    for i in range(rows):
+        lim = rounds * int(np.clip(ab[i], 0, budget))
+        for j, pid in enumerate(ids[i]):
+            if pid < 0 or home_col[pid] < 0:
+                continue  # FREE hole or unmapped page: not a live request
+            if j >= lim:
+                spilled[i] += 1
+                continue
+            h = int(home_col[pid])
+            d = (h - i) % n
+            if d == 0:
+                loopback[i] += 1
+                traffic[i, h] += 1
+                continue
+            if not live[d - 1]:
+                pruned[i] += 1
+                continue
+            slot_served[i, d - 1] += 1
+            traffic[i, h] += 1
+            bins = epoch_cw if off[d - 1] > 0 else epoch_ccw
+            bins[i, epoch[d - 1]] += 1
+    return BridgeTelemetry(
+        slot_served=jnp.asarray(slot_served),
+        loopback_served=jnp.asarray(loopback),
+        spilled=jnp.asarray(spilled), pruned=jnp.asarray(pruned),
+        traffic=jnp.asarray(traffic), epoch_cw=jnp.asarray(epoch_cw),
+        epoch_ccw=jnp.asarray(epoch_ccw))
 
 
 def push_pages_ref(pool_pages: jnp.ndarray, dest: jnp.ndarray,

@@ -182,6 +182,56 @@ def pruned_program(base: RouteProgram, live_distances) -> RouteProgram:
     return _program(off, epoch, live)
 
 
+def load_balanced_program(num_nodes: int, dist_weight,
+                          prune: bool = True) -> RouteProgram:
+    """Direction assignment minimizing the bottleneck direction's load.
+
+    ``dist_weight[k]`` is the *measured* traffic (pages or bytes) carried at
+    ring distance ``k + 1`` — typically
+    :meth:`repro.telemetry.TelemetryAggregator.distance_pages`.  Circuits of
+    one direction share that direction's links, so an edge-buffered round
+    costs ``max(cw_load, ccw_load)`` wire time (the bottleneck term
+    ``perfmodel.predict_round_latency_us`` models): instead of the static
+    shortest-way split (min(d, N-d)), distances are partitioned greedily —
+    heaviest first, each onto the currently lighter direction (ties prefer
+    fewer hops).  Zero-weight distances are pruned (``prune=True``) or kept
+    on their shortest-way direction as free riders.  Epochs compact per
+    direction, shortest hop count first, one circuit per direction per
+    epoch.
+    """
+    n = num_nodes
+    w = np.asarray(dist_weight, float).reshape(-1)
+    if w.shape[0] != n - 1:
+        raise ValueError(f"dist_weight has {w.shape[0]} entries; a {n}-node "
+                         f"ring has {n - 1} distances")
+    if (w < 0).any():
+        raise ValueError("dist_weight must be non-negative")
+    live = (w > 0) if prune else np.ones((n - 1,), bool)
+    off = np.zeros((n - 1,), np.int64)
+    loads = {1: 0.0, -1: 0.0}
+    order = sorted(np.nonzero(live & (w > 0))[0].tolist(),
+                   key=lambda k: (-w[k], k))
+    for k in order:
+        d = k + 1
+        if loads[1] < loads[-1]:
+            sign = 1
+        elif loads[-1] < loads[1]:
+            sign = -1
+        else:
+            sign = 1 if d <= n - d else -1
+        off[k] = d if sign == 1 else -(n - d)
+        loads[sign] += w[k]
+    for k in np.nonzero(live & (w == 0))[0]:
+        d = k + 1
+        off[k] = d if d <= n - d else -(n - d)
+    epoch = np.full((n - 1,), -1, np.int64)
+    for sign in (1, -1):
+        idx = np.nonzero(live & (np.sign(off) == sign))[0]
+        order2 = np.argsort(np.abs(off[idx]), kind="stable")
+        epoch[idx[order2]] = np.arange(len(idx))
+    return _program(off, epoch, live)
+
+
 def link_avoiding_program(num_nodes: int, failed_direction: int
                           ) -> RouteProgram:
     """Route every circuit away from a failed directed ring link.

@@ -14,6 +14,7 @@ shards on node failure without touching the training step.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -124,23 +125,36 @@ def _as_node_requests(ids: np.ndarray, n: int) -> np.ndarray:
     return out
 
 
-def pull_tree(store: BridgeStore, *, mesh: Optional[Mesh]) -> Any:
+def pull_tree(store: BridgeStore, *, mesh: Optional[Mesh],
+              collect_telemetry: bool = False) -> Any:
     """Stream the packed tree out of the pool (each node pulls a stripe,
-    then stripes all-gather via the output sharding)."""
+    then stripes all-gather via the output sharding).  With
+    ``collect_telemetry`` returns ``(tree, BridgeTelemetry)`` so the
+    once-per-step optimizer traffic feeds the aggregator."""
     n = bridge._mem_axis_size(mesh, store.mem_axis)
     want = jnp.asarray(_as_node_requests(
         np.arange(store.packer.num_pages), n))
     got = bridge.pull_pages(store.pool, want, store.table, mesh=mesh,
                             mem_axis=store.mem_axis, budget=store.budget,
                             program=store.program,
-                            table_nodes=store.table_nodes)
+                            table_nodes=store.table_nodes,
+                            collect_telemetry=collect_telemetry)
+    telem = None
+    if collect_telemetry:
+        got, telem = got
     flat = got.reshape(-1, store.packer.page_elems)[: store.packer.num_pages]
-    return store.packer.unpack(flat)
+    tree = store.packer.unpack(flat)
+    if collect_telemetry:
+        return tree, telem
+    return tree
 
 
-def push_tree(store: BridgeStore, tree: Any, *,
-              mesh: Optional[Mesh]) -> BridgeStore:
-    """Write a new image of the tree through the bridge."""
+def push_tree(store: BridgeStore, tree: Any, *, mesh: Optional[Mesh],
+              collect_telemetry: bool = False):
+    """Write a new image of the tree through the bridge.
+
+    With ``collect_telemetry`` returns ``(store, BridgeTelemetry)``.
+    """
     n = bridge._mem_axis_size(mesh, store.mem_axis)
     pages = store.packer.pack(tree, dtype=store.pool.dtype)
     ids = np.arange(store.packer.num_pages)
@@ -155,10 +169,23 @@ def push_tree(store: BridgeStore, tree: Any, *,
     pool = bridge.push_pages(store.pool, jnp.asarray(dest), payload,
                              store.table, mesh=mesh, mem_axis=store.mem_axis,
                              budget=store.budget, program=store.program,
-                             table_nodes=store.table_nodes)
-    return BridgeStore(store.packer, store.table, pool, store.mem_axis,
-                       store.budget, table_nodes=store.table_nodes,
-                       program=store.program)
+                             table_nodes=store.table_nodes,
+                             collect_telemetry=collect_telemetry)
+    telem = None
+    if collect_telemetry:
+        pool, telem = pool
+    out = BridgeStore(store.packer, store.table, pool, store.mem_axis,
+                      store.budget, table_nodes=store.table_nodes,
+                      program=store.program)
+    if collect_telemetry:
+        return out, telem
+    return out
+
+
+def with_program(store: BridgeStore, program) -> BridgeStore:
+    """Swap the store's circuit schedule (a runtime input — e.g. a
+    telemetry-compiled ``ControlPlane.route_program(telemetry=...)``)."""
+    return dataclasses.replace(store, program=program)
 
 
 def rehome_after_failure(store: BridgeStore, cp: ControlPlane,

@@ -9,6 +9,10 @@ Composes the substrate into the recovery loop a 1000-node deployment needs:
   training resumes at the checkpointed step;
 * **straggler mitigation**: step-time telemetry feeds per-node bridge rate
   limits (paper §2's software-controlled rate limiter);
+* **traffic feedback**: in-band bridge counters recorded via
+  :meth:`ElasticTrainer.record_telemetry` close the loop — rate limits
+  adapt to observed spills and :meth:`ElasticTrainer.route_program`
+  compiles load-balanced, measured-pruned circuit schedules;
 * **elastic scaling**: the same remap path admits *new* nodes (revive) and
   re-stripes pages onto them.
 
@@ -26,6 +30,7 @@ from typing import Any, Callable, Optional
 from repro.checkpoint import CheckpointManager
 from repro.core.control_plane import ControlPlane, MigrationStep
 from repro.ft.heartbeat import HeartbeatMonitor
+from repro.telemetry import TelemetryAggregator
 
 
 @dataclass
@@ -45,6 +50,7 @@ class ElasticTrainer:
     cp: Optional[ControlPlane] = None
     ckpt_every: int = 50
     monitor: Optional[HeartbeatMonitor] = None
+    telemetry: Optional[TelemetryAggregator] = None
     events: list = field(default_factory=list)
 
     def run(self, state: Any, batches, *, start_step: int = 0,
@@ -97,10 +103,32 @@ class ElasticTrainer:
         self._last_plan = plan
         return restored, int(extra.get("step", restore_step))
 
+    def record_telemetry(self, telem) -> None:
+        """Fold one step's bridge counters into the trainer's aggregator.
+
+        Lazily creates the :class:`~repro.telemetry.TelemetryAggregator`
+        (sized from the control plane) so existing callers pay nothing.
+        """
+        if self.telemetry is None:
+            n = (self.cp.num_nodes if self.cp is not None
+                 else int(telem.traffic.shape[-1]))
+            self.telemetry = TelemetryAggregator(n)
+        self.telemetry.update(telem)
+
     def rate_limits(self, static_budget: int):
+        """Per-node bridge budgets: straggler throttling + measured spill
+        feedback (one measure -> recompile iteration zeroes the spills)."""
         if self.cp is None:
             return None
-        return self.cp.rate_limits(static_budget)
+        return self.cp.rate_limits(static_budget, telemetry=self.telemetry)
+
+    def route_program(self):
+        """The circuit schedule for the next step: load-balanced and pruned
+        from measured traffic once telemetry has been recorded, placement-
+        derived before that."""
+        if self.cp is None:
+            return None
+        return self.cp.route_program(telemetry=self.telemetry)
 
     def handle_link_failure(self, step: int, direction: int):
         """Ring-link failure path: no data is lost (pages stay homed), the
@@ -111,4 +139,4 @@ class ElasticTrainer:
         self.events.append(FailureEvent(-1, step, kind="link_lost",
                                         direction=direction))
         self.cp.report_link_failure(direction)
-        return self.cp.route_program()
+        return self.cp.route_program(telemetry=self.telemetry)

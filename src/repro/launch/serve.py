@@ -27,6 +27,9 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--page-tokens", type=int, default=16)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="collect in-band bridge counters (bridge_* "
+                         "placements) and print the aggregate")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -36,9 +39,10 @@ def main() -> None:
 
     from repro.models import transformer
     params = transformer.init_params(cfg, jax.random.key(0))
+    collect = args.telemetry and args.kv in ("bridge_pull", "bridge_push")
     cache_ops = serve_step_mod.make_cache_ops(
         run, mesh=None, max_len=args.max_len, page_tokens=args.page_tokens,
-        dtype=jnp.dtype(cfg.dtype))
+        collect_telemetry=collect, dtype=jnp.dtype(cfg.dtype))
     enc_out = None
     if cfg.cross_attention:
         enc_out = jnp.asarray(np.random.default_rng(0).normal(
@@ -60,6 +64,13 @@ def main() -> None:
     print(f"tokens/s={args.batch*args.steps/dt:.1f} "
           f"({dt/args.steps*1e3:.1f} ms/step)")
     print("sample:", np.stack(emitted, 1)[0][:16])
+    if collect:
+        from repro.telemetry import TelemetryAggregator
+        telem = serve_step_mod.collect_state_telemetry(state)
+        if telem is not None:
+            agg = TelemetryAggregator(telem.num_nodes)
+            agg.update(telem)
+            print(agg.describe())
 
 
 if __name__ == "__main__":

@@ -29,6 +29,7 @@ from jax.sharding import Mesh
 from repro.config import ModelConfig
 from repro.core import kvbridge
 from repro.core.memport import MemPortTable
+from repro.telemetry import counters as telemetry_counters
 
 
 class RingCacheOps:
@@ -66,12 +67,19 @@ class RingCacheOps:
 
 
 class BridgeCacheOps:
-    """Disaggregated paged KV through the bridge (pull or push mode)."""
+    """Disaggregated paged KV through the bridge (pull or push mode).
+
+    ``collect_telemetry`` carries a cumulative
+    :class:`~repro.telemetry.counters.BridgeTelemetry` in each pooled
+    layer's decode state (``st["telem"]``), summed over the layer's bridge
+    transfers every step — hardware-style monotonic counters the serving
+    loop reads off the returned state and feeds to an aggregator.
+    """
 
     def __init__(self, *, mode: str, max_len: int, page_tokens: int,
                  mesh: Optional[Mesh], mem_axis: str = "data",
                  budget: int = 8, edge_buffer: bool = True,
-                 dtype=jnp.bfloat16):
+                 collect_telemetry: bool = False, dtype=jnp.bfloat16):
         assert mode in ("pull", "push"), mode
         self.mode = mode
         self.max_len = max_len
@@ -81,6 +89,7 @@ class BridgeCacheOps:
         self.mem_axis = mem_axis
         self.budget = budget
         self.edge_buffer = edge_buffer
+        self.collect_telemetry = collect_telemetry
         self.dtype = dtype
 
     # -- shared state: the memport table (a runtime input, reprogrammable) ---
@@ -105,11 +114,14 @@ class BridgeCacheOps:
         num_slots = n * self.slots_per_node(batch)
         shape = (num_slots, self.page_tokens, cfg.num_kv_heads, cfg.head_dim)
         tail = (batch, self.page_tokens, cfg.num_kv_heads, cfg.head_dim)
-        return {"paged": kvbridge.PagedKVLayer(
+        st = {"paged": kvbridge.PagedKVLayer(
             k_pool=jnp.zeros(shape, self.dtype),
             v_pool=jnp.zeros(shape, self.dtype),
             tail_k=jnp.zeros(tail, self.dtype),
             tail_v=jnp.zeros(tail, self.dtype))}
+        if self.collect_telemetry:
+            st["telem"] = telemetry_counters.zeros(n, leading=(n,))
+        return st
 
     def append_and_attend(self, cfg, st, shared, lengths, q, k_new, v_new, *,
                           window: int = 0):
@@ -120,23 +132,34 @@ class BridgeCacheOps:
                 window=window)
             return att, {"ring": new_ring}
         table = shared["table"]
+        collect = self.collect_telemetry
         layer = kvbridge.append(
             st["paged"], table, lengths, k_new, v_new,
             page_tokens=self.page_tokens, max_pages=self.max_pages,
-            mesh=self.mesh, mem_axis=self.mem_axis, budget=self.budget)
+            mesh=self.mesh, mem_axis=self.mem_axis, budget=self.budget,
+            collect_telemetry=collect)
+        telem = None
+        if collect:
+            layer, telem = layer
         visible = lengths + 1
         if self.mode == "pull":
             att = kvbridge.decode_attention_pull(
                 q, layer, table, visible, page_tokens=self.page_tokens,
                 max_pages=self.max_pages, mesh=self.mesh,
                 mem_axis=self.mem_axis, budget=self.budget,
-                edge_buffer=self.edge_buffer)
+                edge_buffer=self.edge_buffer, collect_telemetry=collect)
+            if collect:
+                att, pull_telem = att
+                telem = telemetry_counters.add(telem, pull_telem)
         else:
             att = kvbridge.decode_attention_push(
                 q, layer, table, visible, page_tokens=self.page_tokens,
                 max_pages=self.max_pages, mesh=self.mesh,
                 mem_axis=self.mem_axis)
-        return att, {"paged": layer}
+        new_st = {"paged": layer}
+        if collect:
+            new_st["telem"] = telemetry_counters.add(st["telem"], telem)
+        return att, new_st
 
 
 def _masked_gqa_attention(q, k, v, mask):

@@ -15,6 +15,7 @@ from repro.serve.cache_ops import BridgeCacheOps, RingCacheOps
 
 def make_cache_ops(run: RunConfig, mesh: Optional[Mesh],
                    max_len: int, page_tokens: int = 512,
+                   collect_telemetry: bool = False,
                    dtype=jnp.bfloat16):
     kp = run.kv_placement
     if kp == "local":
@@ -30,8 +31,34 @@ def make_cache_ops(run: RunConfig, mesh: Optional[Mesh],
             mode=kp.split("_")[1], max_len=max_len, page_tokens=page_tokens,
             mesh=mesh, mem_axis=run.bridge.mem_axis,
             budget=run.bridge.epoch_budget,
-            edge_buffer=run.bridge.edge_buffer, dtype=dtype)
+            edge_buffer=run.bridge.edge_buffer,
+            collect_telemetry=collect_telemetry, dtype=dtype)
     raise ValueError(kp)
+
+
+def collect_state_telemetry(state):
+    """Sum the cumulative bridge counters carried in a decode state.
+
+    Returns one :class:`~repro.telemetry.counters.BridgeTelemetry` (layers
+    summed; stacked/scanned layer dims folded into the per-requester rows)
+    or None when the state carries no telemetry (collection off, or a
+    non-bridge placement).
+    """
+    from repro.telemetry import counters as telemetry_counters
+    leaves = jax.tree_util.tree_flatten_with_path(
+        state, is_leaf=lambda x: isinstance(
+            x, telemetry_counters.BridgeTelemetry))[0]
+    total = None
+    for path, leaf in leaves:
+        if not isinstance(leaf, telemetry_counters.BridgeTelemetry):
+            continue
+        # Stacked (scanned) layers carry extra leading dims: fold them in.
+        extra = len(leaf.loopback_served.shape) - 1
+        telem = jax.tree.map(
+            lambda x: x.sum(axis=tuple(range(extra))) if extra else x, leaf)
+        total = telem if total is None else telemetry_counters.add(total,
+                                                                   telem)
+    return total
 
 
 def init_serve_state(run: RunConfig, batch: int, cache_ops,
@@ -93,6 +120,9 @@ def decode_state_shardings(run: RunConfig, mesh: Mesh, rules: ShardingRules,
             # pool slots shard over the mem axis, page *contents* shard
             # head_dim over the model axis (divisibility-gated in rules)
             return fit("pages", None, None, "head_dim")
+        if "telem" in path:
+            # per-requester counters: rows live on the mem axis
+            return fit("pages")
         if "tail_k" in path or "tail_v" in path:
             return fit("batch", None, None, "head_dim")
         if "table" in path:

@@ -1,0 +1,13 @@
+"""In-band traffic telemetry: the bridge's measurement plane.
+
+  counters   — BridgeTelemetry pytree + masked-sum datapath collection
+  aggregate  — host-side EWMA aggregation feeding the control plane
+
+The closed loop:  pull/push(collect_telemetry=True) -> BridgeTelemetry ->
+TelemetryAggregator.update -> ControlPlane.route_program(telemetry=...) /
+rate_limits(telemetry=...) / affinity_migration -> next step's runtime
+inputs (no recompilation at any point).
+"""
+from repro.telemetry.counters import (BridgeTelemetry, add,  # noqa: F401
+                                      transfer_telemetry, zeros)
+from repro.telemetry.aggregate import TelemetryAggregator  # noqa: F401

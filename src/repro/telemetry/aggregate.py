@@ -1,0 +1,182 @@
+"""Host-side telemetry aggregation (the measure half of the control loop).
+
+The datapath emits one :class:`~repro.telemetry.counters.BridgeTelemetry`
+per transfer; the orchestrator folds them into exponentially-weighted moving
+averages here and the control plane reads the aggregate to recompile route
+programs, adapt rate limits and plan affinity migrations:
+
+    datapath counters -> TelemetryAggregator -> ControlPlane.route_program /
+                                                rate_limits / affinity_migration
+
+Everything is plain numpy on the host — telemetry crosses the device
+boundary once per step (a few hundred int32s) and never touches the jitted
+datapath.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.telemetry.counters import BridgeTelemetry
+
+
+def dominant_requester(traffic: np.ndarray, home: int) -> tuple[int, float]:
+    """(remote requester moving the most pages from ``home``, its share of
+    all traffic homed there) for a raw ``[N, N]`` requester->home matrix.
+    Share is 0 when the home is idle.  The single definition of "dominant"
+    shared by the aggregator and ``ControlPlane.affinity_migration``."""
+    col = np.asarray(traffic, float)[:, home].copy()
+    total = col.sum()
+    col[home] = -1.0
+    r = int(col.argmax())
+    share = float(traffic[r][home] / total) if total > 0 else 0.0
+    return r, share
+
+
+class TelemetryAggregator:
+    """EWMA aggregation of bridge counters across steps.
+
+    Keeps, per step (EWMA with factor ``alpha``; the first update seeds the
+    averages directly):
+
+    * the ``[N, N]`` requester->home **traffic matrix** (pages),
+    * the per-ring-distance **load histogram** (pages over all requesters),
+    * per-direction / per-epoch **wire occupancy** (link utilization),
+    * per-node **drop counters**: rate-limiter spills and pruned-circuit
+      drops, plus served totals to turn them into rates.
+
+    ``update`` accepts telemetry whose leading dim is the requester: row i
+    is ring node i (N-device path) or logical requester i (loopback path).
+    """
+
+    def __init__(self, num_nodes: int, page_bytes: int = 0,
+                 alpha: float = 0.25):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.num_nodes = num_nodes
+        self.page_bytes = page_bytes
+        self.alpha = alpha
+        self.steps = 0
+        n, s = num_nodes, max(num_nodes - 1, 0)
+        self.traffic = np.zeros((n, n))
+        self.dist_pages = np.zeros((s,))
+        self.epoch_cw = np.zeros((s,))
+        self.epoch_ccw = np.zeros((s,))
+        self.loopback = np.zeros((n,))
+        self.served = np.zeros((n,))
+        self.spilled = np.zeros((n,))
+        self.pruned = np.zeros((n,))
+        # Raw drops of the most recent update (not EWMA-smoothed): the
+        # control plane's censorship guard needs "was the LAST measurement
+        # clean", which a decaying average can never answer with zero.
+        self.last_spilled = np.zeros((n,))
+        self.last_pruned = np.zeros((n,))
+
+    # -- folding --------------------------------------------------------------
+    def _fold(self, avg: np.ndarray, new: np.ndarray) -> None:
+        if self.steps == 0:
+            avg[...] = new
+        else:
+            avg *= 1.0 - self.alpha
+            avg += self.alpha * new
+
+    def update(self, telem: BridgeTelemetry) -> None:
+        """Fold one step's telemetry (leading dim = requester) in."""
+        rows = np.atleast_1d(np.asarray(telem.loopback_served)).shape[0]
+        if rows > self.num_nodes:
+            raise ValueError(f"telemetry has {rows} requester rows for a "
+                             f"{self.num_nodes}-node aggregator")
+
+        def rowed(x, trailing):
+            out = np.zeros((self.num_nodes,) + trailing)
+            out[:rows] = np.asarray(x, np.int64).reshape((rows,) + trailing)
+            return out
+
+        n, s = self.num_nodes, max(self.num_nodes - 1, 0)
+        traffic = rowed(telem.traffic, (telem.traffic.shape[-1],))
+        if traffic.shape[1] != n:
+            raise ValueError(f"telemetry spans {traffic.shape[1]} homes for "
+                             f"a {n}-node aggregator")
+        slot = rowed(telem.slot_served, (s,))
+        self._fold(self.traffic, traffic)
+        self._fold(self.dist_pages, slot.sum(0))
+        self._fold(self.epoch_cw, rowed(telem.epoch_cw, (s,)).sum(0))
+        self._fold(self.epoch_ccw, rowed(telem.epoch_ccw, (s,)).sum(0))
+        self._fold(self.loopback, rowed(telem.loopback_served, ()))
+        self._fold(self.served,
+                   rowed(telem.loopback_served, ()) + slot.sum(1))
+        self._fold(self.spilled, rowed(telem.spilled, ()))
+        self._fold(self.pruned, rowed(telem.pruned, ()))
+        self.last_spilled = rowed(telem.spilled, ())
+        self.last_pruned = rowed(telem.pruned, ())
+        self.steps += 1
+
+    # -- views the control plane consumes -------------------------------------
+    def traffic_matrix(self) -> np.ndarray:
+        """EWMA requester->home pages per step, [N, N]."""
+        return self.traffic.copy()
+
+    def traffic_bytes(self) -> np.ndarray:
+        return self.traffic * self.page_bytes
+
+    def distance_pages(self) -> np.ndarray:
+        """EWMA pages per step carried at each ring distance, [N-1]."""
+        return self.dist_pages.copy()
+
+    def distance_bytes(self) -> np.ndarray:
+        return self.dist_pages * self.page_bytes
+
+    def live_distances(self) -> list[int]:
+        """Ring distances that measurably carried traffic."""
+        return (np.nonzero(self.dist_pages > 0)[0] + 1).tolist()
+
+    def link_pages(self) -> Dict[str, float]:
+        """EWMA pages per step moved over each ring direction."""
+        return {"cw": float(self.epoch_cw.sum()),
+                "ccw": float(self.epoch_ccw.sum())}
+
+    def link_utilization(self) -> Dict[str, float]:
+        """Each direction's share of circuit-wire pages (0 when idle)."""
+        lp = self.link_pages()
+        total = lp["cw"] + lp["ccw"]
+        if total <= 0:
+            return {"cw": 0.0, "ccw": 0.0}
+        return {k: v / total for k, v in lp.items()}
+
+    def epoch_occupancy(self) -> tuple[np.ndarray, np.ndarray]:
+        """(cw, ccw) EWMA wire pages per circuit epoch."""
+        return self.epoch_cw.copy(), self.epoch_ccw.copy()
+
+    def spill_rate(self) -> np.ndarray:
+        """Per-node fraction of live requests the rate limiter dropped."""
+        total = self.served + self.spilled
+        return np.divide(self.spilled, total, out=np.zeros_like(total),
+                         where=total > 0)
+
+    def drop_rate(self) -> np.ndarray:
+        """Per-node fraction of live requests dropped (spill + prune)."""
+        drops = self.spilled + self.pruned
+        total = self.served + drops
+        return np.divide(drops, total, out=np.zeros_like(drops),
+                         where=total > 0)
+
+    def dominant_requester(self, home: int) -> tuple[int, float]:
+        """(remote requester moving the most pages from ``home``, its share
+        of all traffic homed there).  Share is 0 when the home is idle."""
+        return dominant_requester(self.traffic, home)
+
+    def describe(self) -> str:
+        util = self.link_utilization()
+        lines = [f"telemetry: {self.steps} steps folded "
+                 f"(alpha={self.alpha}, page_bytes={self.page_bytes})",
+                 f"  wire share: cw={util['cw']:.2f} ccw={util['ccw']:.2f}",
+                 "  dist pages: " + " ".join(
+                     f"d{d}={p:.1f}" for d, p in
+                     enumerate(self.dist_pages, start=1) if p > 0)]
+        for i in range(self.num_nodes):
+            lines.append(
+                f"  node {i}: served={self.served[i]:.1f} "
+                f"loopback={self.loopback[i]:.1f} "
+                f"spilled={self.spilled[i]:.1f} pruned={self.pruned[i]:.1f}")
+        return "\n".join(lines)

@@ -1,0 +1,163 @@
+"""In-band datapath counters for the bridge (the measurement plane).
+
+The paper's control plane "prepares and steers" transactions at runtime but
+the prototype measures nothing in-band; real disaggregated orchestration
+needs link-level telemetry feeding allocation and routing.  This module is
+the datapath half of that loop: a :class:`BridgeTelemetry` pytree of masked
+integer sums computed from the very masks the transfer engine already
+materializes (request liveness, rate-limiter window, ring distance, route
+program liveness), so collecting it
+
+* costs only a handful of masked ``segment-sum`` reductions,
+* has **static shapes** (fixed ``N-1`` slot / ``N`` node axes), so swapping
+  programs, tables or budgets with collection on never retraces,
+* is bit-deterministic (pure integer arithmetic, no atomics), identical
+  between ``edge_buffer`` modes, and exactly reproducible by the oracle
+  (:func:`repro.core.ref.expected_transfer_telemetry`).
+
+Counter semantics for one requester's (padded) request list:
+
+* a request is **live** if its id is non-FREE and its page is mapped;
+* live requests past the rate-limiter window (``rounds * active_budget``
+  round lanes) are **spilled** (the software rate limiter dropped them);
+* in-window live requests at ring distance 0 are **loopback** hits;
+* remote requests whose distance has no wired circuit are **pruned** drops;
+* everything else is **served** by its circuit slot, contributing to the
+  per-slot counts, the requester->home traffic-matrix row, and the per-epoch
+  cw/ccw wire occupancy (direction = sign of the program's slot offset).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.memport import MemPortTable
+from repro.core.steering import RouteProgram
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class BridgeTelemetry:
+    """Per-requester bridge counters (one transfer's worth).
+
+    All leaves are ``i32`` with static trailing shapes for an N-node ring
+    (``N-1`` circuit slots, ``N`` homes); leading dims identify the
+    requester (``[N, ...]`` from the N-device path, ``[rows, ...]`` from the
+    loopback path).  Counts are pages; bytes are ``count * page_bytes`` with
+    a static page size, so only counts are carried on device.
+
+    Attributes:
+      slot_served:      pages served per circuit slot (slot k = distance k+1).
+      loopback_served:  distance-0 fast-path hits (no circuit traffic).
+      spilled:          live requests dropped by the rate limiter.
+      pruned:           live requests dropped because their ring distance has
+                        no wired circuit in the route program.
+      traffic:          requester->home served pages (one traffic-matrix row,
+                        loopback included on the diagonal).
+      epoch_cw:         clockwise wire occupancy (pages) per circuit epoch.
+      epoch_ccw:        counter-clockwise wire occupancy per circuit epoch.
+    """
+
+    slot_served: jax.Array      # i32[..., N-1]
+    loopback_served: jax.Array  # i32[...]
+    spilled: jax.Array          # i32[...]
+    pruned: jax.Array           # i32[...]
+    traffic: jax.Array          # i32[..., N]
+    epoch_cw: jax.Array         # i32[..., N-1]
+    epoch_ccw: jax.Array        # i32[..., N-1]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.traffic.shape[-1]
+
+    def served_total(self) -> jax.Array:
+        """Pages served per requester (loopback + all circuit slots)."""
+        return self.loopback_served + self.slot_served.sum(-1)
+
+    def wire_pages(self) -> tuple[jax.Array, jax.Array]:
+        """(cw, ccw) pages moved over each ring direction per requester."""
+        return self.epoch_cw.sum(-1), self.epoch_ccw.sum(-1)
+
+    def slot_bytes(self, page_bytes: int) -> jax.Array:
+        """Per-slot wire bytes (static page size x served counts)."""
+        return self.slot_served * page_bytes
+
+
+def zeros(num_nodes: int, leading: tuple[int, ...] = ()) -> BridgeTelemetry:
+    """All-zero telemetry for an N-node ring (accumulator seed)."""
+    s = max(num_nodes - 1, 0)
+    z = lambda *shape: jnp.zeros(leading + shape, jnp.int32)  # noqa: E731
+    return BridgeTelemetry(slot_served=z(s), loopback_served=z(),
+                           spilled=z(), pruned=z(), traffic=z(num_nodes),
+                           epoch_cw=z(s), epoch_ccw=z(s))
+
+
+def add(a: BridgeTelemetry, b: BridgeTelemetry) -> BridgeTelemetry:
+    """Element-wise sum (counters are additive across transfers/steps)."""
+    return jax.tree.map(jnp.add, a, b)
+
+
+def transfer_telemetry(ids: jax.Array, table: MemPortTable,
+                       program: RouteProgram, active_budget: jax.Array, *,
+                       my, num_nodes: int, budget: int,
+                       rounds: int) -> BridgeTelemetry:
+    """Counters for one requester's padded request list (pull or push).
+
+    Pure jnp — runs inside the ``shard_map`` body (``my`` = axis index) and,
+    vmapped over logical requesters, on the 1-device loopback path.  The
+    masks recompute exactly the datapath's serve conditions, so the counts
+    are what the transfer engine actually moved.
+
+    Args:
+      ids: [rounds * budget] request ids (FREE-padded).
+      active_budget: live lanes per round (the runtime rate limiter).
+      my: this requester's ring rank (traced or static).
+      rounds: static round count the transfer was compiled for.
+    """
+    ids = ids.reshape(-1)
+    home, _ = table.translate(ids)
+    live = (ids >= 0) & (home >= 0)
+    ab = jnp.clip(jnp.asarray(active_budget), 0, budget)
+    in_window = jnp.arange(ids.shape[0]) < rounds * ab
+    spilled = jnp.sum(live & ~in_window).astype(jnp.int32)
+
+    cand = live & in_window
+    dist = jnp.mod(home - my, num_nodes)
+    is_loop = cand & (dist == 0)
+    loopback_served = jnp.sum(is_loop).astype(jnp.int32)
+
+    nslots = num_nodes - 1
+    if nslots == 0:
+        empty = jnp.zeros((0,), jnp.int32)
+        traffic = jnp.zeros((num_nodes,), jnp.int32).at[
+            jnp.where(is_loop, home, num_nodes)].add(1, mode="drop")
+        return BridgeTelemetry(slot_served=empty,
+                               loopback_served=loopback_served,
+                               spilled=spilled,
+                               pruned=jnp.int32(0), traffic=traffic,
+                               epoch_cw=empty, epoch_ccw=empty)
+
+    slot = jnp.clip(dist - 1, 0, nslots - 1)
+    remote = cand & (dist > 0)
+    wired = remote & program.live[slot]
+    pruned = jnp.sum(remote & ~program.live[slot]).astype(jnp.int32)
+    slot_served = jnp.zeros((nslots,), jnp.int32).at[
+        jnp.where(wired, slot, nslots)].add(1, mode="drop")
+    served = is_loop | wired
+    traffic = jnp.zeros((num_nodes,), jnp.int32).at[
+        jnp.where(served, home, num_nodes)].add(1, mode="drop")
+    # Wire occupancy: slot k's pages land at its program epoch, on the ring
+    # direction its signed offset drives.
+    ep = jnp.clip(program.epoch, 0, nslots - 1)
+    cw = program.live & (program.offsets > 0)
+    ccw = program.live & (program.offsets < 0)
+    epoch_cw = jnp.zeros((nslots,), jnp.int32).at[
+        jnp.where(cw, ep, nslots)].add(slot_served, mode="drop")
+    epoch_ccw = jnp.zeros((nslots,), jnp.int32).at[
+        jnp.where(ccw, ep, nslots)].add(slot_served, mode="drop")
+    return BridgeTelemetry(slot_served=slot_served,
+                           loopback_served=loopback_served, spilled=spilled,
+                           pruned=pruned, traffic=traffic,
+                           epoch_cw=epoch_cw, epoch_ccw=epoch_ccw)

@@ -19,6 +19,7 @@ import numpy as np  # noqa: E402
 from repro.core import bridge, ref, kvbridge, steering  # noqa: E402
 from repro.core.memport import FREE, MemPortTable  # noqa: E402
 from repro.core.control_plane import ControlPlane  # noqa: E402
+from repro.telemetry import TelemetryAggregator  # noqa: E402
 
 
 def check(name, got, exp, atol=1e-5):
@@ -179,6 +180,7 @@ def main():
               np.zeros_like(tk))
 
     route_program_checks()
+    telemetry_checks()
 
     print("ALL OK")
 
@@ -250,6 +252,89 @@ def route_program_checks():
         np.testing.assert_array_equal(got, expp, err_msg=f"push {name}")
     assert push._cache_size() == 1, push._cache_size()
     print("ok: push programs bit-exact, no retrace")
+
+
+def telemetry_checks():
+    """In-band counters on a real 8-way mem ring.
+
+    * pull/push counters under arbitrary programs and per-node throttles
+      match the oracle's per-request walk exactly,
+    * swapping programs / budgets with collection ON triggers no retrace,
+    * a throttled push spills exactly the tail the rate limiter drops,
+    * counters feed the aggregator and compile a load-balanced program.
+    """
+    mesh8 = jax.make_mesh((8,), ("data",))
+    n, ppn, page = 8, 8, 16
+    rng = np.random.default_rng(11)
+    pool = jnp.asarray(rng.normal(size=(n * ppn, page)).astype(np.float32))
+    table = MemPortTable.striped(48, n, ppn)
+    want = jnp.asarray(rng.integers(-1, 48, size=(n, 7)).astype(np.int32))
+    ab = jnp.asarray(rng.integers(1, 4, size=(n,)).astype(np.int32))
+
+    uni = steering.unidirectional_program(n)
+    bi = steering.bidirectional_program(n)
+    pruned = steering.pruned_program(bi, [1, 2, 6])
+    pull = jax.jit(functools.partial(bridge.pull_pages, mesh=mesh8, budget=3,
+                                     collect_telemetry=True))
+
+    def check_telem(name, got, exp):
+        for f in ("slot_served", "loopback_served", "spilled", "pruned",
+                  "traffic", "epoch_cw", "epoch_ccw"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(exp, f)),
+                err_msg=f"{name}: {f}")
+        print(f"ok: telemetry {name} == oracle")
+
+    telem_bi = None
+    for name, prog in [("uni", uni), ("bi", bi), ("pruned", pruned)]:
+        out, telem = pull(pool, want, table, program=prog, active_budget=ab)
+        exp = ref.expected_transfer_telemetry(
+            np.asarray(want), table, prog, num_nodes=n, budget=3,
+            active_budget=np.asarray(ab))
+        check_telem(f"pull {name}", telem, exp)
+        if name == "bi":
+            telem_bi = telem
+    assert pull._cache_size() == 1, pull._cache_size()
+    print("ok: telemetry collection retrace-free across programs/budgets")
+
+    # throttled push: spilled tail leaves slots untouched, counters match
+    dest = np.stack([np.arange(6) + 6 * node for node in range(n)])
+    payload = rng.normal(size=(n, 6, page)).astype(np.float32)
+    got, ptelem = bridge.push_pages(
+        pool, jnp.asarray(dest), jnp.asarray(payload), table, mesh=mesh8,
+        budget=3, active_budget=jnp.int32(2), collect_telemetry=True)
+    served = ref.rate_limit_mask(6, 3, 2)          # 2 rounds x 2 lanes
+    masked = jnp.asarray(np.where(served[None, :], dest, FREE))
+    expp = ref.push_pages_ref(pool, masked, jnp.asarray(payload), table,
+                              pages_per_node=ppn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expp))
+    exp_pt = ref.expected_transfer_telemetry(
+        dest, table, None, num_nodes=n, budget=3, active_budget=2)
+    check_telem("push throttled", ptelem, exp_pt)
+    assert int(np.asarray(ptelem.spilled).sum()) == n * 2
+    print("ok: push rate-limiter parity on the 8-ring")
+
+    # measured feedback: aggregate -> load-balanced program, bit-exact pull
+    agg = TelemetryAggregator(n, page_bytes=page * 4)
+    agg.update(telem_bi)
+    cp = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=48)
+    cp.allocate(48, policy="striped")
+    lb = cp.route_program(telemetry=agg)
+    lb.validate()
+    out_lb, telem_lb = pull(pool, want, table, program=lb, active_budget=ab)
+    exp_lb = ref.expected_transfer_telemetry(
+        np.asarray(want), table, lb, num_nodes=n, budget=3,
+        active_budget=np.asarray(ab))
+    check_telem("pull load-balanced", telem_lb, exp_lb)
+    want_np = np.asarray(want)
+    masked_want = np.stack([
+        np.where(ref.rate_limit_mask(want_np.shape[1], 3, int(ab[i])),
+                 want_np[i], FREE) for i in range(n)])
+    np.testing.assert_array_equal(
+        np.asarray(out_lb),
+        np.asarray(ref.pull_pages_ref(pool, jnp.asarray(masked_want), table,
+                                      pages_per_node=ppn, program=lb)))
+    print("ok: telemetry-compiled load-balanced program bit-exact")
 
 
 if __name__ == "__main__":

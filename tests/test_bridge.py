@@ -112,6 +112,79 @@ def test_rate_limited_pull_single_node_drops_tail():
     np.testing.assert_array_equal(got[0, 15:], np.zeros_like(exp[0, 15:]))
 
 
+def test_loopback_pull_pads_multidim_pages():
+    """Regression: the n == 1 path must trim round padding on the request
+    dim, not the second-to-last *page* dim (multi-dim pages + pad > 0)."""
+    rng = np.random.default_rng(5)
+    pool = jnp.asarray(rng.normal(size=(8, 4, 2, 3)).astype(np.float32))
+    table = MemPortTable.striped(8, 1, 8)
+    want = jnp.asarray([[0, 3, 5, FREE, 7, 2]], jnp.int32)  # 6 reqs, budget 4
+    got = bridge.pull_pages(pool, want, table, mesh=None, budget=4)
+    exp = ref.pull_pages_ref(pool, want, table, pages_per_node=8)
+    assert got.shape == (1, 6, 4, 2, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp))
+
+
+def test_rate_limits_spill_restore_ends_with_clean_measurement():
+    """Regression: the spill-feedback restore must key on the *last*
+    measurement, not the EWMA (which never decays to zero), or a straggler
+    could never be throttled again after a single historic spill."""
+    from repro.telemetry import BridgeTelemetry, TelemetryAggregator
+    n = 4
+    cp = ControlPlane(num_nodes=n, pages_per_node=8, num_logical=8)
+    for _ in range(8):
+        for node in range(n):
+            cp.record_step_time(node, 2.5 if node == 3 else 1.0)
+    agg = TelemetryAggregator(n)
+
+    def telem(spilled):
+        z = jnp.zeros((n,), jnp.int32)
+        zs = jnp.zeros((n, n - 1), jnp.int32)
+        return BridgeTelemetry(
+            slot_served=zs, loopback_served=z + 4,
+            spilled=jnp.asarray(spilled, jnp.int32), pruned=z,
+            traffic=jnp.zeros((n, n), jnp.int32), epoch_cw=zs, epoch_ccw=zs)
+
+    agg.update(telem([0, 0, 0, 6]))          # throttled step spilled
+    assert cp.rate_limits(8, telemetry=agg)[3] == 8   # restore
+    agg.update(telem([0, 0, 0, 0]))          # clean step measured
+    assert agg.spilled[3] > 0                # EWMA still remembers...
+    assert cp.rate_limits(8, telemetry=agg)[3] == 4   # ...throttle resumes
+
+
+def test_rate_limited_push_single_node_drops_tail():
+    """Regression: the write path must honour ``active_budget`` too.
+
+    Pull throttled while push didn't — now both share the spill semantics:
+    with budget=8, overprovision=1 and active_budget=5, 3 rounds write only
+    the first 15 of 24 pages; the rest spill and their slots stay untouched.
+    """
+    pool = make_pool_np(32, 4)
+    table = MemPortTable.striped(24, 1, 32)
+    dest = jnp.arange(24, dtype=jnp.int32)[None, :]
+    payload = (jnp.ones((1, 24, 4), jnp.float32)
+               * jnp.arange(1, 25)[None, :, None])
+    got = np.asarray(bridge.push_pages(
+        pool, dest, payload, table, mesh=None, budget=8,
+        active_budget=jnp.int32(5)))
+    served = ref.rate_limit_mask(24, 8, 5)
+    assert served.sum() == 15
+    masked = jnp.where(jnp.asarray(served)[None, :], dest, FREE)
+    exp = np.asarray(ref.push_pages_ref(pool, masked, payload, table,
+                                        pages_per_node=32))
+    np.testing.assert_allclose(got, exp)
+    # the spilled pages' slots hold their original contents
+    flat = np.asarray(ref.flat_index(table, jnp.arange(15, 24), 32))
+    np.testing.assert_allclose(got[flat], np.asarray(pool)[flat])
+    # overprovisioned rounds absorb the throttle: every page lands
+    got_all = np.asarray(bridge.push_pages(
+        pool, dest, payload, table, mesh=None, budget=8, overprovision=2,
+        active_budget=jnp.int32(5)))
+    exp_all = np.asarray(ref.push_pages_ref(pool, dest, payload, table,
+                                            pages_per_node=32))
+    np.testing.assert_allclose(got_all, exp_all)
+
+
 # ---------------------------------------------------------------------------
 # Route programs (runtime circuit schedules)
 # ---------------------------------------------------------------------------
@@ -315,6 +388,53 @@ def test_revive_preserves_occupied_slots():
     home = np.asarray(cp.table().home)
     mapped = home != FREE
     assert (home[mapped] == 1).all()
+
+
+def test_route_program_keeps_failed_ranks_distances():
+    """Regression: a failed node's *rank* still issues bridge requests (the
+    mesh never shrinks), so pruning must not drop the distances it needs.
+
+    2-node repro: fail node 1 -> all pages homed on node 0; rank 1 reaches
+    them at ring distance 1, which an alive-nodes-only prune would cut —
+    silently zeroing every page rank 1 pulls (e.g. zero_bridge restore)."""
+    cp = ControlPlane(num_nodes=2, pages_per_node=8, num_logical=8)
+    cp.allocate(4, policy="striped")
+    cp.fail_node(1)
+    prog = cp.route_program()
+    assert list(prog.live_distances()) == [1]
+    # pulled through the oracle: rank 1's requests survive the program
+    pool = make_pool_np(16, 4)
+    want = jnp.asarray(np.tile(np.arange(4, dtype=np.int32), (2, 1)))
+    got = ref.pull_pages_ref(pool, want, cp.table(), pages_per_node=8,
+                             program=prog)
+    full = ref.pull_pages_ref(pool, want, cp.table(), pages_per_node=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(full))
+
+
+def test_release_respects_slot_quarantine():
+    """fail -> release -> revive: releasing a region must not hand slots
+    back to a dead node's free list (a heartbeat monitor may mark a node
+    dead before any remap ran); revive reclaims them from the table."""
+    cp = ControlPlane(num_nodes=2, pages_per_node=8, num_logical=16)
+    region = cp.allocate(6, policy="affinity", affinity=1)
+    # monitor-style death: marked dead, pages not (yet) remapped
+    cp.nodes[1].alive = False
+    cp._free[1] = []
+    cp.release(region)
+    assert cp.free_slots(1) == 0          # quarantine respected
+    assert np.all(np.asarray(cp._home) == FREE)
+    cp.revive_node(1)
+    # revive rebuilds from the table: the released slots come back
+    assert cp.free_slots(1) == 8
+    region2 = cp.allocate(4, policy="affinity", affinity=1)
+    assert np.all(np.asarray(cp.table().home)[region2.page_ids] == 1)
+    # the full fail_node path stays consistent with release
+    cp2 = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=16)
+    r = cp2.allocate(8, policy="striped")
+    cp2.fail_node(2)
+    cp2.release(r)                         # all pages re-homed to survivors
+    assert cp2.free_slots(2) == 0
+    assert sum(cp2.free_slots(i) for i in (0, 1, 3)) == 24
 
 
 def test_migration_plan_roundtrips_through_table():

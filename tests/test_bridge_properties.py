@@ -15,6 +15,7 @@ except ImportError:                      # minimal environments
 from repro.core import bridge, ref, steering
 from repro.core.memport import FREE, MemPortTable
 from repro.core.control_plane import ControlPlane
+from repro.telemetry import counters as tcounters  # noqa: F401 (structure)
 
 
 def make_pool_np(num_slots, page, seed=0):
@@ -66,6 +67,97 @@ def test_control_plane_invariants(seed, nodes):
     assert len(pairs) == mapped.sum(), "slot double-booked"
     for h in home[mapped]:
         assert cp.nodes[h].alive, "page homed on dead node"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    num_nodes=st.integers(1, 6),
+    budget=st.integers(1, 6),
+    active_budget=st.integers(1, 6),
+    overprovision=st.integers(1, 2),
+    seed=st.integers(0, 10_000),
+)
+def test_pull_telemetry_matches_oracle_property(num_nodes, budget,
+                                                active_budget, overprovision,
+                                                seed):
+    """Counters == the oracle's per-request walk for arbitrary programs,
+    budgets, throttles and request lists (dups, FREE holes, unmapped)."""
+    rng = np.random.default_rng(seed)
+    tn, ppn = num_nodes, 8
+    pool = make_pool_np(tn * ppn, 4, seed)
+    num_logical = int(rng.integers(1, tn * ppn + 1))
+    table = MemPortTable.striped(num_logical, tn, ppn)
+    r = int(rng.integers(1, 16))
+    # ids beyond num_logical-1 are invalid; stay in-range but allow FREE
+    want = rng.integers(-1, num_logical, size=(1, r)).astype(np.int32)
+    if tn > 1 and rng.random() < 0.7:
+        keep = [d for d in range(1, tn) if rng.random() < 0.7]
+        base = (steering.bidirectional_program(tn) if rng.random() < 0.5
+                else steering.unidirectional_program(tn))
+        program = steering.pruned_program(base, keep)
+    else:
+        program = None
+    got, telem = bridge.pull_pages(
+        pool, jnp.asarray(want), table, mesh=None, budget=budget,
+        overprovision=overprovision, active_budget=jnp.int32(active_budget),
+        table_nodes=tn, program=program, collect_telemetry=True)
+    exp = ref.expected_transfer_telemetry(
+        want, table, program, num_nodes=tn, budget=budget,
+        active_budget=active_budget, overprovision=overprovision)
+    for name in ("slot_served", "loopback_served", "spilled", "pruned",
+                 "traffic", "epoch_cw", "epoch_ccw"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(telem, name)), np.asarray(getattr(exp, name)),
+            err_msg=name)
+    # conservation: live requests all end up served, spilled or pruned
+    home = np.asarray(table.home)
+    live = int(((want >= 0) & (home[np.clip(want, 0, None)] >= 0)).sum())
+    total = (int(np.asarray(telem.served_total()).sum())
+             + int(np.asarray(telem.spilled).sum())
+             + int(np.asarray(telem.pruned).sum()))
+    assert total == live
+    # pushes count with identical semantics
+    payload = rng.normal(size=(1, r, 4)).astype(np.float32)
+    _, ptelem = bridge.push_pages(
+        pool, jnp.asarray(want), jnp.asarray(payload), table, mesh=None,
+        budget=budget, overprovision=overprovision,
+        active_budget=jnp.int32(active_budget), table_nodes=tn,
+        program=program, collect_telemetry=True)
+    for name in ("slot_served", "spilled", "pruned", "traffic"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ptelem, name)),
+            np.asarray(getattr(exp, name)), err_msg=f"push {name}")
+
+
+@settings(max_examples=20, deadline=None)
+@given(num_nodes=st.integers(2, 12), seed=st.integers(0, 10_000))
+def test_load_balanced_program_properties(num_nodes, seed):
+    """Random measured loads: congruent offsets, live == measured (when
+    pruning), and the bottleneck direction is never worse than the static
+    shortest-way split under the same loads."""
+    rng = np.random.default_rng(seed)
+    n = num_nodes
+    w = np.where(rng.random(n - 1) < 0.6, rng.integers(0, 50, n - 1), 0)
+    p = steering.load_balanced_program(n, w)
+    p.validate()
+    assert list(p.live_distances()) == (np.nonzero(w > 0)[0] + 1).tolist()
+    off, live = np.asarray(p.offsets), np.asarray(p.live)
+    ep = np.asarray(p.epoch)
+    assert (ep[~live] == -1).all() and (off[~live] == 0).all()
+    for e in set(ep[live].tolist()):
+        at_e = live & (ep == e)
+        assert (off[at_e] > 0).sum() <= 1 and (off[at_e] < 0).sum() <= 1
+
+    def bottleneck(prog):
+        o, lv = np.asarray(prog.offsets), np.asarray(prog.live)
+        return max(w[lv & (o > 0)].sum(), w[lv & (o < 0)].sum())
+
+    bi = steering.pruned_program(steering.bidirectional_program(n),
+                                 (np.nonzero(w > 0)[0] + 1).tolist())
+    assert bottleneck(p) <= bottleneck(bi)
+    # unpruned keeps every distance wired (zero-weight ones ride along)
+    p_full = steering.load_balanced_program(n, w, prune=False)
+    assert list(p_full.live_distances()) == list(range(1, n))
 
 
 @settings(max_examples=20, deadline=None)

@@ -1,0 +1,552 @@
+"""The measurement plane: in-band counters + aggregation + closed loop.
+
+Covers the telemetry acceptance contract:
+
+* counters exactly match the oracle's per-request walk for arbitrary
+  programs, budgets and placements (single-process loopback here; the 8-way
+  ring re-checks in tests/distributed/run_bridge_8dev.py),
+* collection is a zero-retrace runtime output: swapping programs / tables /
+  budgets with collection on hits the same jit cache entry,
+* counters are deterministic under jit and scan and bit-identical between
+  ``edge_buffer`` modes,
+* the closed loop works: measured skew -> load-balanced program with lower
+  predicted round latency than static bidirectional; observed spills ->
+  adapted rate limits -> zero spills.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bridge, perfmodel, ref, steering
+from repro.core.control_plane import ControlPlane
+from repro.core.memport import FREE, MemPortTable
+from repro.telemetry import (BridgeTelemetry, TelemetryAggregator,
+                             counters as tcounters)
+
+
+def make_pool(num_slots, page, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(num_slots, page)).astype(np.float32))
+
+
+def assert_telem_equal(got: BridgeTelemetry, exp: BridgeTelemetry, msg=""):
+    for name in ("slot_served", "loopback_served", "spilled", "pruned",
+                 "traffic", "epoch_cw", "epoch_ccw"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, name)), np.asarray(getattr(exp, name)),
+            err_msg=f"{msg}{name}")
+
+
+# ---------------------------------------------------------------------------
+# Counter correctness vs the oracle
+# ---------------------------------------------------------------------------
+
+def test_pull_telemetry_matches_oracle_loopback():
+    tn, ppn, budget = 4, 8, 4
+    pool = make_pool(tn * ppn, 4)
+    table = MemPortTable.striped(12, tn, ppn)
+    want = jnp.asarray(np.arange(12, dtype=np.int32)[None, :])
+    for prog in (steering.bidirectional_program(tn),
+                 steering.unidirectional_program(tn),
+                 steering.pruned_program(steering.bidirectional_program(tn),
+                                         [1, 3])):
+        out, telem = bridge.pull_pages(pool, want, table, mesh=None,
+                                       budget=budget, table_nodes=tn,
+                                       program=prog, collect_telemetry=True)
+        exp = ref.expected_transfer_telemetry(want, table, prog, num_nodes=tn,
+                                             budget=budget)
+        assert_telem_equal(telem, exp)
+        # ... and collection never changes the data path's result
+        plain = bridge.pull_pages(pool, want, table, mesh=None, budget=budget,
+                                  table_nodes=tn, program=prog)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(plain))
+
+
+def test_push_telemetry_matches_oracle_loopback():
+    tn, ppn, budget = 4, 8, 4
+    pool = make_pool(tn * ppn, 4)
+    table = MemPortTable.striped(12, tn, ppn)
+    dest = jnp.asarray(np.arange(12, dtype=np.int32)[None, :])
+    payload = jnp.ones((1, 12, 4), jnp.float32)
+    prog = steering.pruned_program(steering.bidirectional_program(tn), [2])
+    _, telem = bridge.push_pages(pool, dest, payload, table, mesh=None,
+                                 budget=budget, table_nodes=tn, program=prog,
+                                 collect_telemetry=True)
+    exp = ref.expected_transfer_telemetry(dest, table, prog, num_nodes=tn,
+                                         budget=budget)
+    assert_telem_equal(telem, exp)
+
+
+def test_telemetry_counts_spills_and_unmapped():
+    """FREE holes and unmapped pages are not live; throttled tails spill."""
+    tn, ppn, budget = 2, 16, 4
+    pool = make_pool(tn * ppn, 4)
+    table = MemPortTable.empty(20).program(
+        np.arange(10), np.zeros(10, np.int64), np.arange(10))
+    # 12 requests: 2 FREE holes, 2 unmapped (ids 15, 16), 8 live
+    want = jnp.asarray([[0, 1, FREE, 2, 15, 3, 4, FREE, 16, 5, 6, 7]],
+                       jnp.int32)
+    ab = jnp.int32(2)
+    out, telem = bridge.pull_pages(pool, want, table, mesh=None,
+                                   budget=budget, table_nodes=tn,
+                                   active_budget=ab, collect_telemetry=True)
+    exp = ref.expected_transfer_telemetry(want, table, None, num_nodes=tn,
+                                         budget=budget, active_budget=2)
+    assert_telem_equal(telem, exp)
+    # rounds = 3, window = 6: live requests at idx >= 6 spill (4 of them)
+    assert int(telem.spilled[0]) == 4
+    assert int(telem.served_total()[0]) == 4  # idx<6 minus holes/unmapped
+    # conservation: every live request is served, spilled or pruned
+    live = 8
+    assert (int(telem.served_total()[0]) + int(telem.spilled[0])
+            + int(telem.pruned[0])) == live
+
+
+def test_telemetry_identical_across_edge_buffer_modes():
+    tn, ppn, budget = 4, 8, 3
+    pool = make_pool(tn * ppn, 4)
+    table = MemPortTable.striped(16, tn, ppn)
+    want = jnp.asarray(
+        np.random.default_rng(3).integers(-1, 16, size=(1, 10)), jnp.int32)
+    prog = steering.bidirectional_program(tn)
+    telems = []
+    for eb in (True, False):
+        _, t = bridge.pull_pages(pool, want, table, mesh=None, budget=budget,
+                                 table_nodes=tn, program=prog,
+                                 edge_buffer=eb, collect_telemetry=True)
+        telems.append(t)
+    assert_telem_equal(telems[0], telems[1], msg="edge_buffer ")
+
+
+# ---------------------------------------------------------------------------
+# Zero-retrace + determinism
+# ---------------------------------------------------------------------------
+
+def test_telemetry_collection_never_retraces_on_program_swap():
+    tn, ppn, budget = 4, 8, 4
+    pool = make_pool(tn * ppn, 4)
+    table = MemPortTable.striped(12, tn, ppn)
+    want = jnp.asarray(np.arange(12, dtype=np.int32)[None, :])
+    pull = jax.jit(functools.partial(
+        bridge.pull_pages, mesh=None, budget=budget, table_nodes=tn,
+        collect_telemetry=True))
+    progs = [steering.bidirectional_program(tn),
+             steering.unidirectional_program(tn),
+             steering.pruned_program(steering.bidirectional_program(tn), [2]),
+             steering.link_avoiding_program(tn, +1)]
+    for prog in progs:
+        for ab in (4, 2):
+            out, telem = pull(pool, want, table, program=prog,
+                              active_budget=jnp.int32(ab))
+            exp = ref.expected_transfer_telemetry(
+                want, table, prog, num_nodes=tn, budget=budget,
+                active_budget=ab)
+            assert_telem_equal(telem, exp, msg=f"ab={ab} ")
+    # swapping programs / budgets / tables with collection on: one trace
+    t2 = MemPortTable.striped(12, tn, ppn).program(
+        np.array([0]), np.array([2]), np.array([7]))
+    pull(pool, want, t2, program=progs[0], active_budget=jnp.int32(3))
+    assert pull._cache_size() == 1, pull._cache_size()
+
+
+def test_telemetry_deterministic_under_jit_and_scan():
+    tn, ppn, budget = 4, 8, 4
+    pool = make_pool(tn * ppn, 4)
+    table = MemPortTable.striped(12, tn, ppn)
+    want = jnp.asarray(np.arange(12, dtype=np.int32)[None, :])
+    prog = steering.bidirectional_program(tn)
+
+    def one(carry, _):
+        _out, t = bridge.pull_pages(pool, want, table, mesh=None,
+                                    budget=budget, table_nodes=tn,
+                                    program=prog, collect_telemetry=True)
+        return carry, t
+
+    @jax.jit
+    def steps(n_unused):
+        _, ts = jax.lax.scan(one, 0, None, length=3)
+        return ts
+
+    ts = steps(0)
+    _, single = bridge.pull_pages(pool, want, table, mesh=None, budget=budget,
+                                  table_nodes=tn, program=prog,
+                                  collect_telemetry=True)
+    for name in ("slot_served", "loopback_served", "spilled", "pruned",
+                 "traffic", "epoch_cw", "epoch_ccw"):
+        stacked = np.asarray(getattr(ts, name))
+        expect = np.asarray(getattr(single, name))
+        for i in range(3):  # every scan iteration bit-identical
+            np.testing.assert_array_equal(stacked[i], expect, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Aggregator
+# ---------------------------------------------------------------------------
+
+def _fake_telem(n, traffic_rows, spilled=None):
+    """Telemetry with given [rows, n] traffic; distances derived from it."""
+    traffic_rows = np.asarray(traffic_rows, np.int32)
+    rows = traffic_rows.shape[0]
+    slot = np.zeros((rows, n - 1), np.int32)
+    loop = np.zeros((rows,), np.int32)
+    for i in range(rows):
+        for h in range(n):
+            d = (h - i) % n
+            if d == 0:
+                loop[i] += traffic_rows[i, h]
+            else:
+                slot[i, d - 1] += traffic_rows[i, h]
+    bi = steering.bidirectional_program(n)
+    off = np.asarray(bi.offsets)
+    ep = np.asarray(bi.epoch)
+    cw = np.zeros((rows, n - 1), np.int32)
+    ccw = np.zeros((rows, n - 1), np.int32)
+    for k in range(n - 1):
+        tgt = cw if off[k] > 0 else ccw
+        tgt[:, ep[k]] += slot[:, k]
+    return BridgeTelemetry(
+        slot_served=jnp.asarray(slot), loopback_served=jnp.asarray(loop),
+        spilled=jnp.asarray(np.zeros((rows,), np.int32) if spilled is None
+                            else np.asarray(spilled, np.int32)),
+        pruned=jnp.asarray(np.zeros((rows,), np.int32)),
+        traffic=jnp.asarray(traffic_rows),
+        epoch_cw=jnp.asarray(cw), epoch_ccw=jnp.asarray(ccw))
+
+
+def test_aggregator_ewma_and_views():
+    n = 4
+    agg = TelemetryAggregator(n, page_bytes=64, alpha=0.5)
+    t1 = _fake_telem(n, np.asarray([[2, 4, 0, 0]] * n))
+    agg.update(t1)
+    np.testing.assert_allclose(agg.traffic_matrix(), [[2, 4, 0, 0]] * n)
+    # distance histogram: every requester sends 4 pages at distance 1 mod
+    # placement; just check totals & bytes scaling
+    assert agg.distance_pages().sum() > 0
+    np.testing.assert_allclose(agg.distance_bytes(),
+                               agg.distance_pages() * 64)
+    t2 = _fake_telem(n, np.asarray([[4, 0, 0, 0]] * n))
+    agg.update(t2)
+    # EWMA with alpha=0.5: halfway between the two steps
+    np.testing.assert_allclose(agg.traffic_matrix(), [[3, 2, 0, 0]] * n)
+    assert agg.steps == 2
+    util = agg.link_utilization()
+    assert 0 <= util["cw"] <= 1 and 0 <= util["ccw"] <= 1
+    r, share = agg.dominant_requester(1)
+    assert r != 1 and 0 <= share <= 1
+
+
+def test_aggregator_spill_rate_and_rejects():
+    n = 2
+    agg = TelemetryAggregator(n)
+    with pytest.raises(ValueError):
+        TelemetryAggregator(n, alpha=0.0)
+    agg.update(_fake_telem(n, np.asarray([[3, 1], [0, 4]]),
+                           spilled=[4, 0]))
+    rate = agg.spill_rate()
+    assert rate[0] == pytest.approx(0.5)
+    assert rate[1] == 0.0
+    with pytest.raises(ValueError):
+        agg.update(_fake_telem(4, np.zeros((4, 4))))
+
+
+def test_aggregator_accepts_loopback_rows():
+    """Loopback telemetry (1 row) folds into row 0 of an N-node aggregate."""
+    tn, ppn = 4, 8
+    pool = make_pool(tn * ppn, 4)
+    table = MemPortTable.striped(12, tn, ppn)
+    want = jnp.asarray(np.arange(12, dtype=np.int32)[None, :])
+    _, telem = bridge.pull_pages(pool, want, table, mesh=None, budget=4,
+                                 table_nodes=tn, collect_telemetry=True)
+    agg = TelemetryAggregator(tn)
+    agg.update(telem)
+    assert agg.traffic_matrix()[0].sum() == 12
+    assert agg.traffic_matrix()[1:].sum() == 0
+    assert agg.live_distances() == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# The closed loop
+# ---------------------------------------------------------------------------
+
+def test_load_balanced_program_beats_static_under_skew():
+    """Acceptance: measured skew -> load-balanced direction assignment with
+    strictly lower predicted round latency than static bidirectional."""
+    n, budget, page_bytes = 8, 8, 1 << 18
+    w = np.array([6.0, 3.0, 2.0, 0, 0, 0, 0])   # skew: near distances only
+    lb = steering.load_balanced_program(n, w)
+    lb.validate()
+    bi = steering.bidirectional_program(n)
+    lat_lb = perfmodel.predict_round_latency_us(lb, page_bytes, budget,
+                                                slot_pages=w)
+    lat_bi = perfmodel.predict_round_latency_us(bi, page_bytes, budget,
+                                                slot_pages=w)
+    assert lat_lb < lat_bi
+    # the balanced split's bottleneck direction moves fewer bytes
+    def direction_loads(p):
+        off, live = np.asarray(p.offsets), np.asarray(p.live)
+        return (w[live & (off > 0)].sum(), w[live & (off < 0)].sum())
+    assert max(direction_loads(lb)) < max(direction_loads(bi))
+
+
+def test_route_program_from_measured_telemetry():
+    """Pruning follows measurement, not placement reachability."""
+    n, ppn = 4, 8
+    cp = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=32)
+    cp.allocate(16, policy="striped")      # placement reaches distances 1-3
+    agg = TelemetryAggregator(n)
+    # ... but traffic only ever crossed distance 2
+    traffic = np.zeros((n, n), np.int32)
+    for i in range(n):
+        traffic[i, (i + 2) % n] = 5
+    agg.update(_fake_telem(n, traffic))
+    prog = cp.route_program(telemetry=agg)
+    assert list(prog.live_distances()) == [2]
+    # placement-based compile still sees 1-3
+    assert list(cp.route_program().live_distances()) == [1, 2, 3]
+    # an empty measurement falls back to placement
+    assert list(cp.route_program(
+        telemetry=TelemetryAggregator(n)).live_distances()) == [1, 2, 3]
+
+
+def test_censored_measurement_does_not_prune():
+    """A measurement taken while requests were dropped (spilled or pruned)
+    is blind to the demand it dropped: no distance may be pruned from it.
+    After a clean (drop-free) measurement, pruning resumes."""
+    n = 4
+    cp = ControlPlane(num_nodes=n, pages_per_node=8, num_logical=32)
+    cp.allocate(16, policy="striped")
+    traffic = np.zeros((n, n), np.int32)
+    for i in range(n):
+        traffic[i, (i + 1) % n] = 5      # only d=1 got *served*...
+    agg = TelemetryAggregator(n)
+    agg.update(_fake_telem(n, traffic, spilled=[3, 0, 0, 0]))
+    prog = cp.route_program(telemetry=agg)
+    # ...but the spills hide real demand: everything stays wired
+    assert list(prog.live_distances()) == [1, 2, 3]
+    prog.validate()
+    # clean measurement -> measured pruning resumes
+    agg2 = TelemetryAggregator(n)
+    agg2.update(_fake_telem(n, traffic))
+    assert list(cp.route_program(telemetry=agg2).live_distances()) == [1]
+
+
+def test_route_program_telemetry_respects_link_failure():
+    n = 4
+    cp = ControlPlane(num_nodes=n, pages_per_node=8, num_logical=32)
+    cp.allocate(16, policy="striped")
+    agg = TelemetryAggregator(n)
+    traffic = np.zeros((n, n), np.int32)
+    for i in range(n):
+        traffic[i, (i + 1) % n] = 5
+        traffic[i, (i + 3) % n] = 5
+    agg.update(_fake_telem(n, traffic))
+    cp.report_link_failure(+1)
+    prog = cp.route_program(telemetry=agg)
+    off, live = np.asarray(prog.offsets), np.asarray(prog.live)
+    assert (off[live] < 0).all()                    # cw fully avoided
+    assert list(prog.live_distances()) == [1, 3]    # measured prune kept
+
+
+def test_measure_recompile_drives_spills_to_zero():
+    """Acceptance: one measure -> recompile iteration zeroes the spills."""
+    tn, ppn, budget = 1, 32, 8
+    pool = make_pool(tn * ppn, 4)
+    cp = ControlPlane(num_nodes=tn, pages_per_node=ppn, num_logical=24)
+    cp.allocate(24, policy="striped")
+    table = cp.table()
+    want = jnp.asarray(np.arange(24, dtype=np.int32)[None, :])
+    # a straggler report throttled node 0 to budget 4 -> spills
+    cp.nodes[0].step_times = [2.5] * 4
+    limits = cp.rate_limits(budget)
+    assert limits[0] == budget  # single node: it IS the median; pin manually
+    throttled = jnp.int32(4)
+    _, telem = bridge.pull_pages(pool, want, table, mesh=None, budget=budget,
+                                 table_nodes=tn, active_budget=throttled,
+                                 collect_telemetry=True)
+    assert int(telem.spilled.sum()) > 0
+    agg = TelemetryAggregator(tn)
+    agg.update(telem)
+    assert agg.spill_rate()[0] > 0
+    # recompile: spill feedback restores the budget
+    new_limits = cp.rate_limits(budget, telemetry=agg)
+    _, telem2 = bridge.pull_pages(
+        pool, want, table, mesh=None, budget=budget, table_nodes=tn,
+        active_budget=jnp.int32(int(new_limits[0])), collect_telemetry=True)
+    assert int(telem2.spilled.sum()) == 0
+
+
+def test_affinity_migration_rehomes_hot_pages():
+    n = 4
+    cp = ControlPlane(num_nodes=n, pages_per_node=8, num_logical=32)
+    cp.allocate(8, policy="affinity", affinity=2)
+    agg = TelemetryAggregator(n)
+    traffic = np.zeros((n, n), np.int32)
+    traffic[0, 2] = 12   # node 0 hammers pages homed on node 2
+    traffic[2, 2] = 2
+    agg.update(_fake_telem(n, traffic))
+    plan = cp.affinity_migration(agg)
+    assert plan and all(s.old_home == 2 and s.new_home == 0 for s in plan)
+    # plan applied: pages now homed at the dominant requester
+    homes = np.asarray(cp.table().home)
+    assert (homes[[s.page_id for s in plan]] == 0).all()
+    # the plan round-trips through the table like fail_node's plans
+    assert len(plan) <= 8
+    # below-threshold traffic migrates nothing
+    agg2 = TelemetryAggregator(n)
+    t2 = np.zeros((n, n), np.int32)
+    t2[0, 1], t2[1, 1], t2[2, 1] = 2, 5, 2
+    agg2.update(_fake_telem(n, t2))
+    assert cp.affinity_migration(agg2) == []
+
+
+def test_affinity_migration_skips_dead_homes():
+    """A monitor-marked-dead node is no migration source: its data is gone
+    and its vacated slots must stay quarantined (symmetric to release)."""
+    n = 4
+    cp = ControlPlane(num_nodes=n, pages_per_node=8, num_logical=32)
+    cp.allocate(8, policy="affinity", affinity=2)
+    cp.nodes[2].alive = False
+    cp._free[2] = []
+    traffic = np.zeros((n, n), np.int32)
+    traffic[0, 2] = 12
+    agg = TelemetryAggregator(n)
+    agg.update(_fake_telem(n, traffic))
+    assert cp.affinity_migration(agg) == []
+    assert cp.free_slots(2) == 0
+
+
+def test_rate_limits_accepts_bare_bridge_telemetry():
+    """One step's counters work directly, like route_program(telemetry=)."""
+    tn, ppn, budget = 1, 32, 8
+    pool = make_pool(tn * ppn, 4)
+    cp = ControlPlane(num_nodes=tn, pages_per_node=ppn, num_logical=24)
+    cp.allocate(24, policy="striped")
+    want = jnp.asarray(np.arange(24, dtype=np.int32)[None, :])
+    _, telem = bridge.pull_pages(pool, want, cp.table(), mesh=None,
+                                 budget=budget, table_nodes=tn,
+                                 active_budget=jnp.int32(4),
+                                 collect_telemetry=True)
+    assert int(telem.spilled.sum()) > 0
+    np.testing.assert_array_equal(cp.rate_limits(budget, telemetry=telem),
+                                  [budget])
+
+
+def test_route_program_telemetry_honours_unidirectional():
+    """bidirectional=False pins one direction even under measured steering;
+    measured pruning still applies."""
+    n = 4
+    cp = ControlPlane(num_nodes=n, pages_per_node=8, num_logical=32)
+    cp.allocate(16, policy="striped")
+    agg = TelemetryAggregator(n)
+    traffic = np.zeros((n, n), np.int32)
+    for i in range(n):
+        traffic[i, (i + 3) % n] = 5
+    agg.update(_fake_telem(n, traffic))
+    prog = cp.route_program(telemetry=agg, bidirectional=False)
+    off, live = np.asarray(prog.offsets), np.asarray(prog.live)
+    assert (off[live] > 0).all()                 # one direction only
+    assert list(prog.live_distances()) == [3]    # measured prune kept
+
+
+def test_node_budget_manual_override():
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=8)
+    base = cp.rate_limits(8)
+    np.testing.assert_array_equal(base, [8, 8, 8, 8])
+    cp.nodes[1].budget = 3
+    np.testing.assert_array_equal(cp.rate_limits(8), [8, 3, 8, 8])
+    # the override wins over spill feedback
+    agg = TelemetryAggregator(4)
+    agg.update(_fake_telem(4, np.zeros((4, 4), np.int32),
+                           spilled=[0, 5, 0, 0]))
+    np.testing.assert_array_equal(cp.rate_limits(8, telemetry=agg),
+                                  [8, 3, 8, 8])
+    cp.nodes[1].budget = 0  # back to unlimited: spill feedback applies
+    np.testing.assert_array_equal(cp.rate_limits(8, telemetry=agg),
+                                  [8, 8, 8, 8])
+
+
+# ---------------------------------------------------------------------------
+# kvbridge / zero_bridge threading
+# ---------------------------------------------------------------------------
+
+def test_kvbridge_decode_pull_telemetry():
+    from repro.core import kvbridge
+    b, h, kv, hd, pt, mp = 2, 4, 2, 8, 4, 2
+    cache = kvbridge.init_cache(1, b, pt * mp, pt, kv, hd, mesh=None,
+                                dtype=jnp.float32)
+    layer = jax.tree.map(lambda x: x[0], cache.layers)
+    lengths = jnp.asarray([5, 4], jnp.int32)
+    q = jnp.asarray(np.random.default_rng(0).normal(size=(b, h, hd)),
+                    jnp.float32)
+    out, telem = kvbridge.decode_attention_pull(
+        q, layer, cache.table, lengths, page_tokens=pt, max_pages=mp,
+        mesh=None, budget=4, collect_telemetry=True)
+    plain = kvbridge.decode_attention_pull(
+        q, layer, cache.table, lengths, page_tokens=pt, max_pages=mp,
+        mesh=None, budget=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(plain))
+    # both sequences have one flushed page; k and v pulls both counted
+    assert int(telem.served_total().sum()) == 2 * 2
+
+
+def test_kvbridge_append_telemetry():
+    from repro.core import kvbridge
+    b, kv, hd, pt, mp = 2, 2, 8, 4, 2
+    cache = kvbridge.init_cache(1, b, pt * mp, pt, kv, hd, mesh=None,
+                                dtype=jnp.float32)
+    layer = jax.tree.map(lambda x: x[0], cache.layers)
+    lengths = jnp.asarray([pt - 1, 1], jnp.int32)  # seq 0 at a page boundary
+    k_new = jnp.ones((b, kv, hd), jnp.float32)
+    new_layer, telem = kvbridge.append(
+        layer, cache.table, lengths, k_new, k_new, page_tokens=pt,
+        max_pages=mp, mesh=None, collect_telemetry=True)
+    # one page flush (k + v) crossed the bridge
+    assert int(telem.served_total().sum()) == 2
+    plain = kvbridge.append(layer, cache.table, lengths, k_new, k_new,
+                            page_tokens=pt, max_pages=mp, mesh=None)
+    np.testing.assert_array_equal(np.asarray(new_layer.k_pool),
+                                  np.asarray(plain.k_pool))
+
+
+def test_zero_bridge_telemetry_roundtrip():
+    from repro.core import zero_bridge
+    tree = {"w": jnp.arange(24, dtype=jnp.float32).reshape(4, 6),
+            "b": jnp.ones((3,), jnp.float32)}
+    store = zero_bridge.create_store(tree, mesh=None, page_elems=8)
+    pulled, telem = zero_bridge.pull_tree(store, mesh=None,
+                                          collect_telemetry=True)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), tree, pulled)
+    assert int(telem.served_total().sum()) == store.packer.num_pages
+    store2, telem_w = zero_bridge.push_tree(store, tree, mesh=None,
+                                            collect_telemetry=True)
+    assert int(telem_w.served_total().sum()) == store.packer.num_pages
+    assert zero_bridge.with_program(store2, None).program is None
+
+
+def test_serve_state_telemetry_accumulates():
+    from repro.serve.cache_ops import BridgeCacheOps
+    from repro.serve.step import collect_state_telemetry
+    from repro.config import ModelConfig
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=32,
+                      head_dim=8)
+    ops = BridgeCacheOps(mode="pull", max_len=8, page_tokens=2, mesh=None,
+                         budget=4, collect_telemetry=True)
+    shared = ops.init_shared(cfg, batch=2)
+    st = ops.init_layer(cfg, batch=2)
+    assert "telem" in st
+    lengths = jnp.zeros((2,), jnp.int32)
+    q = jnp.ones((2, 2, 8), jnp.float32)
+    kv_new = jnp.ones((2, 2, 8), jnp.float32)
+    for i in range(3):
+        _, st = ops.append_and_attend(cfg, st, shared, lengths + i, q,
+                                      kv_new, kv_new)
+    total = collect_state_telemetry(st)
+    assert total is not None
+    # after 3 appends from length 0, seq tails crossed one page boundary
+    # (page_tokens=2): k+v flush = 2 served pages in the cumulative counter
+    assert int(total.served_total().sum()) >= 2
