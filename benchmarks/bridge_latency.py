@@ -35,6 +35,7 @@ import numpy as np
 from repro.core import bridge, perfmodel, ref, steering
 from repro.core.control_plane import ControlPlane
 from repro.core.memport import MemPortTable
+from repro.core.topology import Topology
 from repro.telemetry import TelemetryAggregator
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
@@ -50,6 +51,13 @@ ROUTE_BUDGET = 8
 # clockwise neighbours 6:3:2 (hotspot locality) — the shape that makes the
 # static min(d, N-d) split pile every live circuit onto one direction.
 SKEW_PAGES = {1: 6, 2: 3, 3: 2}
+
+# Hierarchical fabrics compared flat-vs-two-tier: the real 8-endpoint ring
+# (2 boards x 4) plus simulated rack-scale 16 and 32 endpoint fabrics.
+HIER_FABRICS = {"8": (2, 4), "16": (4, 4), "32": (4, 8)}
+# Intra-board-heavy traffic: pages pulled from each board mate at local
+# ring delta 1/2/3+ (hotspot locality *within* the board).
+INTRA_PAGES = {1: 6, 2: 3, 3: 2}
 
 
 def route_variants() -> dict[str, steering.RouteProgram]:
@@ -138,6 +146,80 @@ def skewed_traffic_scenario() -> tuple[dict, steering.RouteProgram]:
     }, lb
 
 
+def hierarchical_scenario(num_boards: int, board_size: int) -> dict:
+    """Flat-vs-hierarchical round latency under intra-board-heavy traffic.
+
+    Builds the fabric, drives an intra-heavy request matrix (each endpoint
+    pulls INTRA_PAGES from its board mates by local ring delta), measures
+    the per-distance / per-tier loads — through the real datapath with
+    ``collect_telemetry`` when enough devices exist, through the telemetry
+    oracle otherwise (the simulated 16/32-endpoint racks) — and models one
+    round under the measured loads for the topology-blind flat
+    bidirectional schedule vs the two-tier hierarchical schedule.
+    """
+    topo = Topology.boards(num_boards, board_size)
+    n, g = topo.num_nodes, board_size
+    ppn = 16
+    cp = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=n * ppn,
+                      topology=topo)
+    cp.allocate(n * ppn, policy="striped")   # page p -> home p % n
+    table = cp.table()
+    want_rows = []
+    for i in range(n):
+        row, l_i, base = [], i % g, (i // g) * g
+        for dl, count in INTRA_PAGES.items():
+            if dl >= g:
+                continue
+            h = base + (l_i + dl) % g
+            row += [h + n * k for k in range(count)]
+        want_rows.append(row)
+    want = np.asarray(want_rows, np.int32)
+    rounds = steering.num_rounds(want.shape[1], ROUTE_BUDGET)
+
+    source = "oracle"
+    bi = steering.bidirectional_program(n)
+    if jax.device_count() >= n:
+        source = f"{n}-device ring"
+        mesh = jax.make_mesh((n,), ("data",))
+        pool = jnp.zeros((n * ppn, 4), jnp.float32)
+        with bridge.use_mesh(mesh):
+            _, telem = bridge.pull_pages(
+                pool, jnp.asarray(want), table, mesh=mesh,
+                budget=ROUTE_BUDGET, topology=topo, collect_telemetry=True)
+    else:
+        telem = ref.expected_transfer_telemetry(
+            want, table, bi, num_nodes=n, budget=ROUTE_BUDGET, topology=topo)
+
+    agg = TelemetryAggregator(n, page_bytes=ROUTE_PAGE_BYTES)
+    agg.update(telem)
+    slot_pages = agg.distance_pages() / (n * rounds)
+    slot_intra = agg.distance_intra_pages() / (n * rounds)
+    live = agg.live_distances()
+    hier = cp.route_program(telemetry=agg)
+    steering.validate_hierarchical(hier, topo)
+    flat = steering.pruned_program(bi, live)
+    kw = dict(slot_pages=slot_pages, topology=topo,
+              slot_intra_pages=slot_intra)
+    lat_flat = perfmodel.predict_round_latency_us(
+        flat, ROUTE_PAGE_BYTES, ROUTE_BUDGET, **kw)
+    lat_hier = perfmodel.predict_round_latency_us(
+        hier, ROUTE_PAGE_BYTES, ROUTE_BUDGET, **kw)
+    stats_h = perfmodel.hierarchical_route_stats(hier, topo)
+    stats_f = perfmodel.hierarchical_route_stats(flat, topo)
+    return {
+        "source": source,
+        "num_boards": num_boards,
+        "board_size": board_size,
+        "intra_pages": {str(d): c for d, c in INTRA_PAGES.items() if d < g},
+        "bytes_per_round": perfmodel.predict_round_bytes(
+            hier, ROUTE_PAGE_BYTES, ROUTE_BUDGET, slot_pages=slot_pages),
+        "board_hops_flat": stats_f["board_hops"],
+        "board_hops_hier": stats_h["board_hops"],
+        "flat_bidirectional_us": round(lat_flat, 2),
+        "hierarchical_us": round(lat_hier, 2),
+    }
+
+
 def rows(quick: bool = False) -> list[str]:
     out = []
     total = sum(perfmodel.RTT_PIPELINE_CYCLES.values())
@@ -191,6 +273,15 @@ def rows(quick: bool = False) -> list[str]:
         f"bridge_route_measured,0,source={measured['source']}"
         f" static_bi={measured['static_bidirectional_us']}us"
         f" load_balanced={measured['load_balanced_us']}us")
+    # flat ring vs board + rack fabric (8 real endpoints, 16/32 simulated)
+    bench["hierarchical"] = {}
+    for label, (boards, size) in HIER_FABRICS.items():
+        h = hierarchical_scenario(boards, size)
+        bench["hierarchical"][label] = h
+        out.append(
+            f"bridge_hier_{label},0,{boards}x{size} source={h['source']}"
+            f" flat_bi={h['flat_bidirectional_us']}us"
+            f" hier={h['hierarchical_us']}us")
     BENCH_JSON.write_text(json.dumps(bench, indent=2) + "\n")
     out.append(f"bridge_route_json,0,{BENCH_JSON.name}")
     return out

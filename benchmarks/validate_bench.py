@@ -2,9 +2,11 @@
 
 Run after ``benchmarks/bridge_latency.py``: validates that the emitted
 perf record has the expected shape (so the cross-PR trajectory stays
-machine-readable) and that the closed control loop held — the
+machine-readable) and that both closed-loop acceptance bars held — the
 telemetry-compiled load-balanced program predicts a strictly lower round
-latency than the static bidirectional split under the measured skew.
+latency than the static bidirectional split under the measured skew, and
+on every board + rack fabric the hierarchical schedule strictly beats the
+topology-blind flat bidirectional one under intra-board-heavy traffic.
 """
 from __future__ import annotations
 
@@ -15,13 +17,17 @@ import sys
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
 
 TOP_KEYS = {"sw_pull_1page_us", "num_nodes", "page_bytes", "budget",
-            "variants", "measured"}
+            "variants", "measured", "hierarchical"}
 VARIANTS = {"unidirectional", "bidirectional", "pruned", "load_balanced"}
 VARIANT_KEYS = {"epochs", "live_slots", "total_hops", "bytes_per_round",
                 "model_round_us", "model_round_us_bufferless"}
 MEASURED_KEYS = {"source", "skew_pages", "distance_pages_per_round",
                  "spilled", "pruned", "static_bidirectional_us",
                  "load_balanced_us"}
+HIER_FABRICS = {"8", "16", "32"}
+HIER_KEYS = {"source", "num_boards", "board_size", "intra_pages",
+             "bytes_per_round", "board_hops_flat", "board_hops_hier",
+             "flat_bidirectional_us", "hierarchical_us"}
 
 
 def fail(msg: str) -> None:
@@ -56,9 +62,28 @@ def main() -> None:
         fail(f"load-balanced ({m['load_balanced_us']}us) not below static "
              f"bidirectional ({m['static_bidirectional_us']}us) under the "
              f"measured skew")
+    hier = bench["hierarchical"]
+    if not HIER_FABRICS <= hier.keys():
+        fail(f"missing hierarchical fabrics "
+             f"{sorted(HIER_FABRICS - hier.keys())}")
+    for label, h in hier.items():
+        gone = HIER_KEYS - h.keys()
+        if gone:
+            fail(f"hierarchical fabric {label!r} missing keys {sorted(gone)}")
+        if h["num_boards"] * h["board_size"] != int(label):
+            fail(f"hierarchical fabric {label!r}: "
+                 f"{h['num_boards']}x{h['board_size']} endpoints mislabeled")
+        # The acceptance bar: the two-tier schedule strictly beats the
+        # topology-blind flat one under intra-board-heavy traffic.
+        if not h["hierarchical_us"] < h["flat_bidirectional_us"]:
+            fail(f"fabric {label}: hierarchical ({h['hierarchical_us']}us) "
+                 f"not below flat bidirectional "
+                 f"({h['flat_bidirectional_us']}us)")
+    h8 = hier["8"]
     print(f"BENCH_bridge.json ok: {len(bench['variants'])} variants, "
           f"measured {m['source']}: static {m['static_bidirectional_us']}us "
-          f"-> load-balanced {m['load_balanced_us']}us")
+          f"-> load-balanced {m['load_balanced_us']}us; hierarchical 2x4 "
+          f"{h8['flat_bidirectional_us']}us -> {h8['hierarchical_us']}us")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,9 @@
 Layers (see DESIGN.md §3):
   memport        — runtime-reprogrammable translation/steering tables (Fig. 2)
   pool           — pooled page memory sharded over the mem axis (the slaves)
+  topology       — static board + rack fabric description (two tiers)
   steering       — request preparation: distances, rounds, route schedules
+                   (flat and hierarchical circuit programs)
   bridge         — the transfer engine: ring-circuit ppermute epochs,
                    rate limiting, edge buffering (Fig. 1)
   control_plane  — orchestrator: allocation, elastic remap, stragglers
@@ -14,5 +16,6 @@ Layers (see DESIGN.md §3):
 """
 from repro.core.memport import FREE, MemPortTable  # noqa: F401
 from repro.core.pool import MemoryPool, make_pool  # noqa: F401
+from repro.core.topology import Topology  # noqa: F401
 from repro.core.bridge import pull_pages, push_pages  # noqa: F401
 from repro.core.control_plane import ControlPlane  # noqa: F401

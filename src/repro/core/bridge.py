@@ -13,10 +13,14 @@ This is the paper's datapath (Fig. 1) mapped onto a TPU pod:
   :class:`~repro.core.steering.RouteProgram` input compiled by the control
   plane: unidirectional (the historical fixed ring), bidirectional
   (min(d, N-d) shortest-way routing: ⌊N/2⌋ epochs instead of N-1), pruned to
-  the distances that actually carry traffic, or link-avoiding after a ring
-  failure.  Programs have fixed static length, so swapping them between
-  steps — like re-programming the memport table or lowering
-  ``active_budget`` — never triggers a retrace;
+  the distances that actually carry traffic, link-avoiding after a ring
+  failure, or **hierarchical** for a board + rack fabric
+  (:class:`~repro.core.topology.Topology`): the program's per-rank group
+  mask splits every offset between its same-board requesters (concurrent
+  local-ring circuits) and its board-crossing ones (exclusive gateway
+  epochs).  Programs have fixed static shapes, so swapping them between
+  steps — flat for hierarchical, like re-programming the memport table or
+  lowering ``active_budget`` — never triggers a retrace;
 * *serDES + circuit network* — one ``jax.lax.ppermute`` pair per live slot:
   request ids travel ``rank -> rank+d``, payload returns ``rank+d -> rank``.
   Every slot's wire permutation is **static** (circuit switching; note the
@@ -54,6 +58,7 @@ from repro.core.memport import FREE, MemPortTable
 from repro.core import ref as _ref
 from repro.core import steering
 from repro.core.steering import RouteProgram
+from repro.core.topology import Topology, TopoTables
 from repro.telemetry import counters as _telemetry
 
 
@@ -141,9 +146,12 @@ def _round_pull(pool_local: jax.Array, sub_ids: jax.Array, table: MemPortTable,
     prev = None
     for k, d in enumerate(steering.default_route_schedule(num_nodes)):
         # Runtime steering: slot k carries traffic only if the program wires
-        # it.  Dead slots move FREE requests, so their payload gathers are
-        # masked to zeros and their pages (if wrongly requested) are dropped.
-        serve = (dist == d) & program.live[k]
+        # it *for this rank* (the group mask — a hierarchical program may
+        # serve an offset's same-board requesters while cutting its
+        # board-crossing ones).  Dead pairings move FREE requests, so their
+        # payload gathers are masked to zeros and their pages dropped.
+        serve = ((dist == d) & program.live[k]
+                 & (program.rank_epoch[k, my] >= 0))
         req = jnp.where(serve, slot, FREE)                         # [B]
         if not edge_buffer and prev is not None:
             # A bufferless bridge serializes slots: model it explicitly.
@@ -225,7 +233,9 @@ def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
         pool = _scatter_local(pool, jnp.where(dist == 0, slot, FREE), data)
         for k, d in enumerate(steering.default_route_schedule(num_nodes)):
             fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
-            req = jnp.where((dist == d) & program.live[k], slot, FREE)
+            serve = ((dist == d) & program.live[k]
+                     & (program.rank_epoch[k, my] >= 0))
+            req = jnp.where(serve, slot, FREE)
             slot_at_home = jax.lax.ppermute(req, axis, perm=fwd)
             data_at_home = jax.lax.ppermute(data, axis, perm=fwd)
             pool = _scatter_local(pool, slot_at_home, data_at_home)
@@ -261,21 +271,42 @@ def _resolve_program(program: Optional[RouteProgram],
     return program
 
 
+def _resolve_topology(topology: Optional[Topology],
+                      num_nodes: int) -> Topology:
+    """Default (flat single-board) fabric + node-count check.
+
+    The topology is **static**: its tables enter the jitted datapath as
+    constants, so a deployment's fabric shape never appears in the jit
+    cache key — only a topology *change* retraces (as it must: it is a
+    different machine).
+    """
+    if topology is None:
+        return Topology.flat(num_nodes)
+    if topology.num_nodes != num_nodes:
+        raise ValueError(
+            f"topology spans {topology.num_nodes} endpoints; the bridge has "
+            f"{num_nodes}")
+    return topology
+
+
 def _loopback_telemetry(ids: jax.Array, table: MemPortTable,
                         program: Optional[RouteProgram], tn: int,
-                        active_budget, budget: int,
-                        rounds: int) -> _telemetry.BridgeTelemetry:
+                        active_budget, budget: int, rounds: int,
+                        topology: Optional[Topology]
+                        ) -> _telemetry.BridgeTelemetry:
     """Telemetry for the 1-device path: row i of ``ids`` is logical
     requester i; the whole batch shares ``active_budget``'s first element
     (mirroring the loopback rate limiter)."""
     prog = _resolve_program(program, tn)
+    topo = _resolve_topology(topology, tn)
+    tt = topo.tables()
     ab = jnp.clip(jnp.asarray(active_budget).reshape(-1)[0], 0, budget)
     rows = ids.reshape((-1, ids.shape[-1]))
 
     def per_row(row, my):
         return _telemetry.transfer_telemetry(
             row, table, prog, ab, my=my, num_nodes=tn, budget=budget,
-            rounds=rounds)
+            rounds=rounds, topo=tt, num_groups=topo.num_groups)
 
     return jax.vmap(per_row)(rows, jnp.arange(rows.shape[0]))
 
@@ -285,7 +316,8 @@ def _telemetry_specs(mem_axis: str) -> _telemetry.BridgeTelemetry:
     return _telemetry.BridgeTelemetry(
         slot_served=P(mem_axis, None), loopback_served=P(mem_axis),
         spilled=P(mem_axis), pruned=P(mem_axis), traffic=P(mem_axis, None),
-        epoch_cw=P(mem_axis, None), epoch_ccw=P(mem_axis, None))
+        epoch_cw=P(mem_axis, None), epoch_ccw=P(mem_axis, None),
+        slot_intra=P(mem_axis, None), tier_hops=P(mem_axis, None))
 
 
 def _loopback_mask(flat: jax.Array, ids: jax.Array, table: MemPortTable,
@@ -311,7 +343,8 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
                overprovision: int = 1,
                active_budget: Optional[jax.Array] = None,
                program: Optional[RouteProgram] = None,
-               table_nodes: int = 0, collect_telemetry: bool = False):
+               table_nodes: int = 0, collect_telemetry: bool = False,
+               topology: Optional[Topology] = None):
     """Pull logical pages through the bridge.
 
     Args:
@@ -332,6 +365,11 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         with collection on, swapping programs / tables / budgets still never
         retraces (the flag itself is static: toggling it changes the output
         structure).
+      topology: the static board + rack fabric
+        (:class:`~repro.core.topology.Topology`, default: one flat board).
+        Classifies each transfer's tier for the telemetry counters; its
+        tables are compile-time constants, so flat and hierarchical
+        *programs* swap on one trace.
     Returns:
       [num_nodes, R, *page_shape] gathered pages, sharded on dim 0 — or
       ``(pages, telemetry)`` when ``collect_telemetry`` is set.
@@ -366,12 +404,14 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         out = out[(slice(None),) * (want.ndim - 1) + (slice(0, r),)]
         if collect_telemetry:
             return out, _loopback_telemetry(want, table, program, tn,
-                                            active_budget, budget, rounds)
+                                            active_budget, budget, rounds,
+                                            topology)
         return out
     if table_nodes and table_nodes != n:
         raise ValueError(f"table has {table_nodes} nodes but mem axis "
                          f"{mem_axis!r} has {n}")
     program = _resolve_program(program, n)
+    topo = _resolve_topology(topology, n)
 
     pages_spec = P(mem_axis, *([None] * (pool_pages.ndim - 1)))
     out_spec = P(mem_axis, *([None] * pool_pages.ndim))
@@ -380,23 +420,24 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         rounds=rounds, edge_buffer=edge_buffer)
     ab_vec = jnp.clip(jnp.broadcast_to(active_budget, (n,)), 0, budget)
 
-    def mapped(pool, want_l, table_l, ab, prog):
+    def mapped(pool, want_l, table_l, ab, prog, tt):
         out = body(pool, want_l[0], table_l, ab[0], prog)
         if not collect_telemetry:
             return out[None]
         telem = _telemetry.transfer_telemetry(
             want_l[0], table_l, prog, ab[0],
             my=jax.lax.axis_index(mem_axis), num_nodes=n, budget=budget,
-            rounds=rounds)
+            rounds=rounds, topo=tt, num_groups=topo.num_groups)
         return out[None], jax.tree.map(lambda x: x[None], telem)
 
     out_specs = ((out_spec, _telemetry_specs(mem_axis))
                  if collect_telemetry else out_spec)
     out = shard_map(
         mapped, mesh,
-        in_specs=(pages_spec, P(mem_axis, None), P(), P(mem_axis), P()),
+        in_specs=(pages_spec, P(mem_axis, None), P(), P(mem_axis), P(),
+                  TopoTables(group=P(), local_rank=P(), group_size=P())),
         out_specs=out_specs, mem_axis=mem_axis,
-    )(pool_pages, want, table, ab_vec, program)
+    )(pool_pages, want, table, ab_vec, program, topo.tables())
     if collect_telemetry:
         return out[0][:, :r], out[1]
     return out[:, :r]
@@ -408,7 +449,8 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
                overprovision: int = 1,
                active_budget: Optional[jax.Array] = None,
                program: Optional[RouteProgram] = None,
-               table_nodes: int = 0, collect_telemetry: bool = False):
+               table_nodes: int = 0, collect_telemetry: bool = False,
+               topology: Optional[Topology] = None):
     """Write pages to their homes through the bridge (single-writer pages).
 
     Args:
@@ -452,26 +494,28 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
             pool_pages, flat, payload.reshape((-1,) + payload.shape[2:]))
         if collect_telemetry:
             return out, _loopback_telemetry(dest, table, program, tn,
-                                            active_budget, budget, rounds)
+                                            active_budget, budget, rounds,
+                                            topology)
         return out
     if table_nodes and table_nodes != n:
         raise ValueError(f"table has {table_nodes} nodes but mem axis "
                          f"{mem_axis!r} has {n}")
     program = _resolve_program(program, n)
+    topo = _resolve_topology(topology, n)
 
     pages_spec = P(mem_axis, *([None] * (pool_pages.ndim - 1)))
     body = functools.partial(_push_local, axis=mem_axis, num_nodes=n,
                              budget=budget, rounds=rounds)
     ab_vec = jnp.clip(jnp.broadcast_to(active_budget, (n,)), 0, budget)
 
-    def mapped(pool, dest_l, pay_l, table_l, ab, prog):
+    def mapped(pool, dest_l, pay_l, table_l, ab, prog, tt):
         out = body(pool, dest_l[0], pay_l[0], table_l, ab[0], prog)
         if not collect_telemetry:
             return out
         telem = _telemetry.transfer_telemetry(
             dest_l[0], table_l, prog, ab[0],
             my=jax.lax.axis_index(mem_axis), num_nodes=n, budget=budget,
-            rounds=rounds)
+            rounds=rounds, topo=tt, num_groups=topo.num_groups)
         return out, jax.tree.map(lambda x: x[None], telem)
 
     out_specs = ((pages_spec, _telemetry_specs(mem_axis))
@@ -480,6 +524,7 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
         mapped, mesh,
         in_specs=(pages_spec, P(mem_axis, None),
                   P(mem_axis, None, *([None] * (payload.ndim - 2))), P(),
-                  P(mem_axis), P()),
+                  P(mem_axis), P(),
+                  TopoTables(group=P(), local_rank=P(), group_size=P())),
         out_specs=out_specs, mem_axis=mem_axis,
-    )(pool_pages, dest, payload, table, ab_vec, program)
+    )(pool_pages, dest, payload, table, ab_vec, program, topo.tables())

@@ -15,7 +15,9 @@ tools":
   bridge's runtime :class:`~repro.core.steering.RouteProgram` from the live
   placement table — bidirectional by default, pruned to the ring distances
   that actually carry traffic, rerouted around a failed ring link reported
-  by ``repro.ft``.
+  by ``repro.ft``, and **hierarchical** when the pool spans a board + rack
+  :class:`~repro.core.topology.Topology` (placement, overflow and affinity
+  migration then prefer intra-board homes).
 
 The **closed control loop** (measure -> aggregate -> recompile): the
 datapath's in-band counters (``pull_pages`` / ``push_pages`` with
@@ -43,6 +45,7 @@ import numpy as np
 
 from repro.core import steering
 from repro.core.memport import FREE, MemPortTable
+from repro.core.topology import Topology
 from repro.telemetry.aggregate import dominant_requester
 
 Policy = Literal["striped", "hashed", "affinity"]
@@ -77,8 +80,13 @@ class ControlPlane:
     """Owns placement for one pool (num_nodes x pages_per_node slots)."""
 
     def __init__(self, num_nodes: int, pages_per_node: int,
-                 num_logical: int, seed: int = 0):
+                 num_logical: int, seed: int = 0,
+                 topology: Optional[Topology] = None):
+        if topology is not None and topology.num_nodes != num_nodes:
+            raise ValueError(f"topology spans {topology.num_nodes} "
+                             f"endpoints; the pool has {num_nodes}")
         self.num_nodes = num_nodes
+        self.topology = topology or Topology.flat(num_nodes)
         self.pages_per_node = pages_per_node
         self.num_logical = num_logical
         self._rng = np.random.default_rng(seed)
@@ -127,7 +135,13 @@ class ControlPlane:
             raise ValueError(policy)
         for pid, h in zip(ids, homes):
             if not self._free[h]:
-                h = max(alive, key=lambda n: len(self._free[n]))
+                # Topology-aware spill: a full home overflows onto its own
+                # board first (board-ring traffic instead of rack-ring),
+                # then onto the globally emptiest survivor.
+                h = max(alive, key=lambda n: (
+                    len(self._free[n]) > 0
+                    and self.topology.group[n] == self.topology.group[h],
+                    len(self._free[n])))
                 if not self._free[h]:
                     raise RuntimeError("pool out of slots")
             s = self._free[h].pop(0)
@@ -319,6 +333,25 @@ class ControlPlane:
                             for f in names if hasattr(telemetry, f))
                 break
         measured_prune = prune and drops <= 0
+        if (self.topology.num_groups > 1 and bidirectional
+                and self._failed_link_direction is None):
+            # Board + rack fabric: compile the two-tier schedule (intra-board
+            # epochs concurrent across boards, exclusive gateway epochs).
+            # The censorship guard applies unchanged: a measurement taken
+            # while requests were dropped prunes nothing.  A failed ring
+            # link falls through to the flat link-avoiding compile (every
+            # circuit of one direction is lost on both tiers alike).
+            if w is not None:
+                wi = (np.asarray(telemetry.distance_intra_pages(),
+                                 float).reshape(-1)
+                      if hasattr(telemetry, "distance_intra_pages") else None)
+                return steering.hierarchical_program(
+                    self.topology, dist_weight=w, prune=measured_prune,
+                    intra_weight=wi)
+            if not prune:
+                return steering.hierarchical_program(self.topology)
+            return steering.hierarchical_program(
+                self.topology, live_distances=self.live_distances(requesters))
         if self._failed_link_direction is not None:
             base = steering.link_avoiding_program(
                 n, self._failed_link_direction)
@@ -355,7 +388,11 @@ class ControlPlane:
         requester->home matrix) is dominated by one *remote* requester —
         its share of all pages served from that home exceeds ``min_share``
         — pages homed there migrate into the dominant requester's free
-        slots, turning circuit traffic into loopback hits.  The placement
+        slots, turning circuit traffic into loopback hits.  On a
+        hierarchical fabric the migration is topology-aware: once the
+        dominant requester itself is full, pages homed on *another board*
+        keep moving into the requester's board mates (rack-ring traffic
+        becomes board-ring traffic — the next-best home).  The placement
         table is updated (a runtime reprogram, like :meth:`fail_node`) and
         the plan is returned for the executor to copy page contents.
         ``limit`` caps the total moves per call (migration bandwidth).
@@ -380,16 +417,27 @@ class ControlPlane:
                 continue
             if not self.nodes[r].alive:
                 continue
+            # Intra-board preference: the requester itself first (loopback),
+            # then — only when the page currently lives on a different
+            # board — the requester's board mates (rack -> board win).
+            group = self.topology.group
+            targets = [r]
+            if group[h] != group[r]:
+                targets += sorted(
+                    (m for m in self.alive_nodes
+                     if m != r and m != h and group[m] == group[r]),
+                    key=lambda m: -len(self._free[m]))
             for pid in np.nonzero(self._home == h)[0]:
-                if not self._free[r]:
-                    break
                 if limit is not None and len(plan) >= limit:
                     break
-                s = self._free[r].pop(0)
+                t = next((m for m in targets if self._free[m]), None)
+                if t is None:
+                    break
+                s = self._free[t].pop(0)
                 plan.append(MigrationStep(int(pid), h, int(self._slot[pid]),
-                                          r, s))
+                                          t, s))
                 self._free[h].append(int(self._slot[pid]))
-                self._home[pid] = r
+                self._home[pid] = t
                 self._slot[pid] = s
         return plan
 

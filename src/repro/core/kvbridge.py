@@ -178,7 +178,7 @@ def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
            k_new: jax.Array, v_new: jax.Array, *, page_tokens: int,
            max_pages: int, mesh: Optional[Mesh], mem_axis: str = "data",
            budget: int = 8, program: Optional[RouteProgram] = None,
-           collect_telemetry: bool = False):
+           collect_telemetry: bool = False, topology=None):
     """Append one token's (k, v) [B, kv, hd] for one layer.
 
     Tokens land in the local tail buffer; when a sequence's tail page fills,
@@ -210,11 +210,13 @@ def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
     k_pool = bridge.push_pages(layer.k_pool, dest_n, shape_for(tail_k),
                                table, mesh=mesh, mem_axis=mem_axis,
                                budget=budget, program=program,
-                               collect_telemetry=collect_telemetry)
+                               collect_telemetry=collect_telemetry,
+                               topology=topology)
     v_pool = bridge.push_pages(layer.v_pool, dest_n, shape_for(tail_v),
                                table, mesh=mesh, mem_axis=mem_axis,
                                budget=budget, program=program,
-                               collect_telemetry=collect_telemetry)
+                               collect_telemetry=collect_telemetry,
+                               topology=topology)
     telem = None
     if collect_telemetry:
         k_pool, telem_k = k_pool
@@ -247,7 +249,7 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
                           mesh: Optional[Mesh], mem_axis: str = "data",
                           budget: int = 8, edge_buffer: bool = True,
                           program: Optional[RouteProgram] = None,
-                          collect_telemetry: bool = False):
+                          collect_telemetry: bool = False, topology=None):
     """Paper-faithful: pull pages through the bridge, attend locally.
 
     q: [B, H, hd] -> out [B, H, hd].  Pages stream through an online-softmax
@@ -274,11 +276,13 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
     k_pages = bridge.pull_pages(layer.k_pool, want, table, mesh=mesh,
                                 mem_axis=mem_axis, budget=budget,
                                 edge_buffer=edge_buffer, program=program,
-                                collect_telemetry=collect_telemetry)
+                                collect_telemetry=collect_telemetry,
+                                topology=topology)
     v_pages = bridge.pull_pages(layer.v_pool, want, table, mesh=mesh,
                                 mem_axis=mem_axis, budget=budget,
                                 edge_buffer=edge_buffer, program=program,
-                                collect_telemetry=collect_telemetry)
+                                collect_telemetry=collect_telemetry,
+                                topology=topology)
     telem = None
     if collect_telemetry:
         k_pages, telem_k = k_pages

@@ -183,9 +183,73 @@ def route_epoch_stats(program) -> Dict[str, int]:
     }
 
 
+def hierarchical_route_stats(program, topology) -> Dict[str, int]:
+    """Tier-aware accounting of a program on a board + rack fabric.
+
+    Hop counts follow the :mod:`repro.core.topology` realization contract
+    (per served (rank, slot) pairing), so a flat program's topology-blind
+    direction choices show up as extra board hops here.
+    """
+    import numpy as np
+    served = program.rank_served()
+    off = np.asarray(program.offsets)
+    n = program.num_nodes
+    board = rack = 0
+    max_board = max_rack = 0
+    inter_slots = 0
+    for k in range(n - 1):
+        ranks = np.nonzero(served[k])[0]
+        if ranks.size == 0:
+            continue
+        homes = (ranks + k + 1) % n
+        sign = 1 if off[k] > 0 else -1
+        bh, rh = topology.pair_hops(ranks, homes, sign)
+        board += int(bh.sum())
+        rack += int(rh.sum())
+        max_board = max(max_board, int(bh.max()))
+        max_rack = max(max_rack, int(rh.max()))
+        if (~topology.pair_intra(ranks, homes)).any():
+            inter_slots += 1
+    return {
+        "num_groups": int(topology.num_groups),
+        "num_epochs": int(program.num_epochs()),
+        "board_hops": board,
+        "rack_hops": rack,
+        "max_board_hops": max_board,
+        "max_rack_hops": max_rack,
+        "gateway_slots": inter_slots,
+    }
+
+
+def predict_round_bytes(program, page_bytes: int, budget: int,
+                        slot_pages=None) -> float:
+    """Wire bytes one bridge round moves under a route program.
+
+    Worst case (every live slot moves ``budget`` pages) or, with
+    ``slot_pages``, the measured/intended per-slot loads.  The ref oracle's
+    summed ``slot_bytes`` must equal this exactly whenever the request load
+    matches ``slot_pages`` — the byte-conservation invariant pinned by
+    ``tests/test_perfmodel.py``.
+    """
+    return float(_slot_loads(program, budget, slot_pages).sum() * page_bytes)
+
+
+def _slot_loads(program, budget: int, slot_pages):
+    import numpy as np
+    live = np.asarray(program.live)
+    if slot_pages is None:
+        return np.where(live, float(budget), 0.0)
+    pages = np.asarray(slot_pages, float).reshape(-1)
+    if pages.shape != live.shape:
+        raise ValueError(f"slot_pages has shape {pages.shape}; program "
+                         f"has {live.shape[0]} slots")
+    return np.where(live, pages, 0.0)
+
+
 def predict_round_latency_us(program, page_bytes: int, budget: int,
                              hw: TpuHW = TPU_HW, edge_buffer: bool = True,
-                             slot_pages=None) -> float:
+                             slot_pages=None, topology=None,
+                             slot_intra_pages=None) -> float:
     """Predicted latency of one bridge round under a route program.
 
     Each live slot is one circuit: RTT = 2 * hops * hop latency, payload =
@@ -200,6 +264,23 @@ def predict_round_latency_us(program, page_bytes: int, budget: int,
     is what makes a telemetry-compiled
     :func:`~repro.core.steering.load_balanced_program` comparable against
     the static bidirectional split under the observed traffic matrix.
+
+    With a multi-board ``topology`` the model becomes tier-aware (the
+    :mod:`repro.core.topology` realization contract):
+
+    * a slot's **intra-board** pages ride that board's local ring — boards
+      transfer concurrently, so their wire time divides by the board count
+      and is paid at the board-tier link rate;
+    * its **board-crossing** pages funnel through the single-ported
+      gateways at the rack-tier link rate — their wire time serializes
+      across slots;
+    * RTTs weight board and rack hops by their own per-hop latencies.
+
+    ``slot_intra_pages`` (e.g. ``TelemetryAggregator.distance_intra_pages``
+    normalized like ``slot_pages``) pins the measured tier split; without
+    it each slot's load is split by the fraction of its served requester
+    ranks whose pair stays on-board.  A flat (single-board) topology —
+    or ``topology=None`` — reproduces the classic flat model.
     """
     import numpy as np
     live = np.asarray(program.live)
@@ -207,21 +288,60 @@ def predict_round_latency_us(program, page_bytes: int, budget: int,
     hops = np.abs(off)
     if not live.any():
         return 0.0
-    if slot_pages is None:
-        pages = np.where(live, float(budget), 0.0)
+    pages = _slot_loads(program, budget, slot_pages)
+    if topology is None or topology.num_groups == 1:
+        wire_us = pages * page_bytes / (hw.ici_link_gbps * 1e9) * 1e6
+        rtt_us = 2.0 * hops * hw.ici_hop_latency_us
+        if not edge_buffer:
+            return float((rtt_us[live] + wire_us[live]).sum())
+        cw_us = float(wire_us[live & (off > 0)].sum())
+        ccw_us = float(wire_us[live & (off < 0)].sum())
+        return float(max(cw_us, ccw_us) + rtt_us[live].max())
+
+    n = program.num_nodes
+    served = program.rank_served()
+    s = n - 1
+    if slot_intra_pages is None:
+        frac = np.zeros((s,))
+        for k in range(s):
+            ranks = np.nonzero(served[k])[0]
+            if ranks.size:
+                frac[k] = topology.pair_intra(
+                    ranks, (ranks + k + 1) % n).mean()
+        intra_pages = pages * frac
     else:
-        pages = np.asarray(slot_pages, float).reshape(-1)
-        if pages.shape != live.shape:
-            raise ValueError(f"slot_pages has shape {pages.shape}; program "
-                             f"has {live.shape[0]} slots")
-        pages = np.where(live, pages, 0.0)
-    wire_us = pages * page_bytes / (hw.ici_link_gbps * 1e9) * 1e6
-    rtt_us = 2.0 * hops * hw.ici_hop_latency_us
+        intra_pages = np.minimum(
+            _slot_loads(program, budget, slot_intra_pages), pages)
+    inter_pages = pages - intra_pages
+    board_wire = (intra_pages / topology.num_groups * page_bytes
+                  / (topology.board_link_gbps * 1e9) * 1e6)
+    rack_wire = (inter_pages * page_bytes
+                 / (topology.rack_link_gbps * 1e9) * 1e6)
+    rtt_us = np.zeros((s,))
+    for k in np.nonzero(live)[0]:
+        ranks = np.nonzero(served[k])[0]
+        if ranks.size == 0:
+            continue
+        homes = (ranks + k + 1) % n
+        sign = 1 if off[k] > 0 else -1
+        bh, rh = topology.pair_hops(ranks, homes, sign)
+        pair_rtt = bh * topology.board_hop_us + rh * topology.rack_hop_us
+        # Only tiers that actually move pages pin the slot's circuit depth
+        # (an unloaded gateway pairing costs nothing this round).
+        intra = topology.pair_intra(ranks, homes)
+        depth = 0.0
+        if intra.any() and intra_pages[k] > 0:
+            depth = float(pair_rtt[intra].max())
+        if (~intra).any() and inter_pages[k] > 0:
+            depth = max(depth, float(pair_rtt[~intra].max()))
+        rtt_us[k] = 2.0 * depth
     if not edge_buffer:
-        return float((rtt_us[live] + wire_us[live]).sum())
-    cw_us = float(wire_us[live & (off > 0)].sum())
-    ccw_us = float(wire_us[live & (off < 0)].sum())
-    return float(max(cw_us, ccw_us) + rtt_us[live].max())
+        return float((rtt_us[live] + board_wire[live]
+                      + rack_wire[live]).sum())
+    cw_us = float(board_wire[live & (off > 0)].sum())
+    ccw_us = float(board_wire[live & (off < 0)].sum())
+    return float(max(cw_us, ccw_us) + rack_wire[live].sum()
+                 + rtt_us[live].max())
 
 
 def tpu_stream_penalty(kernel: str, page_bytes: int = 1 << 18,

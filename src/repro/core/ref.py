@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core.memport import MemPortTable
 from repro.core.steering import RouteProgram
+from repro.core.topology import Topology
 
 
 def flat_index(table: MemPortTable, page_ids: jnp.ndarray,
@@ -34,16 +35,22 @@ def served_mask(table: MemPortTable, ids: jnp.ndarray,
 
     Row i of ``ids`` is node i's request list; distance 0 (the loopback
     fast path) is always wired, other distances only if the program's slot
-    is live.  ``program=None`` means full coverage (everything served).
+    is live AND the program's group mask wires it for requester i (the
+    hierarchical per-rank refinement).  ``program=None`` means full
+    coverage (everything served).
     """
     if program is None:
         return jnp.ones(ids.shape, bool)
     n = program.num_nodes
     home, _ = table.translate(ids)
+    if n == 1:
+        return home >= 0  # only the loopback fast path exists
     me = jnp.arange(ids.shape[0])[:, None]
     dist = jnp.mod(home - me, n)
-    wired = jnp.concatenate([jnp.ones((1,), bool), program.live])
-    return jnp.where(home >= 0, wired[dist.clip(0, n - 1)], False)
+    slot = (dist - 1).clip(0, n - 2)
+    rank = me.clip(0, n - 1)
+    wired = program.live[slot] & (program.rank_epoch[slot, rank] >= 0)
+    return jnp.where(home >= 0, (dist == 0) | wired, False)
 
 
 def pull_pages_ref(pool_pages: jnp.ndarray, want: jnp.ndarray,
@@ -85,13 +92,19 @@ def rate_limit_mask(num_requests: int, budget: int, active_budget,
 def expected_transfer_telemetry(ids, table: MemPortTable,
                                 program: Optional[RouteProgram], *,
                                 num_nodes: int, budget: int,
-                                active_budget=None, overprovision: int = 1):
+                                active_budget=None, overprovision: int = 1,
+                                topology: Optional[Topology] = None):
     """Oracle for ``pull_pages`` / ``push_pages`` ``collect_telemetry``.
 
     Walks every request of every row (row i = requester i) with plain
     python/numpy — deliberately nothing like the datapath's masked segment
     sums — and bins it the way the bridge must have: rate-limiter spill,
-    loopback hit, pruned-circuit drop, or served by its distance's slot.
+    loopback hit, pruned-circuit drop (whole distance dead or this rank's
+    pairing group-masked), or served by its distance's slot at the epoch
+    the program assigns *this requester*.  Per-tier counters (intra-board
+    pages, board/rack page-hops) follow the :mod:`repro.core.topology`
+    realization contract; ``topology=None`` means the flat single-board
+    fabric.
 
     ``active_budget`` may be per-requester ([rows]) for the N-device path or
     a scalar shared by every row (what the loopback path actually applies).
@@ -99,7 +112,7 @@ def expected_transfer_telemetry(ids, table: MemPortTable,
     [rows, ...] leaves.
     """
     from repro.core import steering
-    from repro.telemetry.counters import BridgeTelemetry
+    from repro.telemetry.counters import BridgeTelemetry, num_epoch_bins
 
     ids = np.asarray(ids)
     rows, r = ids.shape
@@ -110,19 +123,24 @@ def expected_transfer_telemetry(ids, table: MemPortTable,
                    np.int64).reshape(-1), (rows,))
     if program is None:
         program = steering.bidirectional_program(n)
+    if topology is None:
+        topology = Topology.flat(n)
     live = np.asarray(program.live)
     off = np.asarray(program.offsets)
-    epoch = np.asarray(program.epoch)
+    rank_epoch = np.asarray(program.rank_epoch)
     home_col = np.asarray(table.home)
 
     s = max(n - 1, 0)
+    e = num_epoch_bins(n)
     slot_served = np.zeros((rows, s), np.int32)
     loopback = np.zeros((rows,), np.int32)
     spilled = np.zeros((rows,), np.int32)
     pruned = np.zeros((rows,), np.int32)
     traffic = np.zeros((rows, n), np.int32)
-    epoch_cw = np.zeros((rows, s), np.int32)
-    epoch_ccw = np.zeros((rows, s), np.int32)
+    epoch_cw = np.zeros((rows, e), np.int32)
+    epoch_ccw = np.zeros((rows, e), np.int32)
+    slot_intra = np.zeros((rows, s), np.int32)
+    tier_hops = np.zeros((rows, 2), np.int32)
     for i in range(rows):
         lim = rounds * int(np.clip(ab[i], 0, budget))
         for j, pid in enumerate(ids[i]):
@@ -137,19 +155,27 @@ def expected_transfer_telemetry(ids, table: MemPortTable,
                 loopback[i] += 1
                 traffic[i, h] += 1
                 continue
-            if not live[d - 1]:
+            if not live[d - 1] or rank_epoch[d - 1, i] < 0:
                 pruned[i] += 1
                 continue
             slot_served[i, d - 1] += 1
             traffic[i, h] += 1
             bins = epoch_cw if off[d - 1] > 0 else epoch_ccw
-            bins[i, epoch[d - 1]] += 1
+            bins[i, rank_epoch[d - 1, i]] += 1
+            sign = 1 if off[d - 1] > 0 else -1
+            if topology.pair_intra(i, h):
+                slot_intra[i, d - 1] += 1
+            bh, rh = topology.pair_hops(i, h, sign)
+            tier_hops[i, 0] += int(bh)
+            tier_hops[i, 1] += int(rh)
     return BridgeTelemetry(
         slot_served=jnp.asarray(slot_served),
         loopback_served=jnp.asarray(loopback),
         spilled=jnp.asarray(spilled), pruned=jnp.asarray(pruned),
         traffic=jnp.asarray(traffic), epoch_cw=jnp.asarray(epoch_cw),
-        epoch_ccw=jnp.asarray(epoch_ccw))
+        epoch_ccw=jnp.asarray(epoch_ccw),
+        slot_intra=jnp.asarray(slot_intra),
+        tier_hops=jnp.asarray(tier_hops))
 
 
 def push_pages_ref(pool_pages: jnp.ndarray, dest: jnp.ndarray,

@@ -10,7 +10,9 @@ Pure helpers shared by the transfer engine:
 A :class:`RouteProgram` is the software-defined analogue of the paper's
 circuit control plane: a *runtime value* (registered pytree, arrays only)
 that the orchestrator can swap between steps — unidirectional, bidirectional,
-pruned, or link-avoiding — without ever recompiling the jitted datapath.
+pruned, link-avoiding, or **hierarchical** for a board + rack fabric
+(:func:`hierarchical_program`) — without ever recompiling the jitted
+datapath.
 
 Key identity the programs exploit: on an N-ring the permutation
 ``rank -> rank + d (mod N)`` is *the same permutation* as
@@ -26,12 +28,14 @@ program covers all N-1 distances in ⌊N/2⌋ epochs instead of N-1.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core.memport import FREE
+from repro.core.topology import Topology
 
 
 def ring_distance(home: jnp.ndarray, my_rank, num_nodes: int) -> jnp.ndarray:
@@ -76,19 +80,29 @@ class RouteProgram:
     Attributes:
       offsets: i32[N-1]  signed ring offset driven for slot k.  Must satisfy
         ``offsets[k] % N == k + 1`` when live; sign is the physical ring
-        direction (+ = clockwise), ``|offsets[k]|`` the hop count.  0 on
+        direction (+ = clockwise), ``|offsets[k]|`` the hop count on a flat
+        ring (hierarchical realizations count hops via the Topology).  0 on
         dead slots.
-      epoch:   i32[N-1]  circuit epoch at which slot k's circuit is wired
-        (two slots may share an epoch iff they drive opposite directions).
-        -1 on dead slots.
+      epoch:   i32[N-1]  base circuit epoch of slot k (the first epoch any
+        requester drives it; two slots may share an epoch iff they drive
+        opposite directions).  -1 on dead slots.
       live:    bool[N-1] dead slots carry no traffic: the datapath
         FREE-masks their requests, so their payload work is skipped and the
         oracle drops their pages (pruning / link avoidance).
+      rank_epoch: i32[N-1, N]  the **group mask**: the epoch at which slot k
+        serves requester rank r, or -1 when that (rank, slot) pairing is
+        masked off — the datapath FREE-masks exactly those requests.  Flat
+        programs broadcast ``epoch`` over the rank axis; hierarchical
+        programs split a slot between an intra-board epoch (its same-board
+        requesters, concurrent across boards) and a gateway epoch (its
+        board-crossing requesters).  Same static shape for every program,
+        so swapping flat and hierarchical programs never retraces.
     """
 
     offsets: jax.Array
     epoch: jax.Array
     live: jax.Array
+    rank_epoch: jax.Array
 
     @property
     def num_slots(self) -> int:
@@ -100,20 +114,26 @@ class RouteProgram:
 
     # -- host-side accounting (benchmarks / perfmodel / tests) ---------------
     def num_epochs(self) -> int:
-        """Circuit epochs the program occupies (max live epoch + 1)."""
-        ep, lv = np.asarray(self.epoch), np.asarray(self.live)
-        return int(ep[lv].max()) + 1 if lv.any() else 0
+        """Circuit epochs the program occupies (max served epoch + 1)."""
+        served = self.rank_served()
+        re = np.asarray(self.rank_epoch)
+        return int(re[served].max()) + 1 if served.any() else 0
 
     def live_distances(self) -> np.ndarray:
         """Ring distances with a wired circuit (sorted)."""
         return np.nonzero(np.asarray(self.live))[0] + 1
 
     def hops(self) -> np.ndarray:
-        """Physical hop count per slot (0 on dead slots)."""
+        """Flat-ring hop count per slot (0 on dead slots)."""
         return np.abs(np.asarray(self.offsets))
 
+    def rank_served(self) -> np.ndarray:
+        """bool[N-1, N]: does slot k carry requester rank r's traffic."""
+        return (np.asarray(self.live)[:, None]
+                & (np.asarray(self.rank_epoch) >= 0))
+
     def validate(self) -> None:
-        """Raise if any live slot's offset is not congruent to its distance."""
+        """Raise on incongruent offsets or an inconsistent group mask."""
         n = self.num_nodes
         off, lv = np.asarray(self.offsets), np.asarray(self.live)
         d = np.arange(1, n)
@@ -122,13 +142,36 @@ class RouteProgram:
             raise ValueError(
                 f"slots {np.nonzero(bad)[0].tolist()} drive offsets "
                 f"{off[bad].tolist()} incongruent with their distances")
+        re = np.asarray(self.rank_epoch)
+        if re.shape != (n - 1, n):
+            raise ValueError(f"rank_epoch has shape {re.shape}; expected "
+                             f"{(n - 1, n)}")
+        ghost = (~lv) & (re >= 0).any(1)
+        if ghost.any():
+            raise ValueError(f"dead slots {np.nonzero(ghost)[0].tolist()} "
+                             "still carry rank epochs")
+        idle = lv & ~(re >= 0).any(1)
+        if idle.any():
+            raise ValueError(f"live slots {np.nonzero(idle)[0].tolist()} "
+                             "serve no rank")
 
 
-def _program(off: np.ndarray, epoch: np.ndarray, live: np.ndarray
-             ) -> RouteProgram:
+def _rank_epoch_from(epoch: np.ndarray, live: np.ndarray) -> np.ndarray:
+    """Flat broadcast: slot k serves every rank at its single epoch."""
+    n = live.shape[0] + 1
+    col = np.where(live, epoch, -1).astype(np.int64)
+    return np.repeat(col[:, None], n, axis=1)
+
+
+def _program(off: np.ndarray, epoch: np.ndarray, live: np.ndarray,
+             rank_epoch: Optional[np.ndarray] = None) -> RouteProgram:
+    if rank_epoch is None:
+        rank_epoch = _rank_epoch_from(np.asarray(epoch, np.int64),
+                                      np.asarray(live, bool))
     return RouteProgram(offsets=jnp.asarray(off, jnp.int32),
                         epoch=jnp.asarray(epoch, jnp.int32),
-                        live=jnp.asarray(live, bool))
+                        live=jnp.asarray(live, bool),
+                        rank_epoch=jnp.asarray(rank_epoch, jnp.int32))
 
 
 def unidirectional_program(num_nodes: int, direction: int = 1) -> RouteProgram:
@@ -162,8 +205,11 @@ def pruned_program(base: RouteProgram, live_distances) -> RouteProgram:
 
     Dead slots are FREE-masked by the datapath (their pages, if any were
     requested, come back as zeros — callers prune only distances they know
-    carry no traffic).  Surviving circuits re-pack into consecutive epochs,
-    shortest hop count first, one circuit per direction per epoch.
+    carry no traffic).  Surviving flat circuits re-pack into consecutive
+    epochs, shortest hop count first, one circuit per direction per epoch.
+    A **hierarchical** base keeps its group mask instead: the surviving
+    slots retain their per-rank intra/gateway epochs (re-packing them per
+    direction would put two board-crossing circuits on one gateway epoch).
     """
     n = base.num_nodes
     keep = np.zeros((n - 1,), bool)
@@ -171,6 +217,11 @@ def pruned_program(base: RouteProgram, live_distances) -> RouteProgram:
         if not 0 < d < n:
             raise ValueError(f"distance {d} out of range for {n} nodes")
         keep[d - 1] = True
+    re = np.asarray(base.rank_epoch)
+    flat = (re == re[:, :1]).all()  # every row uniform = no group mask
+    if not flat:
+        return masked_ranks_program(base, np.broadcast_to(keep[:, None],
+                                                          re.shape))
     off = np.asarray(base.offsets).copy()
     live = np.asarray(base.live) & keep
     off = np.where(live, off, 0)
@@ -245,6 +296,208 @@ def link_avoiding_program(num_nodes: int, failed_direction: int
     if failed_direction not in (1, -1):
         raise ValueError("failed_direction must be +1 or -1")
     return unidirectional_program(num_nodes, direction=-failed_direction)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical programs (board + rack tiers)
+# ---------------------------------------------------------------------------
+
+def hierarchical_program(topo: Topology, dist_weight=None, prune: bool = False,
+                         live_distances=None,
+                         intra_weight=None) -> RouteProgram:
+    """Compile a two-tier circuit schedule for a board + rack fabric.
+
+    Per slot (global ring offset d), the fabric realizes two kinds of
+    circuits (the :mod:`repro.core.topology` contract):
+
+    * its **intra-board** pairs travel each board's local ring concurrently
+      — these are scheduled like a bidirectional flat program, one circuit
+      per direction per epoch, ordered by local hop count;
+    * its **inter-board** pairs funnel through the gateways — each such
+      slot gets an exclusive epoch after the intra phase (a gateway hosts
+      one circuit at a time), ordered by rack hop count.
+
+    The split is the program's **group mask**: ``rank_epoch[k, r]`` carries
+    the intra epoch for same-board requesters and the gateway epoch for
+    board-crossing ones.  Directions are chosen per slot to minimize the
+    total latency-weighted hop count over all pairs (board hops at
+    ``board_hop_us``, rack hops at ``rack_hop_us``), so e.g. a wrap
+    distance that is 3 global hops clockwise but 1 local hop
+    counter-clockwise drives the short way.
+
+    On a flat (single-board) topology this degenerates exactly to
+    :func:`bidirectional_program`'s schedule.
+
+    Args:
+      dist_weight: optional measured per-distance loads ([N-1], e.g.
+        ``TelemetryAggregator.distance_pages``); with ``prune=True``,
+        zero-weight distances are cut.
+      live_distances: explicit distance whitelist (placement
+        reachability); overrides the weight-based pruning.
+      intra_weight: optional measured intra-board share of ``dist_weight``
+        ([N-1], e.g. ``TelemetryAggregator.distance_intra_pages``).  The
+        direction vote then weighs each tier by its *measured* pages
+        instead of its pair count — under intra-heavy traffic an offset's
+        direction follows its loaded board-ring pairs even when most of
+        its (idle) pairs cross boards.
+    """
+    n = topo.num_nodes
+    if n < 2:
+        raise ValueError("hierarchical programs need at least 2 nodes")
+    s = n - 1
+    live = np.ones((s,), bool)
+    if live_distances is not None:
+        live[:] = False
+        for d in np.asarray(list(live_distances), np.int64).ravel():
+            if not 0 < d < n:
+                raise ValueError(f"distance {d} out of range for {n} nodes")
+            live[d - 1] = True
+    elif dist_weight is not None and prune:
+        w = np.asarray(dist_weight, float).reshape(-1)
+        if w.shape[0] != s:
+            raise ValueError(f"dist_weight has {w.shape[0]} entries; a "
+                             f"{n}-node ring has {s} distances")
+        if (w < 0).any():
+            raise ValueError("dist_weight must be non-negative")
+        live = w > 0
+
+    wi = wx = None
+    if intra_weight is not None:
+        wi = np.asarray(intra_weight, float).reshape(-1)
+        if wi.shape[0] != s:
+            raise ValueError(f"intra_weight has {wi.shape[0]} entries; a "
+                             f"{n}-node ring has {s} distances")
+        total = (np.asarray(dist_weight, float).reshape(-1)
+                 if dist_weight is not None else wi)
+        wx = np.maximum(total - wi, 0.0)
+
+    r = np.arange(n)
+    off = np.zeros((s,), np.int64)
+    intra_mask = np.zeros((s, n), bool)
+    local_hops = np.zeros((s,), np.int64)   # deepest intra circuit per slot
+    rack_hops = np.zeros((s,), np.int64)    # deepest rack leg per slot
+    for k in np.nonzero(live)[0]:
+        d = k + 1
+        h = (r + d) % n
+        intra = topo.pair_intra(r, h)
+        # Tier weights for the direction vote: measured pages when known,
+        # pair counts otherwise (so the unmeasured compile's vote is the
+        # plain latency-weighted hop sum over every pair).
+        w_intra = float(wi[k]) if wi is not None else float(intra.sum())
+        w_inter = float(wx[k]) if wx is not None else float((~intra).sum())
+        costs = {}
+        for sign in (1, -1):
+            bh, rh = topo.pair_hops(r, h, sign)
+            us = bh * topo.board_hop_us + rh * topo.rack_hop_us
+            cost = 0.0
+            if intra.any():
+                cost += w_intra * float(us[intra].mean())
+            if (~intra).any():
+                cost += w_inter * float(us[~intra].mean())
+            costs[sign] = cost
+        if costs[1] < costs[-1]:
+            sign = 1
+        elif costs[-1] < costs[1]:
+            sign = -1
+        else:
+            sign = 1 if d <= n - d else -1
+        off[k] = d if sign == 1 else -(n - d)
+        intra_mask[k] = intra
+        bh, rh = topo.pair_hops(r, h, sign)
+        local_hops[k] = bh[intra].max() if intra.any() else 0
+        rack_hops[k] = rh[~intra].max() if (~intra).any() else 0
+
+    # Intra phase: one circuit per direction per epoch, shallow rings first
+    # (every board transfers concurrently — no gateway is touched).
+    intra_epoch = np.full((s,), -1, np.int64)
+    n_intra = 0
+    for sign in (1, -1):
+        idx = np.nonzero(live & intra_mask.any(1) & (np.sign(off) == sign))[0]
+        order = idx[np.argsort(local_hops[idx], kind="stable")]
+        intra_epoch[order] = np.arange(len(order))
+        n_intra = max(n_intra, len(order))
+    # Gateway phase: one board-crossing slot per epoch (gateways are
+    # single-ported serdes endpoints), short rack legs first.
+    inter_epoch = np.full((s,), -1, np.int64)
+    idx = np.nonzero(live & (~intra_mask).any(1))[0]
+    order = idx[np.argsort(rack_hops[idx], kind="stable")]
+    inter_epoch[order] = n_intra + np.arange(len(order))
+
+    rank_epoch = np.full((s, n), -1, np.int64)
+    for k in np.nonzero(live)[0]:
+        if intra_epoch[k] >= 0:
+            rank_epoch[k, intra_mask[k]] = intra_epoch[k]
+        if inter_epoch[k] >= 0:
+            rank_epoch[k, ~intra_mask[k]] = inter_epoch[k]
+    epoch = np.where(live & (rank_epoch >= 0).any(1),
+                     np.where(rank_epoch >= 0, rank_epoch, np.iinfo(np.int64).max
+                              ).min(1), -1)
+    live = live & (rank_epoch >= 0).any(1)
+    off = np.where(live, off, 0)
+    return _program(off, epoch, live, rank_epoch)
+
+
+def masked_ranks_program(base: RouteProgram, rank_live) -> RouteProgram:
+    """Group-mask a program: drop the (slot, requester) pairings where
+    ``rank_live`` ([N-1, N] bool) is False.
+
+    The datapath FREE-masks exactly the dropped pairings (their pages come
+    back as zeros / their writes are dropped), mirroring how
+    :func:`pruned_program` drops whole distances — this is the per-rank
+    refinement a hierarchical fabric needs (e.g. cut only the
+    board-crossing users of an offset).  Slots left serving nobody die
+    entirely.
+    """
+    rank_live = np.asarray(rank_live, bool)
+    re = np.asarray(base.rank_epoch)
+    if rank_live.shape != re.shape:
+        raise ValueError(f"rank_live has shape {rank_live.shape}; program "
+                         f"has {re.shape}")
+    re = np.where(rank_live, re, -1)
+    live = np.asarray(base.live) & (re >= 0).any(1)
+    off = np.where(live, np.asarray(base.offsets), 0)
+    epoch = np.where(live,
+                     np.where(re >= 0, re, np.iinfo(np.int64).max).min(1), -1)
+    return _program(off, epoch, live, re)
+
+
+def validate_hierarchical(program: RouteProgram, topo: Topology) -> None:
+    """Raise unless ``program`` is a sound schedule for ``topo``.
+
+    Beyond :meth:`RouteProgram.validate`: in any epoch at most one slot may
+    carry board-crossing traffic (no two slots target one gateway in the
+    same epoch), and per direction at most one slot may carry intra-board
+    traffic (circuits of one direction share each board ring's links).
+    """
+    program.validate()
+    n = program.num_nodes
+    if topo.num_nodes != n:
+        raise ValueError(f"topology has {topo.num_nodes} nodes; program has "
+                         f"{n}")
+    re = np.asarray(program.rank_epoch)
+    off = np.asarray(program.offsets)
+    served = program.rank_served()
+    for e in np.unique(re[served]):
+        inter_at_e, intra_cw, intra_ccw = [], [], []
+        for k in range(n - 1):
+            ranks = np.nonzero(served[k] & (re[k] == e))[0]
+            if ranks.size == 0:
+                continue
+            homes = (ranks + k + 1) % n
+            intra = topo.pair_intra(ranks, homes)
+            if (~intra).any():
+                inter_at_e.append(k)
+            if intra.any():
+                (intra_cw if off[k] > 0 else intra_ccw).append(k)
+        if len(inter_at_e) > 1:
+            raise ValueError(
+                f"epoch {e}: slots {inter_at_e} all cross boards — they "
+                "contend for the gateways")
+        for name, group in (("cw", intra_cw), ("ccw", intra_ccw)):
+            if len(group) > 1:
+                raise ValueError(
+                    f"epoch {e}: slots {group} share the {name} board-ring "
+                    "links")
 
 
 def pad_requests(want: np.ndarray, rounds: int, budget: int) -> np.ndarray:

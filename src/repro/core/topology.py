@@ -1,0 +1,212 @@
+"""Two-tier fabric description: boards of endpoints joined by a rack ring.
+
+The paper's bridge is explicitly hierarchical — transceiver circuits hop
+chip-to-chip *and* mainboard-to-mainboard to connect "100s of masters and
+slaves".  A :class:`Topology` captures that shape for the software-defined
+datapath:
+
+* every mesh rank belongs to a **board** (group) and has a local rank on
+  that board's ring (the board tier);
+* local rank 0 of each board is the board's **gateway**; gateways form a
+  rack-level ring (the rack tier);
+* the two tiers have asymmetric wire constants (hop latency, link
+  bandwidth) — the disaggregation asymmetry that DDC/rack-scale designs
+  show is where latency actually bites.
+
+A Topology is **static** per deployment: it is captured as compile-time
+constants by the jitted datapath (its arrays are closed over, never traced
+arguments), while :class:`~repro.core.steering.RouteProgram`s compiled *for*
+a topology remain runtime inputs — swapping flat and hierarchical programs
+on the same topology never retraces.
+
+Path realization contract (shared by the datapath telemetry, the ref
+oracle and the perfmodel — the single definition of "how many wires does
+this transfer hold"):
+
+* an **intra-board** pair (requester and home on the same board) travels
+  the board ring in the direction the route program drives its slot:
+  ``sign=+1``: ``(l_home - l_req) mod G`` board hops; ``sign=-1`` the
+  mirror.  No rack link is touched — boards transfer concurrently;
+* an **inter-board** pair routes through the gateways: shortest-way local
+  legs ``min(l, G - l)`` on each board, plus the rack ring between the two
+  gateways in the program's direction (``(g_home - g_req) mod B`` rack
+  hops clockwise, mirror counter-clockwise).
+
+The flat single-board topology (:meth:`Topology.flat`) degenerates to the
+PR-1 ring: every pair is intra, the board ring *is* the global ring, and
+directed board hops equal the classic ``|offset|`` hop count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class TopoTables:
+    """Device-side view of a topology (what the datapath telemetry reads).
+
+    All three are i32[N] indexed by mesh rank; they are captured as
+    constants by the jitted transfer (a Topology is static), so they never
+    appear in the jit cache key as traced inputs.
+    """
+
+    group: jax.Array        # board id of each rank
+    local_rank: jax.Array   # rank within its board
+    group_size: jax.Array   # size of the rank's board
+
+
+@dataclass(frozen=True, eq=False)
+class Topology:
+    """Static two-tier fabric layout + per-tier wire constants.
+
+    Attributes:
+      group: i64[N] board id per mesh rank (0 .. num_groups-1).
+      local_rank: i64[N] rank within the board (0 .. group size - 1); local
+        rank 0 is the board's gateway onto the rack ring.
+      group_sizes: i64[B] endpoints per board (boards may be ragged).
+      board_hop_us / rack_hop_us: per-hop circuit latency of each tier.
+      board_link_gbps / rack_link_gbps: per-direction link bandwidth of
+        each tier (GB/s) — rack links are typically the slow tier.
+    """
+
+    group: np.ndarray
+    local_rank: np.ndarray
+    group_sizes: np.ndarray
+    board_hop_us: float = 1.5
+    rack_hop_us: float = 4.0
+    board_link_gbps: float = 50.0
+    rack_link_gbps: float = 25.0
+
+    def __post_init__(self):
+        g = np.asarray(self.group, np.int64)
+        l = np.asarray(self.local_rank, np.int64)
+        sizes = np.asarray(self.group_sizes, np.int64)
+        object.__setattr__(self, "group", g)
+        object.__setattr__(self, "local_rank", l)
+        object.__setattr__(self, "group_sizes", sizes)
+        if g.shape != l.shape or g.ndim != 1:
+            raise ValueError("group / local_rank must be matching 1-D arrays")
+        b = sizes.shape[0]
+        if g.size and (g.min() < 0 or g.max() >= b):
+            raise ValueError(f"group ids must lie in [0, {b})")
+        for gid in range(b):
+            locs = np.sort(l[g == gid])
+            if locs.shape[0] != sizes[gid] or not np.array_equal(
+                    locs, np.arange(sizes[gid])):
+                raise ValueError(
+                    f"board {gid}: local ranks must be exactly "
+                    f"0..{int(sizes[gid]) - 1}")
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def flat(num_nodes: int, **hw) -> "Topology":
+        """One board spanning the whole ring (the PR-1 flat fabric)."""
+        return Topology.from_sizes([num_nodes], **hw)
+
+    @staticmethod
+    def boards(num_groups: int, group_size: int, **hw) -> "Topology":
+        """Contiguous uniform boards: rank = board * size + local rank."""
+        return Topology.from_sizes([group_size] * num_groups, **hw)
+
+    @staticmethod
+    def from_sizes(sizes: Sequence[int], **hw) -> "Topology":
+        """Contiguous boards of the given (possibly ragged) sizes."""
+        sizes = np.asarray(list(sizes), np.int64)
+        if sizes.size == 0 or (sizes < 1).any():
+            raise ValueError("every board needs at least one endpoint")
+        group = np.repeat(np.arange(sizes.shape[0]), sizes)
+        local = np.concatenate([np.arange(s) for s in sizes])
+        return Topology(group=group, local_rank=local, group_sizes=sizes, **hw)
+
+    # -- shape ----------------------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        return self.group.shape[0]
+
+    @property
+    def num_groups(self) -> int:
+        return self.group_sizes.shape[0]
+
+    @property
+    def is_flat(self) -> bool:
+        return self.num_groups == 1
+
+    def gateway_rank(self, gid: int) -> int:
+        """Mesh rank of board ``gid``'s gateway (its local rank 0)."""
+        return int(np.nonzero((self.group == gid) & (self.local_rank == 0))[0][0])
+
+    # -- pair classification / hop counting (host-side numpy) ----------------
+    def pair_intra(self, req, home) -> np.ndarray:
+        """bool: requester and home share a board (element-wise)."""
+        return self.group[np.asarray(req)] == self.group[np.asarray(home)]
+
+    def pair_hops(self, req, home, sign) -> Tuple[np.ndarray, np.ndarray]:
+        """(board_hops, rack_hops) of each (req, home) pair.
+
+        ``sign`` (+1/-1, broadcastable) is the direction the pair's slot is
+        driven — the realization contract in the module docstring.  Pairs
+        with ``req == home`` are loopback hits and cost 0 on both tiers.
+        """
+        req = np.asarray(req)
+        home = np.asarray(home)
+        sign = np.broadcast_to(np.asarray(sign), req.shape)
+        g_r, g_h = self.group[req], self.group[home]
+        l_r, l_h = self.local_rank[req], self.local_rank[home]
+        size_r = self.group_sizes[g_r]
+        size_h = self.group_sizes[g_h]
+        intra = g_r == g_h
+        b = self.num_groups
+        board = np.where(
+            intra,
+            np.where(sign > 0, (l_h - l_r) % size_r, (l_r - l_h) % size_r),
+            np.minimum(l_r, size_r - l_r) + np.minimum(l_h, size_h - l_h))
+        rack = np.where(
+            intra, 0,
+            np.where(sign > 0, (g_h - g_r) % b, (g_r - g_h) % b))
+        loop = req == home
+        return np.where(loop, 0, board), np.where(loop, 0, rack)
+
+    # -- device-side view -----------------------------------------------------
+    def tables(self) -> TopoTables:
+        return TopoTables(
+            group=jnp.asarray(self.group, jnp.int32),
+            local_rank=jnp.asarray(self.local_rank, jnp.int32),
+            group_size=jnp.asarray(self.group_sizes[self.group], jnp.int32))
+
+    def describe(self) -> str:
+        return (f"topology: {self.num_nodes} endpoints on {self.num_groups} "
+                f"board(s) {self.group_sizes.tolist()}; board "
+                f"{self.board_hop_us}us/{self.board_link_gbps}GB/s, rack "
+                f"{self.rack_hop_us}us/{self.rack_link_gbps}GB/s")
+
+
+def pair_hops_device(tables: TopoTables, num_groups: int, my, home, sign):
+    """jnp mirror of :meth:`Topology.pair_hops` for the datapath telemetry.
+
+    ``my`` is this requester's rank (traced scalar), ``home`` the per-request
+    home ranks (FREE entries must be masked by the caller), ``sign`` the
+    per-request drive direction.  Returns (intra, board_hops, rack_hops).
+    """
+    safe = jnp.clip(home, 0, tables.group.shape[0] - 1)
+    g_r, l_r = tables.group[my], tables.local_rank[my]
+    size_r = tables.group_size[my]
+    g_h, l_h = tables.group[safe], tables.local_rank[safe]
+    size_h = tables.group_size[safe]
+    intra = g_h == g_r
+    board = jnp.where(
+        intra,
+        jnp.where(sign > 0, jnp.mod(l_h - l_r, size_r),
+                  jnp.mod(l_r - l_h, size_r)),
+        jnp.minimum(l_r, size_r - l_r) + jnp.minimum(l_h, size_h - l_h))
+    rack = jnp.where(
+        intra, 0,
+        jnp.where(sign > 0, jnp.mod(g_h - g_r, num_groups),
+                  jnp.mod(g_r - g_h, num_groups)))
+    loop = safe == my
+    return intra, jnp.where(loop, 0, board), jnp.where(loop, 0, rack)

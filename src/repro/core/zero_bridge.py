@@ -27,6 +27,7 @@ from repro.core import bridge
 from repro.core.control_plane import ControlPlane
 from repro.core.memport import FREE, MemPortTable
 from repro.core.steering import RouteProgram
+from repro.core.topology import Topology
 
 
 @dataclass
@@ -90,13 +91,19 @@ class BridgeStore:
     budget: int
     table_nodes: int = 1        # logical memory nodes (== mesh size if > 1)
     program: Optional[RouteProgram] = None  # circuit schedule (None = full)
+    topology: Optional[Topology] = None     # board + rack fabric (None = flat)
 
 
 def create_store(tree: Any, *, mesh: Optional[Mesh], mem_axis: str = "data",
                  page_elems: int = 16_384, budget: int = 8,
                  cp: Optional[ControlPlane] = None,
                  policy: str = "striped", dtype=jnp.float32) -> BridgeStore:
-    """Allocate a pooled region for ``tree`` and write its initial image."""
+    """Allocate a pooled region for ``tree`` and write its initial image.
+
+    The control plane's topology rides along: on a board + rack fabric the
+    store's circuit schedule comes out hierarchical and its telemetry
+    carries per-tier occupancy.
+    """
     packer = TreePacker.plan(tree, page_elems)
     n = bridge._mem_axis_size(mesh, mem_axis)
     if cp is None:
@@ -110,8 +117,10 @@ def create_store(tree: Any, *, mesh: Optional[Mesh], mem_axis: str = "data",
     # Pool geometry MUST match the control plane's slot space: remapped
     # slots index the same rows the bridge scatters into.
     pool = jnp.zeros((cp.num_nodes * cp.pages_per_node, page_elems), dtype)
+    topo = None if cp.topology.is_flat else cp.topology
     store = BridgeStore(packer, table, pool, mem_axis, budget,
-                        table_nodes=cp.num_nodes, program=cp.route_program())
+                        table_nodes=cp.num_nodes, program=cp.route_program(),
+                        topology=topo)
     return push_tree(store, tree, mesh=mesh)
 
 
@@ -138,7 +147,8 @@ def pull_tree(store: BridgeStore, *, mesh: Optional[Mesh],
                             mem_axis=store.mem_axis, budget=store.budget,
                             program=store.program,
                             table_nodes=store.table_nodes,
-                            collect_telemetry=collect_telemetry)
+                            collect_telemetry=collect_telemetry,
+                            topology=store.topology)
     telem = None
     if collect_telemetry:
         got, telem = got
@@ -170,13 +180,12 @@ def push_tree(store: BridgeStore, tree: Any, *, mesh: Optional[Mesh],
                              store.table, mesh=mesh, mem_axis=store.mem_axis,
                              budget=store.budget, program=store.program,
                              table_nodes=store.table_nodes,
-                             collect_telemetry=collect_telemetry)
+                             collect_telemetry=collect_telemetry,
+                             topology=store.topology)
     telem = None
     if collect_telemetry:
         pool, telem = pool
-    out = BridgeStore(store.packer, store.table, pool, store.mem_axis,
-                      store.budget, table_nodes=store.table_nodes,
-                      program=store.program)
+    out = dataclasses.replace(store, pool=pool)
     if collect_telemetry:
         return out, telem
     return out
@@ -197,7 +206,5 @@ def rehome_after_failure(store: BridgeStore, cp: ControlPlane,
     table = cp.table()
     # Placement changed: recompile the circuit schedule for the new homes.
     program = cp.route_program() if store.program is not None else None
-    store = BridgeStore(store.packer, table, store.pool, store.mem_axis,
-                        store.budget, table_nodes=store.table_nodes,
-                        program=program)
+    store = dataclasses.replace(store, table=table, program=program)
     return push_tree(store, restore_tree, mesh=mesh)

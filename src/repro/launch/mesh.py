@@ -19,3 +19,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(data: int = 4, model: int = 2):
     """Small mesh for the 8-virtual-device subprocess tests."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_board_mesh(num_boards: int = 2, board_size: int = 4, **topo_hw):
+    """1-D mem-axis mesh over a board + rack fabric.
+
+    Returns ``(mesh, topology)``: the mesh's ``data`` axis enumerates the
+    fabric's endpoints board-major (rank = board * board_size + local
+    rank), and the :class:`~repro.core.topology.Topology` describes the
+    two tiers for the bridge's steering / telemetry / perfmodel.
+    ``topo_hw`` forwards per-tier wire constants (``rack_link_gbps`` etc.).
+    """
+    from repro.core.topology import Topology
+    mesh = jax.make_mesh((num_boards * board_size,), ("data",))
+    return mesh, Topology.boards(num_boards, board_size, **topo_hw)
+
+
+def make_production_board_mesh(*, num_boards: int = 16,
+                               board_size: int = 16, **topo_hw):
+    """Rack-scale fabric: 16 boards x 16 endpoints (256 chips) by default."""
+    return make_board_mesh(num_boards, board_size, **topo_hw)

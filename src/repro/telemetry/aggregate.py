@@ -18,7 +18,7 @@ from typing import Dict
 
 import numpy as np
 
-from repro.telemetry.counters import BridgeTelemetry
+from repro.telemetry.counters import BridgeTelemetry, num_epoch_bins
 
 
 def dominant_requester(traffic: np.ndarray, home: int) -> tuple[int, float]:
@@ -59,10 +59,13 @@ class TelemetryAggregator:
         self.alpha = alpha
         self.steps = 0
         n, s = num_nodes, max(num_nodes - 1, 0)
+        e = num_epoch_bins(n)
         self.traffic = np.zeros((n, n))
         self.dist_pages = np.zeros((s,))
-        self.epoch_cw = np.zeros((s,))
-        self.epoch_ccw = np.zeros((s,))
+        self.dist_intra = np.zeros((s,))
+        self.epoch_cw = np.zeros((e,))
+        self.epoch_ccw = np.zeros((e,))
+        self.tier_hop_pages = np.zeros((2,))   # (board, rack) page-hops/step
         self.loopback = np.zeros((n,))
         self.served = np.zeros((n,))
         self.spilled = np.zeros((n,))
@@ -94,6 +97,7 @@ class TelemetryAggregator:
             return out
 
         n, s = self.num_nodes, max(self.num_nodes - 1, 0)
+        e = num_epoch_bins(n)
         traffic = rowed(telem.traffic, (telem.traffic.shape[-1],))
         if traffic.shape[1] != n:
             raise ValueError(f"telemetry spans {traffic.shape[1]} homes for "
@@ -101,8 +105,10 @@ class TelemetryAggregator:
         slot = rowed(telem.slot_served, (s,))
         self._fold(self.traffic, traffic)
         self._fold(self.dist_pages, slot.sum(0))
-        self._fold(self.epoch_cw, rowed(telem.epoch_cw, (s,)).sum(0))
-        self._fold(self.epoch_ccw, rowed(telem.epoch_ccw, (s,)).sum(0))
+        self._fold(self.dist_intra, rowed(telem.slot_intra, (s,)).sum(0))
+        self._fold(self.epoch_cw, rowed(telem.epoch_cw, (e,)).sum(0))
+        self._fold(self.epoch_ccw, rowed(telem.epoch_ccw, (e,)).sum(0))
+        self._fold(self.tier_hop_pages, rowed(telem.tier_hops, (2,)).sum(0))
         self._fold(self.loopback, rowed(telem.loopback_served, ()))
         self._fold(self.served,
                    rowed(telem.loopback_served, ()) + slot.sum(1))
@@ -148,6 +154,34 @@ class TelemetryAggregator:
         """(cw, ccw) EWMA wire pages per circuit epoch."""
         return self.epoch_cw.copy(), self.epoch_ccw.copy()
 
+    # -- the hierarchical (board + rack) views --------------------------------
+    def distance_intra_pages(self) -> np.ndarray:
+        """EWMA intra-board pages per step at each ring distance, [N-1].
+
+        ``distance_pages() - distance_intra_pages()`` is the board-crossing
+        share — the split :func:`repro.core.perfmodel.predict_round_latency_us`
+        consumes as ``slot_intra_pages``.
+        """
+        return self.dist_intra.copy()
+
+    def tier_pages(self) -> Dict[str, float]:
+        """EWMA circuit pages per step on each fabric tier."""
+        intra = float(self.dist_intra.sum())
+        return {"board": intra, "rack": float(self.dist_pages.sum()) - intra}
+
+    def tier_hops(self) -> Dict[str, float]:
+        """EWMA page-hops per step over each tier's links (wire occupancy)."""
+        return {"board": float(self.tier_hop_pages[0]),
+                "rack": float(self.tier_hop_pages[1])}
+
+    def tier_utilization(self) -> Dict[str, float]:
+        """Each tier's share of page-hops (0 when idle)."""
+        th = self.tier_hops()
+        total = th["board"] + th["rack"]
+        if total <= 0:
+            return {"board": 0.0, "rack": 0.0}
+        return {k: v / total for k, v in th.items()}
+
     def spill_rate(self) -> np.ndarray:
         """Per-node fraction of live requests the rate limiter dropped."""
         total = self.served + self.spilled
@@ -168,9 +202,12 @@ class TelemetryAggregator:
 
     def describe(self) -> str:
         util = self.link_utilization()
+        tier = self.tier_utilization()
         lines = [f"telemetry: {self.steps} steps folded "
                  f"(alpha={self.alpha}, page_bytes={self.page_bytes})",
                  f"  wire share: cw={util['cw']:.2f} ccw={util['ccw']:.2f}",
+                 f"  tier share: board={tier['board']:.2f} "
+                 f"rack={tier['rack']:.2f}",
                  "  dist pages: " + " ".join(
                      f"d{d}={p:.1f}" for d, p in
                      enumerate(self.dist_pages, start=1) if p > 0)]

@@ -6,11 +6,12 @@ needs link-level telemetry feeding allocation and routing.  This module is
 the datapath half of that loop: a :class:`BridgeTelemetry` pytree of masked
 integer sums computed from the very masks the transfer engine already
 materializes (request liveness, rate-limiter window, ring distance, route
-program liveness), so collecting it
+program liveness, the program's per-rank group mask), so collecting it
 
 * costs only a handful of masked ``segment-sum`` reductions,
-* has **static shapes** (fixed ``N-1`` slot / ``N`` node axes), so swapping
-  programs, tables or budgets with collection on never retraces,
+* has **static shapes** (fixed ``N-1`` slot / ``N`` node / ``2(N-1)``
+  epoch axes), so swapping programs — flat or hierarchical — tables or
+  budgets with collection on never retraces,
 * is bit-deterministic (pure integer arithmetic, no atomics), identical
   between ``edge_buffer`` modes, and exactly reproducible by the oracle
   (:func:`repro.core.ref.expected_transfer_telemetry`).
@@ -21,10 +22,14 @@ Counter semantics for one requester's (padded) request list:
 * live requests past the rate-limiter window (``rounds * active_budget``
   round lanes) are **spilled** (the software rate limiter dropped them);
 * in-window live requests at ring distance 0 are **loopback** hits;
-* remote requests whose distance has no wired circuit are **pruned** drops;
+* remote requests whose distance has no wired circuit — or whose
+  (rank, slot) pairing the program's group mask cut — are **pruned** drops;
 * everything else is **served** by its circuit slot, contributing to the
-  per-slot counts, the requester->home traffic-matrix row, and the per-epoch
-  cw/ccw wire occupancy (direction = sign of the program's slot offset).
+  per-slot counts, the requester->home traffic-matrix row, the per-epoch
+  cw/ccw wire occupancy (direction = sign of the program's slot offset, at
+  the epoch the program assigns *this requester*), and the **per-tier**
+  occupancy: intra-board pages per slot plus board / rack page-hops under
+  the :mod:`repro.core.topology` realization contract.
 """
 from __future__ import annotations
 
@@ -35,6 +40,13 @@ import jax.numpy as jnp
 
 from repro.core.memport import MemPortTable
 from repro.core.steering import RouteProgram
+from repro.core.topology import TopoTables, pair_hops_device
+
+
+def num_epoch_bins(num_nodes: int) -> int:
+    """Static epoch-histogram length: a hierarchical schedule uses at most
+    (G-1) intra epochs + (N-1) gateway epochs <= 2(N-1)."""
+    return 2 * max(num_nodes - 1, 0)
 
 
 @jax.tree_util.register_dataclass
@@ -43,21 +55,28 @@ class BridgeTelemetry:
     """Per-requester bridge counters (one transfer's worth).
 
     All leaves are ``i32`` with static trailing shapes for an N-node ring
-    (``N-1`` circuit slots, ``N`` homes); leading dims identify the
-    requester (``[N, ...]`` from the N-device path, ``[rows, ...]`` from the
-    loopback path).  Counts are pages; bytes are ``count * page_bytes`` with
-    a static page size, so only counts are carried on device.
+    (``N-1`` circuit slots, ``N`` homes, ``2(N-1)`` epochs); leading dims
+    identify the requester (``[N, ...]`` from the N-device path,
+    ``[rows, ...]`` from the loopback path).  Counts are pages; bytes are
+    ``count * page_bytes`` with a static page size, so only counts are
+    carried on device.
 
     Attributes:
       slot_served:      pages served per circuit slot (slot k = distance k+1).
       loopback_served:  distance-0 fast-path hits (no circuit traffic).
       spilled:          live requests dropped by the rate limiter.
       pruned:           live requests dropped because their ring distance has
-                        no wired circuit in the route program.
+                        no wired circuit — or the program's group mask cut
+                        their (rank, slot) pairing.
       traffic:          requester->home served pages (one traffic-matrix row,
                         loopback included on the diagonal).
       epoch_cw:         clockwise wire occupancy (pages) per circuit epoch.
       epoch_ccw:        counter-clockwise wire occupancy per circuit epoch.
+      slot_intra:       the intra-board share of ``slot_served`` (requester
+                        and home on one board; inter = served - intra).
+      tier_hops:        [..., 2] page-hops per tier (board, rack) under the
+                        topology's path realization — per-tier wire
+                        occupancy.
     """
 
     slot_served: jax.Array      # i32[..., N-1]
@@ -65,8 +84,10 @@ class BridgeTelemetry:
     spilled: jax.Array          # i32[...]
     pruned: jax.Array           # i32[...]
     traffic: jax.Array          # i32[..., N]
-    epoch_cw: jax.Array         # i32[..., N-1]
-    epoch_ccw: jax.Array        # i32[..., N-1]
+    epoch_cw: jax.Array         # i32[..., 2(N-1)]
+    epoch_ccw: jax.Array        # i32[..., 2(N-1)]
+    slot_intra: jax.Array       # i32[..., N-1]
+    tier_hops: jax.Array        # i32[..., 2]
 
     @property
     def num_nodes(self) -> int:
@@ -84,14 +105,21 @@ class BridgeTelemetry:
         """Per-slot wire bytes (static page size x served counts)."""
         return self.slot_served * page_bytes
 
+    def tier_pages(self) -> tuple[jax.Array, jax.Array]:
+        """(intra-board, inter-board) circuit pages per requester."""
+        intra = self.slot_intra.sum(-1)
+        return intra, self.slot_served.sum(-1) - intra
+
 
 def zeros(num_nodes: int, leading: tuple[int, ...] = ()) -> BridgeTelemetry:
     """All-zero telemetry for an N-node ring (accumulator seed)."""
     s = max(num_nodes - 1, 0)
+    e = num_epoch_bins(num_nodes)
     z = lambda *shape: jnp.zeros(leading + shape, jnp.int32)  # noqa: E731
     return BridgeTelemetry(slot_served=z(s), loopback_served=z(),
                            spilled=z(), pruned=z(), traffic=z(num_nodes),
-                           epoch_cw=z(s), epoch_ccw=z(s))
+                           epoch_cw=z(e), epoch_ccw=z(e), slot_intra=z(s),
+                           tier_hops=z(2))
 
 
 def add(a: BridgeTelemetry, b: BridgeTelemetry) -> BridgeTelemetry:
@@ -101,8 +129,8 @@ def add(a: BridgeTelemetry, b: BridgeTelemetry) -> BridgeTelemetry:
 
 def transfer_telemetry(ids: jax.Array, table: MemPortTable,
                        program: RouteProgram, active_budget: jax.Array, *,
-                       my, num_nodes: int, budget: int,
-                       rounds: int) -> BridgeTelemetry:
+                       my, num_nodes: int, budget: int, rounds: int,
+                       topo: TopoTables, num_groups: int) -> BridgeTelemetry:
     """Counters for one requester's padded request list (pull or push).
 
     Pure jnp — runs inside the ``shard_map`` body (``my`` = axis index) and,
@@ -115,6 +143,8 @@ def transfer_telemetry(ids: jax.Array, table: MemPortTable,
       active_budget: live lanes per round (the runtime rate limiter).
       my: this requester's ring rank (traced or static).
       rounds: static round count the transfer was compiled for.
+      topo: the (static) topology tables classifying each pair's tier and
+        hop counts; ``num_groups`` the rack-ring length.
     """
     ids = ids.reshape(-1)
     home, _ = table.translate(ids)
@@ -137,27 +167,43 @@ def transfer_telemetry(ids: jax.Array, table: MemPortTable,
                                loopback_served=loopback_served,
                                spilled=spilled,
                                pruned=jnp.int32(0), traffic=traffic,
-                               epoch_cw=empty, epoch_ccw=empty)
+                               epoch_cw=empty, epoch_ccw=empty,
+                               slot_intra=empty,
+                               tier_hops=jnp.zeros((2,), jnp.int32))
 
     slot = jnp.clip(dist - 1, 0, nslots - 1)
     remote = cand & (dist > 0)
-    wired = remote & program.live[slot]
-    pruned = jnp.sum(remote & ~program.live[slot]).astype(jnp.int32)
+    # The serve condition mirrors the datapath: the slot must be live AND
+    # the program's group mask must wire it for THIS requester rank.
+    rank_wired = program.live & (program.rank_epoch[:, my] >= 0)
+    wired = remote & rank_wired[slot]
+    pruned = jnp.sum(remote & ~rank_wired[slot]).astype(jnp.int32)
     slot_served = jnp.zeros((nslots,), jnp.int32).at[
         jnp.where(wired, slot, nslots)].add(1, mode="drop")
     served = is_loop | wired
     traffic = jnp.zeros((num_nodes,), jnp.int32).at[
         jnp.where(served, home, num_nodes)].add(1, mode="drop")
-    # Wire occupancy: slot k's pages land at its program epoch, on the ring
-    # direction its signed offset drives.
-    ep = jnp.clip(program.epoch, 0, nslots - 1)
-    cw = program.live & (program.offsets > 0)
-    ccw = program.live & (program.offsets < 0)
-    epoch_cw = jnp.zeros((nslots,), jnp.int32).at[
-        jnp.where(cw, ep, nslots)].add(slot_served, mode="drop")
-    epoch_ccw = jnp.zeros((nslots,), jnp.int32).at[
-        jnp.where(ccw, ep, nslots)].add(slot_served, mode="drop")
+    # Wire occupancy: a served page lands at the epoch the program assigns
+    # this requester on its slot, on the ring direction the slot drives.
+    nbins = num_epoch_bins(num_nodes)
+    ep = jnp.clip(program.rank_epoch[:, my], 0, nbins - 1)
+    cw = rank_wired & (program.offsets > 0)
+    ccw = rank_wired & (program.offsets < 0)
+    epoch_cw = jnp.zeros((nbins,), jnp.int32).at[
+        jnp.where(cw, ep, nbins)].add(slot_served, mode="drop")
+    epoch_ccw = jnp.zeros((nbins,), jnp.int32).at[
+        jnp.where(ccw, ep, nbins)].add(slot_served, mode="drop")
+    # Per-tier occupancy under the topology's path realization.
+    sign = jnp.sign(program.offsets)[slot]
+    intra, board_hops, rack_hops = pair_hops_device(
+        topo, num_groups, my, home, sign)
+    slot_intra = jnp.zeros((nslots,), jnp.int32).at[
+        jnp.where(wired & intra, slot, nslots)].add(1, mode="drop")
+    tier_hops = jnp.stack([
+        jnp.sum(jnp.where(wired, board_hops, 0)).astype(jnp.int32),
+        jnp.sum(jnp.where(wired, rack_hops, 0)).astype(jnp.int32)])
     return BridgeTelemetry(slot_served=slot_served,
                            loopback_served=loopback_served, spilled=spilled,
                            pruned=pruned, traffic=traffic,
-                           epoch_cw=epoch_cw, epoch_ccw=epoch_ccw)
+                           epoch_cw=epoch_cw, epoch_ccw=epoch_ccw,
+                           slot_intra=slot_intra, tier_hops=tier_hops)

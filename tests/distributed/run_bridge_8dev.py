@@ -19,7 +19,12 @@ import numpy as np  # noqa: E402
 from repro.core import bridge, ref, kvbridge, steering  # noqa: E402
 from repro.core.memport import FREE, MemPortTable  # noqa: E402
 from repro.core.control_plane import ControlPlane  # noqa: E402
+from repro.core.topology import Topology  # noqa: E402
 from repro.telemetry import TelemetryAggregator  # noqa: E402
+
+TELEM_FIELDS = ("slot_served", "loopback_served", "spilled", "pruned",
+                "traffic", "epoch_cw", "epoch_ccw", "slot_intra",
+                "tier_hops")
 
 
 def check(name, got, exp, atol=1e-5):
@@ -181,6 +186,7 @@ def main():
 
     route_program_checks()
     telemetry_checks()
+    hierarchical_checks()
 
     print("ALL OK")
 
@@ -278,8 +284,7 @@ def telemetry_checks():
                                      collect_telemetry=True))
 
     def check_telem(name, got, exp):
-        for f in ("slot_served", "loopback_served", "spilled", "pruned",
-                  "traffic", "epoch_cw", "epoch_ccw"):
+        for f in TELEM_FIELDS:
             np.testing.assert_array_equal(
                 np.asarray(getattr(got, f)), np.asarray(getattr(exp, f)),
                 err_msg=f"{name}: {f}")
@@ -335,6 +340,107 @@ def telemetry_checks():
         np.asarray(ref.pull_pages_ref(pool, jnp.asarray(masked_want), table,
                                       pages_per_node=ppn, program=lb)))
     print("ok: telemetry-compiled load-balanced program bit-exact")
+
+
+def hierarchical_checks():
+    """Board + rack fabric acceptance on the real 8-way ring (2 boards x 4).
+
+    * the hierarchical RouteProgram's transfers AND telemetry — including
+      the per-tier counters — are bit-exact against the ref oracle,
+    * swapping flat <-> hierarchical programs on the same jitted pull is
+      retrace-free (one cache entry: the programs share one static shape),
+    * the group mask really steers the datapath: masking an offset's
+      board-crossing requesters drops exactly their pages, like the oracle,
+    * a topology-aware control plane compiles a valid hierarchical program
+      from placement.
+    """
+    mesh8 = jax.make_mesh((8,), ("data",))
+    topo = Topology.boards(2, 4)
+    n, ppn, page = 8, 8, 16
+    rng = np.random.default_rng(23)
+    pool = jnp.asarray(rng.normal(size=(n * ppn, page)).astype(np.float32))
+    table = MemPortTable.striped(48, n, ppn)
+    want = jnp.asarray(rng.integers(-1, 48, size=(n, 7)).astype(np.int32))
+
+    hier = steering.hierarchical_program(topo)
+    hier.validate()
+    steering.validate_hierarchical(hier, topo)
+    bi = steering.bidirectional_program(n)
+
+    def check_telem(name, got, exp):
+        for f in TELEM_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, f)), np.asarray(getattr(exp, f)),
+                err_msg=f"{name}: {f}")
+        print(f"ok: telemetry {name} == oracle")
+
+    pull = jax.jit(functools.partial(bridge.pull_pages, mesh=mesh8, budget=3,
+                                     topology=topo, collect_telemetry=True))
+    exp_pages = np.asarray(ref.pull_pages_ref(pool, want, table,
+                                              pages_per_node=ppn))
+    for name, prog in [("flat bi", bi), ("hierarchical", hier),
+                       ("flat bi again", bi)]:
+        out, telem = pull(pool, want, table, program=prog)
+        np.testing.assert_array_equal(np.asarray(out), exp_pages,
+                                      err_msg=name)
+        exp = ref.expected_transfer_telemetry(
+            np.asarray(want), table, prog, num_nodes=n, budget=3,
+            topology=topo)
+        check_telem(name, telem, exp)
+    # per-tier occupancy really split: the fabric has both tiers in play
+    _, telem_h = pull(pool, want, table, program=hier)
+    intra, inter = telem_h.tier_pages()
+    assert int(np.asarray(intra).sum()) > 0
+    assert int(np.asarray(inter).sum()) > 0
+    assert int(np.asarray(telem_h.tier_hops)[:, 1].sum()) > 0
+    print("ok: hierarchical per-tier telemetry live on both tiers")
+    # acceptance: flat <-> hierarchical swaps share ONE jit cache entry
+    assert pull._cache_size() == 1, pull._cache_size()
+    print("ok: flat <-> hierarchical program swap triggered no retrace")
+
+    # group-masked offsets steer the datapath: cut slot d=1's board-crossing
+    # requesters (local ranks 3 — their +1 neighbour is the next board)
+    mask = np.asarray(hier.rank_epoch) >= 0
+    r = np.arange(n)
+    mask[0, :] = topo.pair_intra(r, (r + 1) % n)
+    masked = steering.masked_ranks_program(hier, mask)
+    got_m, telem_m = pull(pool, want, table, program=masked)
+    exp_m = ref.pull_pages_ref(pool, want, table, pages_per_node=ppn,
+                               program=masked)
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(exp_m))
+    check_telem("group-masked", telem_m, ref.expected_transfer_telemetry(
+        np.asarray(want), table, masked, num_nodes=n, budget=3,
+        topology=topo))
+    assert pull._cache_size() == 1, pull._cache_size()
+    print("ok: group-masked offsets FREE-mask exactly the cut pairings")
+
+    # topology-aware control plane: placement -> hierarchical program
+    cp = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=48,
+                      topology=topo)
+    cp.allocate(48, policy="striped")
+    prog = cp.route_program()
+    steering.validate_hierarchical(prog, topo)
+    out_cp, _ = pull(pool, want, cp.table(), program=prog)
+    np.testing.assert_array_equal(
+        np.asarray(out_cp),
+        np.asarray(ref.pull_pages_ref(pool, want, cp.table(),
+                                      pages_per_node=ppn, program=prog)))
+    assert pull._cache_size() == 1, pull._cache_size()
+    print("ok: control-plane hierarchical program bit-exact, no retrace")
+
+    # push path under the hierarchical program: bit-exact + tier counters
+    dest = np.stack([np.arange(4) + 6 * node for node in range(n)])
+    payload = rng.normal(size=(n, 4, page)).astype(np.float32)
+    got_p, ptelem = bridge.push_pages(
+        pool, jnp.asarray(dest), jnp.asarray(payload), table, mesh=mesh8,
+        budget=2, program=hier, topology=topo, collect_telemetry=True)
+    np.testing.assert_array_equal(
+        np.asarray(got_p),
+        np.asarray(ref.push_pages_ref(pool, jnp.asarray(dest),
+                                      jnp.asarray(payload), table,
+                                      pages_per_node=ppn, program=hier)))
+    check_telem("push hierarchical", ptelem, ref.expected_transfer_telemetry(
+        dest, table, hier, num_nodes=n, budget=2, topology=topo))
 
 
 if __name__ == "__main__":

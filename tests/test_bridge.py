@@ -4,19 +4,20 @@ Single-device (N=1 loopback) cases run here; multi-node ring tests run in a
 subprocess with 8 virtual devices (see test_distributed.py).  Randomized
 property tests live in test_bridge_properties.py (optional: hypothesis).
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from topologies import fake_telem, make_pool
+
 from repro.core import bridge, perfmodel, ref, steering
 from repro.core.memport import FREE, MemPortTable
 from repro.core.control_plane import ControlPlane
 
-
-def make_pool_np(num_slots, page, seed=0):
-    rng = np.random.default_rng(seed)
-    return jnp.asarray(rng.normal(size=(num_slots, page)).astype(np.float32))
+make_pool_np = make_pool  # shared fixture (tests/topologies.py)
 
 
 def test_pull_single_node_matches_ref():
@@ -129,7 +130,7 @@ def test_rate_limits_spill_restore_ends_with_clean_measurement():
     """Regression: the spill-feedback restore must key on the *last*
     measurement, not the EWMA (which never decays to zero), or a straggler
     could never be throttled again after a single historic spill."""
-    from repro.telemetry import BridgeTelemetry, TelemetryAggregator
+    from repro.telemetry import TelemetryAggregator
     n = 4
     cp = ControlPlane(num_nodes=n, pages_per_node=8, num_logical=8)
     for _ in range(8):
@@ -138,12 +139,7 @@ def test_rate_limits_spill_restore_ends_with_clean_measurement():
     agg = TelemetryAggregator(n)
 
     def telem(spilled):
-        z = jnp.zeros((n,), jnp.int32)
-        zs = jnp.zeros((n, n - 1), jnp.int32)
-        return BridgeTelemetry(
-            slot_served=zs, loopback_served=z + 4,
-            spilled=jnp.asarray(spilled, jnp.int32), pruned=z,
-            traffic=jnp.zeros((n, n), jnp.int32), epoch_cw=zs, epoch_ccw=zs)
+        return fake_telem(n, 4 * np.eye(n, dtype=np.int32), spilled=spilled)
 
     agg.update(telem([0, 0, 0, 6]))          # throttled step spilled
     assert cp.rate_limits(8, telemetry=agg)[3] == 8   # restore
@@ -206,12 +202,17 @@ def test_route_program_is_runtime_pytree():
     can flow through jit without becoming static (no retrace on swap)."""
     p = steering.bidirectional_program(8)
     leaves = jax.tree.leaves(p)
-    assert len(leaves) == 3
+    assert len(leaves) == 4  # offsets, epoch, live, rank_epoch (group mask)
     assert all(hasattr(l, "dtype") for l in leaves)
-    # identical treedef across program variants -> same jit cache entry
-    t1 = jax.tree.structure(steering.unidirectional_program(8))
+    # identical treedef AND shapes across every program variant -> same jit
+    # cache entry (flat and hierarchical programs swap without retracing)
+    from repro.core.topology import Topology
     t2 = jax.tree.structure(p)
-    assert t1 == t2
+    for q in (steering.unidirectional_program(8),
+              steering.hierarchical_program(Topology.boards(2, 4))):
+        assert jax.tree.structure(q) == t2
+        assert all(a.shape == b.shape for a, b in
+                   zip(jax.tree.leaves(q), leaves))
 
 
 def test_bidirectional_offsets_shortest_way():
@@ -246,10 +247,14 @@ def test_link_avoiding_program_directions():
 
 def test_route_program_validate_rejects_incongruent():
     p = steering.unidirectional_program(4)
-    bad = steering.RouteProgram(offsets=jnp.asarray([1, 3, 3], jnp.int32),
-                                epoch=p.epoch, live=p.live)
+    bad = dataclasses.replace(p, offsets=jnp.asarray([1, 3, 3], jnp.int32))
     with pytest.raises(ValueError):
         bad.validate()
+    # an inconsistent group mask (dead slot still serving ranks) is caught
+    ghost = dataclasses.replace(
+        p, live=jnp.asarray([True, False, True]))
+    with pytest.raises(ValueError):
+        ghost.validate()
 
 
 def test_bridge_rejects_wrong_sized_program():

@@ -12,15 +12,14 @@ try:
 except ImportError:                      # minimal environments
     from hypofallback import given, settings, st
 
+from topologies import TELEM_FIELDS, make_pool
+
 from repro.core import bridge, ref, steering
 from repro.core.memport import FREE, MemPortTable
 from repro.core.control_plane import ControlPlane
 from repro.telemetry import counters as tcounters  # noqa: F401 (structure)
 
-
-def make_pool_np(num_slots, page, seed=0):
-    rng = np.random.default_rng(seed)
-    return jnp.asarray(rng.normal(size=(num_slots, page)).astype(np.float32))
+make_pool_np = make_pool  # shared fixture (tests/topologies.py)
 
 
 @settings(max_examples=25, deadline=None)
@@ -104,8 +103,7 @@ def test_pull_telemetry_matches_oracle_property(num_nodes, budget,
     exp = ref.expected_transfer_telemetry(
         want, table, program, num_nodes=tn, budget=budget,
         active_budget=active_budget, overprovision=overprovision)
-    for name in ("slot_served", "loopback_served", "spilled", "pruned",
-                 "traffic", "epoch_cw", "epoch_ccw"):
+    for name in TELEM_FIELDS:
         np.testing.assert_array_equal(
             np.asarray(getattr(telem, name)), np.asarray(getattr(exp, name)),
             err_msg=name)

@@ -1,11 +1,17 @@
 """Multi-device (8 virtual CPU) validation, run in subprocesses.
 
-Device count must be fixed before jax initializes, so these scripts cannot
-import jax in the pytest process — each runs as ``python tests/distributed/
-run_*.py`` with XLA_FLAGS set inside the script itself.
+Device count must be fixed before jax initializes, so these suites cannot
+import jax in the pytest process — the ``run_8dev`` fixture executes each
+``tests/distributed/run_*_8dev.py`` as ``python <script>`` with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` pinned in the
+environment (the scripts also self-pin, so they stay runnable by hand).
+
+Every ``run_*_8dev.py`` under tests/distributed/ is **auto-collected** via
+the parametrized test below: dropping a new 8-device suite in that
+directory makes CI run (and fail on) it with no further wiring, and a
+regression in any suite fails tier-1 rather than passing silently.
 """
 import pathlib
-import subprocess
 import sys
 
 import pytest
@@ -13,40 +19,39 @@ import pytest
 HERE = pathlib.Path(__file__).parent
 REPO = HERE.parent
 
-
-def run_script(name: str, timeout: int = 900) -> str:
-    proc = subprocess.run(
-        [sys.executable, str(HERE / "distributed" / name)],
-        capture_output=True, text=True, timeout=timeout,
-        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
-    )
-    if proc.returncode != 0:
-        raise AssertionError(
-            f"{name} failed\n--- stdout ---\n{proc.stdout[-4000:]}\n"
-            f"--- stderr ---\n{proc.stderr[-4000:]}")
-    return proc.stdout
+SCRIPTS = sorted(p.name for p in (HERE / "distributed").glob("run_*_8dev.py"))
+assert SCRIPTS, "no tests/distributed/run_*_8dev.py scripts found"
 
 
-@pytest.mark.slow
-def test_bridge_8dev():
-    out = run_script("run_bridge_8dev.py")
-    assert "ALL OK" in out
+@pytest.fixture
+def run_8dev(request):
+    """Subprocess runner for the 8-virtual-device suites.
 
+    Returns a callable ``run(name, timeout=900) -> stdout`` that raises an
+    AssertionError carrying the script's tail output on non-zero exit.
+    """
+    import subprocess
 
-@pytest.mark.slow
-def test_zero_bridge_8dev():
-    out = run_script("run_zero_8dev.py")
-    assert "ALL OK" in out
+    def run(name: str, timeout: int = 900) -> str:
+        proc = subprocess.run(
+            [sys.executable, str(HERE / "distributed" / name)],
+            capture_output=True, text=True, timeout=timeout,
+            env={"PYTHONPATH": str(REPO / "src"),
+                 "PATH": "/usr/bin:/bin", "HOME": "/root",
+                 "JAX_PLATFORMS": "cpu",
+                 "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+        )
+        if proc.returncode != 0:
+            raise AssertionError(
+                f"{name} failed\n--- stdout ---\n{proc.stdout[-4000:]}\n"
+                f"--- stderr ---\n{proc.stderr[-4000:]}")
+        return proc.stdout
 
-
-@pytest.mark.slow
-def test_compressed_dp_8dev():
-    out = run_script("run_compress_8dev.py")
-    assert "ALL OK" in out
+    return run
 
 
 @pytest.mark.slow
-def test_pipeline_8dev():
-    out = run_script("run_pipeline_8dev.py")
-    assert "ALL OK" in out
+@pytest.mark.parametrize("script", SCRIPTS)
+def test_8dev_suite(run_8dev, script):
+    out = run_8dev(script)
+    assert "ALL OK" in out, f"{script} finished without its ALL OK marker"

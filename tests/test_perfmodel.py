@@ -1,10 +1,18 @@
 """Paper-validation tests: the analytical model must reproduce the published
 prototype numbers (DESIGN.md §6.1).  These pins ARE the faithfulness check.
+
+Plus the bridge-side accounting invariants: predicted bytes-per-round must
+equal the ref oracle's summed bytes for every program variant (flat
+uni/bi/pruned/load-balanced + hierarchical), and the tier-aware latency
+model must degenerate to the classic flat model on a single board.
 """
 import numpy as np
 import pytest
 
 from repro.core import perfmodel as pm
+from repro.core import ref, steering
+from repro.core.memport import MemPortTable
+from repro.core.topology import Topology
 
 
 def test_rtt_matches_paper():
@@ -63,3 +71,122 @@ def test_tpu_projection_monotone_in_page_size():
     big = pm.tpu_remote_page_bandwidth_gbps(1 << 20)
     assert big > small
     assert big <= pm.TPU_HW.ici_link_gbps
+
+
+# ---------------------------------------------------------------------------
+# Bridge accounting invariants (byte conservation + tier model)
+# ---------------------------------------------------------------------------
+
+def _full_coverage_load(n, ppn):
+    """Every requester asks one page at every ring distance 1..n-1.
+
+    Striped placement (home = id % n) with a distinct page per (requester,
+    distance): requester i's page for distance d is (i + d) % n + n * d.
+    Offered load per distance is therefore exactly n pages.
+    """
+    table = MemPortTable.striped(n * ppn, n, ppn)
+    want = np.stack([[(i + d) % n + n * d for d in range(1, n)]
+                     for i in range(n)]).astype(np.int32)
+    return table, want
+
+
+def test_byte_conservation_all_program_variants():
+    """Regression: ``perfmodel.predict_round_bytes`` == the ref oracle's
+    summed wire bytes for every program variant.  The perfmodel counts from
+    program liveness x offered load; the oracle walks each request — they
+    must agree or the bench's bytes-per-round trajectory lies."""
+    n, ppn, budget, page_bytes = 8, 16, 8, 1 << 18
+    topo = Topology.boards(2, 4)
+    table, want = _full_coverage_load(n, ppn)
+    bi = steering.bidirectional_program(n)
+    w = np.array([6.0, 3.0, 2.0, 0, 0, 0, 0])
+    variants = {
+        "uni": steering.unidirectional_program(n),
+        "bi": bi,
+        "pruned": steering.pruned_program(bi, [1, 2, 6]),
+        "load_balanced": steering.load_balanced_program(n, w, prune=True),
+        "hierarchical": steering.hierarchical_program(topo),
+        "hier_pruned": steering.hierarchical_program(
+            topo, live_distances=[1, 3, 5]),
+        "hier_masked": steering.masked_ranks_program(
+            steering.hierarchical_program(topo),
+            np.broadcast_to(np.arange(n)[None, :] % 2 == 0, (n - 1, n))),
+    }
+    for name, prog in variants.items():
+        # offered pages per slot = requesters the program actually serves
+        # there (each offers exactly one page per distance)
+        offered = prog.rank_served().sum(1).astype(float)
+        telem = ref.expected_transfer_telemetry(
+            want, table, prog, num_nodes=n, budget=budget, topology=topo)
+        oracle_bytes = float(np.asarray(
+            telem.slot_bytes(page_bytes)).sum())
+        predicted = pm.predict_round_bytes(prog, page_bytes, budget,
+                                           slot_pages=offered)
+        assert predicted == oracle_bytes, (
+            f"{name}: predicted {predicted} != oracle {oracle_bytes}")
+    # worst-case accounting (no measured loads): live_slots x budget pages
+    stats = pm.route_epoch_stats(bi)
+    assert pm.predict_round_bytes(bi, page_bytes, budget) == (
+        stats["live_slots"] * budget * page_bytes)
+
+
+def test_flat_topology_matches_classic_model():
+    """A single-board Topology with ICI constants reproduces the flat
+    latency model bit-for-bit (same formula, same numbers)."""
+    flat = Topology.flat(8, board_hop_us=pm.TPU_HW.ici_hop_latency_us,
+                         board_link_gbps=pm.TPU_HW.ici_link_gbps)
+    for prog in (steering.bidirectional_program(8),
+                 steering.unidirectional_program(8)):
+        for eb in (True, False):
+            classic = pm.predict_round_latency_us(prog, 1 << 18, 8,
+                                                  edge_buffer=eb)
+            tiered = pm.predict_round_latency_us(prog, 1 << 18, 8,
+                                                 edge_buffer=eb,
+                                                 topology=flat)
+            assert tiered == pytest.approx(classic)
+
+
+def test_hierarchical_beats_flat_bi_under_intra_heavy_traffic():
+    """Acceptance: on 2 boards x 4, the hierarchical program's modeled
+    round latency beats flat bidirectional under intra-board-heavy
+    traffic (topology-blind directions pay extra board hops; the
+    hierarchical schedule drives every pair the short local way)."""
+    topo = Topology.boards(2, 4)
+    n = topo.num_nodes
+    # intra-only load: every requester pulls one page from each board mate
+    w = np.zeros((n - 1,))
+    intra_frac = np.zeros((n - 1,))
+    for k in range(n - 1):
+        r = np.arange(n)
+        intra = topo.pair_intra(r, (r + k + 1) % n)
+        w[k] = intra.sum()
+        intra_frac[k] = 1.0 if intra.any() else 0.0
+    live = (np.nonzero(w > 0)[0] + 1).tolist()
+    hier = steering.hierarchical_program(topo, live_distances=live)
+    flat = steering.pruned_program(steering.bidirectional_program(n), live)
+    kw = dict(slot_pages=w, topology=topo, slot_intra_pages=w)
+    lat_hier = pm.predict_round_latency_us(hier, 1 << 18, 8, **kw)
+    lat_flat = pm.predict_round_latency_us(flat, 1 << 18, 8, **kw)
+    assert lat_hier < lat_flat
+    # the hierarchical stats expose why: fewer board hops end to end for
+    # the same coverage (the rack side is identical — both serve the same
+    # board-crossing pairings, just at different epochs)
+    sh = pm.hierarchical_route_stats(hier, topo)
+    sf = pm.hierarchical_route_stats(flat, topo)
+    assert sh["board_hops"] < sf["board_hops"]
+    assert sh["rack_hops"] == sf["rack_hops"]
+
+
+def test_rack_tier_asymmetry_penalizes_inter_board_pages():
+    """Board-crossing pages ride the slow rack links: the same load costs
+    more when it crosses boards than when it stays on-board."""
+    topo = Topology.boards(2, 4)
+    n = topo.num_nodes
+    hier = steering.hierarchical_program(topo)
+    w = np.full((n - 1,), 4.0)
+    all_intra = pm.predict_round_latency_us(
+        hier, 1 << 18, 8, slot_pages=w, topology=topo, slot_intra_pages=w)
+    all_inter = pm.predict_round_latency_us(
+        hier, 1 << 18, 8, slot_pages=w, topology=topo,
+        slot_intra_pages=np.zeros_like(w))
+    assert all_inter > all_intra

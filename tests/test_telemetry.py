@@ -20,24 +20,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from topologies import (TELEM_FIELDS, assert_telem_equal, fake_telem,
+                        make_pool)
+
 from repro.core import bridge, perfmodel, ref, steering
 from repro.core.control_plane import ControlPlane
 from repro.core.memport import FREE, MemPortTable
 from repro.telemetry import (BridgeTelemetry, TelemetryAggregator,
                              counters as tcounters)
 
-
-def make_pool(num_slots, page, seed=0):
-    rng = np.random.default_rng(seed)
-    return jnp.asarray(rng.normal(size=(num_slots, page)).astype(np.float32))
-
-
-def assert_telem_equal(got: BridgeTelemetry, exp: BridgeTelemetry, msg=""):
-    for name in ("slot_served", "loopback_served", "spilled", "pruned",
-                 "traffic", "epoch_cw", "epoch_ccw"):
-        np.testing.assert_array_equal(
-            np.asarray(getattr(got, name)), np.asarray(getattr(exp, name)),
-            err_msg=f"{msg}{name}")
+_fake_telem = fake_telem  # shared fixture (tests/topologies.py)
 
 
 # ---------------------------------------------------------------------------
@@ -126,26 +118,30 @@ def test_telemetry_identical_across_edge_buffer_modes():
 # ---------------------------------------------------------------------------
 
 def test_telemetry_collection_never_retraces_on_program_swap():
+    from repro.core.topology import Topology
     tn, ppn, budget = 4, 8, 4
+    topo = Topology.boards(2, 2)
     pool = make_pool(tn * ppn, 4)
     table = MemPortTable.striped(12, tn, ppn)
     want = jnp.asarray(np.arange(12, dtype=np.int32)[None, :])
     pull = jax.jit(functools.partial(
         bridge.pull_pages, mesh=None, budget=budget, table_nodes=tn,
-        collect_telemetry=True))
+        collect_telemetry=True, topology=topo))
     progs = [steering.bidirectional_program(tn),
              steering.unidirectional_program(tn),
              steering.pruned_program(steering.bidirectional_program(tn), [2]),
-             steering.link_avoiding_program(tn, +1)]
+             steering.link_avoiding_program(tn, +1),
+             steering.hierarchical_program(topo)]
     for prog in progs:
         for ab in (4, 2):
             out, telem = pull(pool, want, table, program=prog,
                               active_budget=jnp.int32(ab))
             exp = ref.expected_transfer_telemetry(
                 want, table, prog, num_nodes=tn, budget=budget,
-                active_budget=ab)
+                active_budget=ab, topology=topo)
             assert_telem_equal(telem, exp, msg=f"ab={ab} ")
-    # swapping programs / budgets / tables with collection on: one trace
+    # swapping programs (flat AND hierarchical) / budgets / tables with
+    # collection on: one trace
     t2 = MemPortTable.striped(12, tn, ppn).program(
         np.array([0]), np.array([2]), np.array([7]))
     pull(pool, want, t2, program=progs[0], active_budget=jnp.int32(3))
@@ -174,8 +170,7 @@ def test_telemetry_deterministic_under_jit_and_scan():
     _, single = bridge.pull_pages(pool, want, table, mesh=None, budget=budget,
                                   table_nodes=tn, program=prog,
                                   collect_telemetry=True)
-    for name in ("slot_served", "loopback_served", "spilled", "pruned",
-                 "traffic", "epoch_cw", "epoch_ccw"):
+    for name in TELEM_FIELDS:
         stacked = np.asarray(getattr(ts, name))
         expect = np.asarray(getattr(single, name))
         for i in range(3):  # every scan iteration bit-identical
@@ -185,36 +180,6 @@ def test_telemetry_deterministic_under_jit_and_scan():
 # ---------------------------------------------------------------------------
 # Aggregator
 # ---------------------------------------------------------------------------
-
-def _fake_telem(n, traffic_rows, spilled=None):
-    """Telemetry with given [rows, n] traffic; distances derived from it."""
-    traffic_rows = np.asarray(traffic_rows, np.int32)
-    rows = traffic_rows.shape[0]
-    slot = np.zeros((rows, n - 1), np.int32)
-    loop = np.zeros((rows,), np.int32)
-    for i in range(rows):
-        for h in range(n):
-            d = (h - i) % n
-            if d == 0:
-                loop[i] += traffic_rows[i, h]
-            else:
-                slot[i, d - 1] += traffic_rows[i, h]
-    bi = steering.bidirectional_program(n)
-    off = np.asarray(bi.offsets)
-    ep = np.asarray(bi.epoch)
-    cw = np.zeros((rows, n - 1), np.int32)
-    ccw = np.zeros((rows, n - 1), np.int32)
-    for k in range(n - 1):
-        tgt = cw if off[k] > 0 else ccw
-        tgt[:, ep[k]] += slot[:, k]
-    return BridgeTelemetry(
-        slot_served=jnp.asarray(slot), loopback_served=jnp.asarray(loop),
-        spilled=jnp.asarray(np.zeros((rows,), np.int32) if spilled is None
-                            else np.asarray(spilled, np.int32)),
-        pruned=jnp.asarray(np.zeros((rows,), np.int32)),
-        traffic=jnp.asarray(traffic_rows),
-        epoch_cw=jnp.asarray(cw), epoch_ccw=jnp.asarray(ccw))
-
 
 def test_aggregator_ewma_and_views():
     n = 4

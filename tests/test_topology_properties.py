@@ -1,0 +1,328 @@
+"""Oracle-driven topology conformance suite (randomized).
+
+Random board + rack fabrics (1-4 boards of 2-8 endpoints, ragged sizes,
+random dead slots / group-masked pairings) must satisfy the hierarchical
+scheduling contract:
+
+* every live (requester, home) pair is served **exactly once** — by the
+  slot of its ring distance, at exactly one epoch;
+* no two slots target one gateway in the same epoch (board-crossing
+  circuits get exclusive epochs), and board-ring links host at most one
+  circuit per direction per epoch;
+* the datapath's ``collect_telemetry`` counters — including the per-tier
+  occupancy — match :func:`repro.core.ref.expected_transfer_telemetry`
+  bit-exactly, and every live request is conserved (served + spilled +
+  pruned).
+
+Real hypothesis when installed, the seeded fallback otherwise (same
+convention as test_bridge_properties.py).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal environments
+    from hypofallback import given, settings, st
+
+from topologies import TELEM_FIELDS, make_pool, random_fabric
+
+from repro.core import bridge, ref, steering
+from repro.core.memport import MemPortTable
+from repro.core.topology import Topology
+
+
+def _random_hier_program(rng, topo):
+    """A hierarchical program with random dead slots / masked pairings."""
+    n = topo.num_nodes
+    full = steering.hierarchical_program(topo)
+    roll = rng.random()
+    if roll < 0.4:
+        return full
+    if roll < 0.7:  # random dead distances
+        keep = [d for d in range(1, n) if rng.random() < 0.7]
+        if not keep:
+            keep = [1]
+        return steering.hierarchical_program(topo, live_distances=keep)
+    # random group-mask: kill random (slot, rank) pairings
+    mask = rng.random((n - 1, n)) < 0.8
+    return steering.masked_ranks_program(full, mask)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_hierarchical_schedule_conformance(seed):
+    """Exactly-once coverage + gateway exclusivity on random fabrics."""
+    rng = np.random.default_rng(seed)
+    topo = random_fabric(rng)
+    n = topo.num_nodes
+    prog = steering.hierarchical_program(topo)
+    prog.validate()
+    steering.validate_hierarchical(prog, topo)
+
+    # Full program: every remote (requester, home) pair is served exactly
+    # once — its distance's slot wires it at exactly one epoch.
+    served = prog.rank_served()
+    assert served.all(), "full hierarchical program must cover every pair"
+    re = np.asarray(prog.rank_epoch)
+    assert (re[served] >= 0).all()
+    # ... and never beyond the static epoch-bin bound (the telemetry
+    # histograms must never clip).
+    from repro.telemetry.counters import num_epoch_bins
+    assert prog.num_epochs() <= num_epoch_bins(n)
+
+    # Gateway exclusivity, asserted directly (not only via the validator):
+    # in any epoch the set of slots carrying board-crossing pairs is <= 1.
+    r = np.arange(n)
+    for e in np.unique(re[re >= 0]):
+        inter_slots = set()
+        for k in range(n - 1):
+            ranks = np.nonzero(served[k] & (re[k] == e))[0]
+            if ranks.size == 0:
+                continue
+            if (~topo.pair_intra(ranks, (ranks + k + 1) % n)).any():
+                inter_slots.add(k)
+        assert len(inter_slots) <= 1, (e, inter_slots)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pruned_hierarchical_conformance(seed):
+    """Random dead slots / masked pairings stay sound and cover exactly
+    what they keep."""
+    rng = np.random.default_rng(seed)
+    topo = random_fabric(rng)
+    prog = _random_hier_program(rng, topo)
+    prog.validate()
+    steering.validate_hierarchical(prog, topo)
+    served = prog.rank_served()
+    live = np.asarray(prog.live)
+    # a dead slot serves nobody; a live slot serves someone
+    assert not served[~live].any()
+    assert served[live].any(axis=1).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    budget=st.integers(1, 6),
+    active_budget=st.integers(1, 6),
+)
+def test_hierarchical_telemetry_matches_oracle(seed, budget, active_budget):
+    """Datapath counters == oracle walk, bit-exactly, on random fabrics,
+    programs, throttles and request lists (dups, FREE holes, unmapped)."""
+    rng = np.random.default_rng(seed)
+    topo = random_fabric(rng)
+    tn, ppn = topo.num_nodes, 8
+    pool = make_pool(tn * ppn, 4, seed)
+    num_logical = int(rng.integers(1, tn * ppn + 1))
+    table = MemPortTable.striped(num_logical, tn, ppn)
+    r = int(rng.integers(1, 16))
+    want = rng.integers(-1, num_logical, size=(1, r)).astype(np.int32)
+    prog = _random_hier_program(rng, topo)
+    got, telem = bridge.pull_pages(
+        pool, jnp.asarray(want), table, mesh=None, budget=budget,
+        active_budget=jnp.int32(active_budget), table_nodes=tn,
+        program=prog, topology=topo, collect_telemetry=True)
+    exp = ref.expected_transfer_telemetry(
+        want, table, prog, num_nodes=tn, budget=budget,
+        active_budget=active_budget, topology=topo)
+    for name in TELEM_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(telem, name)), np.asarray(getattr(exp, name)),
+            err_msg=name)
+    # conservation: every live request is served, spilled or pruned
+    home = np.asarray(table.home)
+    live = int(((want >= 0) & (home[np.clip(want, 0, None)] >= 0)).sum())
+    total = (int(np.asarray(telem.served_total()).sum())
+             + int(np.asarray(telem.spilled).sum())
+             + int(np.asarray(telem.pruned).sum()))
+    assert total == live
+    # the gathered pages match the program-aware pull oracle too
+    served = ref.rate_limit_mask(r, budget, active_budget)
+    masked = jnp.asarray(np.where(served[None, :], want, -1))
+    expp = ref.pull_pages_ref(pool, masked, table, pages_per_node=ppn,
+                              program=prog)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expp))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_tier_hop_bounds(seed):
+    """Realized hop counts respect the fabric: board hops < its board's
+    size, rack hops < the board count, flat fabrics never touch the rack."""
+    rng = np.random.default_rng(seed)
+    topo = random_fabric(rng)
+    n = topo.num_nodes
+    req = rng.integers(0, n, size=(64,))
+    home = rng.integers(0, n, size=(64,))
+    sign = np.where(rng.random(64) < 0.5, 1, -1)
+    bh, rh = topo.pair_hops(req, home, sign)
+    sizes = topo.group_sizes
+    assert (bh >= 0).all() and (rh >= 0).all()
+    # every board's gateway is its local rank 0
+    for gid in range(topo.num_groups):
+        gw = topo.gateway_rank(gid)
+        assert topo.group[gw] == gid and topo.local_rank[gw] == 0
+    assert (rh < max(topo.num_groups, 1)).all()
+    intra = topo.pair_intra(req, home)
+    assert (bh[intra] < sizes[topo.group[req[intra]]]).all()
+    assert (rh[intra] == 0).all()
+    # inter legs: at most half of each board ring per leg
+    legs = sizes[topo.group[req]] // 2 + sizes[topo.group[home]] // 2
+    assert (bh[~intra] <= legs[~intra]).all()
+    # loopback pairs cost nothing
+    bh0, rh0 = topo.pair_hops(req, req, sign)
+    assert (bh0 == 0).all() and (rh0 == 0).all()
+
+
+def test_pruned_program_preserves_hierarchical_group_mask():
+    """Regression: the PR-1 pruning entry point on a hierarchical base must
+    keep the per-rank schedule (re-packing one-circuit-per-direction would
+    put two board-crossing circuits on one gateway epoch)."""
+    topo = Topology.boards(2, 4)
+    base = steering.hierarchical_program(topo)
+    p = steering.pruned_program(base, [1, 2, 4, 6])
+    p.validate()
+    steering.validate_hierarchical(p, topo)   # gateway exclusivity survives
+    assert list(p.live_distances()) == [1, 2, 4, 6]
+    re_base = np.asarray(base.rank_epoch)
+    re_p = np.asarray(p.rank_epoch)
+    for d in (1, 2, 4, 6):                    # surviving masks untouched
+        np.testing.assert_array_equal(re_p[d - 1], re_base[d - 1])
+    # flat bases keep the historic compaction behavior
+    flat = steering.pruned_program(steering.bidirectional_program(8), [2, 5, 7])
+    assert flat.num_epochs() == 2
+
+
+def test_flat_fabric_degenerates_to_bidirectional():
+    """One board: the hierarchical compile IS the flat bidirectional one."""
+    for n in (2, 3, 5, 8):
+        h = steering.hierarchical_program(Topology.flat(n))
+        bi = steering.bidirectional_program(n)
+        np.testing.assert_array_equal(np.asarray(h.offsets),
+                                      np.asarray(bi.offsets))
+        np.testing.assert_array_equal(np.asarray(h.epoch),
+                                      np.asarray(bi.epoch))
+        np.testing.assert_array_equal(np.asarray(h.rank_epoch),
+                                      np.asarray(bi.rank_epoch))
+
+
+def test_control_plane_compiles_hierarchical_programs():
+    """A topology-aware control plane's route_program is a valid two-tier
+    schedule; measured steering prunes by measurement and weighs the
+    direction vote by the measured tier split; the censorship guard holds."""
+    from topologies import fake_telem
+    from repro.core.control_plane import ControlPlane
+    from repro.telemetry import TelemetryAggregator
+
+    topo = Topology.boards(2, 2)
+    n = topo.num_nodes
+    cp = ControlPlane(num_nodes=n, pages_per_node=8, num_logical=32,
+                      topology=topo)
+    cp.allocate(16, policy="striped")
+    prog = cp.route_program()
+    steering.validate_hierarchical(prog, topo)
+    assert list(prog.live_distances()) == [1, 2, 3]
+    # measured: only distance 2 carried traffic -> pruned to it
+    agg = TelemetryAggregator(n)
+    traffic = np.zeros((n, n), np.int32)
+    for i in range(n):
+        traffic[i, (i + 2) % n] = 5
+    agg.update(fake_telem(n, traffic))
+    measured = cp.route_program(telemetry=agg)
+    steering.validate_hierarchical(measured, topo)
+    assert list(measured.live_distances()) == [2]
+    # censored measurement (spills): nothing may be pruned
+    agg2 = TelemetryAggregator(n)
+    agg2.update(fake_telem(n, traffic, spilled=[3, 0, 0, 0]))
+    censored = cp.route_program(telemetry=agg2)
+    assert list(censored.live_distances()) == [1, 2, 3]
+    # a failed ring link still falls back to the flat link-avoiding compile
+    cp.report_link_failure(+1)
+    avoid = cp.route_program()
+    off = np.asarray(avoid.offsets)
+    assert (off[np.asarray(avoid.live)] < 0).all()
+
+
+def test_affinity_migration_prefers_intra_board_homes():
+    """Once the dominant requester is full, cross-board pages keep moving
+    into its board mates (rack traffic becomes board traffic)."""
+    from topologies import fake_telem
+    from repro.core.control_plane import ControlPlane
+    from repro.telemetry import TelemetryAggregator
+
+    topo = Topology.boards(2, 2)   # board 0 = {0, 1}, board 1 = {2, 3}
+    n, ppn = topo.num_nodes, 4
+    cp = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=32,
+                      topology=topo)
+    cp.allocate(ppn, policy="affinity", affinity=0)   # node 0 full
+    hot = cp.allocate(ppn, policy="affinity", affinity=2)
+    agg = TelemetryAggregator(n)
+    traffic = np.zeros((n, n), np.int32)
+    traffic[0, 2] = 12                                 # node 0 hammers node 2
+    agg.update(fake_telem(n, traffic))
+    plan = cp.affinity_migration(agg)
+    assert plan, "hot pages must migrate"
+    # node 0 has no free slots: pages land on its board mate, node 1
+    assert all(s.old_home == 2 and s.new_home == 1 for s in plan)
+    homes = np.asarray(cp.table().home)[hot.page_ids]
+    assert set(homes.tolist()) <= {1}
+    # same-board domination migrates only into the requester itself: node 3
+    # dominating node-2 pages must NOT shuffle them to other board-1 slots
+    cp2 = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=32,
+                       topology=topo)
+    cp2.allocate(ppn, policy="affinity", affinity=3)  # node 3 full
+    cp2.allocate(ppn, policy="affinity", affinity=2)
+    t2 = np.zeros((n, n), np.int32)
+    t2[3, 2] = 12
+    agg2 = TelemetryAggregator(n)
+    agg2.update(fake_telem(n, t2))
+    assert cp2.affinity_migration(agg2) == []
+
+
+def test_allocate_spills_onto_the_affinity_nodes_board():
+    """A full affinity home overflows onto its own board before the rack."""
+    from repro.core.control_plane import ControlPlane
+
+    topo = Topology.boards(2, 2)
+    cp = ControlPlane(num_nodes=4, pages_per_node=4, num_logical=32,
+                      topology=topo)
+    cp.allocate(4, policy="affinity", affinity=3)     # node 3 full
+    spilled = cp.allocate(2, policy="affinity", affinity=3)
+    homes = np.asarray(cp.table().home)[spilled.page_ids]
+    assert set(homes.tolist()) == {2}                 # board mate, not 0/1
+
+
+def test_zero_bridge_store_threads_topology():
+    """create_store on a hierarchical control plane: two-tier program +
+    topology ride in the store and the round trip stays exact."""
+    from repro.core import zero_bridge
+    from repro.core.control_plane import ControlPlane
+
+    topo = Topology.boards(2, 2)
+    tree = {"w": jnp.arange(24, dtype=jnp.float32).reshape(4, 6),
+            "b": jnp.ones((3,), jnp.float32)}
+    cp = ControlPlane(num_nodes=4, pages_per_node=8, num_logical=64,
+                      topology=topo)
+    store = zero_bridge.create_store(tree, mesh=None, page_elems=8, cp=cp)
+    assert store.topology is topo
+    steering.validate_hierarchical(store.program, topo)
+    pulled, telem = zero_bridge.pull_tree(store, mesh=None,
+                                          collect_telemetry=True)
+    import jax
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b), tree, pulled)
+    assert int(np.asarray(telem.served_total()).sum()) == store.packer.num_pages
+
+
+def test_topology_validation_rejects_bad_fabrics():
+    import pytest
+    with pytest.raises(ValueError):
+        Topology.from_sizes([])
+    with pytest.raises(ValueError):
+        Topology.from_sizes([2, 0])
+    with pytest.raises(ValueError):
+        Topology(group=np.array([0, 0]), local_rank=np.array([0, 0]),
+                 group_sizes=np.array([2]))  # duplicate local rank
+    with pytest.raises(ValueError):
+        bridge._resolve_topology(Topology.boards(2, 2), 8)  # wrong size

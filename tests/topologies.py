@@ -1,0 +1,91 @@
+"""Shared fixtures for the bridge test-suite.
+
+One home for the pool / placement-table / telemetry builders that
+test_bridge.py, test_telemetry.py, test_bridge_properties.py and
+test_topology_properties.py previously duplicated — plus the random-fabric
+generator the topology conformance suite draws from.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import steering
+from repro.core.memport import MemPortTable
+from repro.core.topology import Topology
+from repro.telemetry.counters import BridgeTelemetry, num_epoch_bins
+
+#: Every BridgeTelemetry leaf, in dataclass order — keep in sync with
+#: repro.telemetry.counters (assert_telem_equal walks all of them).
+TELEM_FIELDS = ("slot_served", "loopback_served", "spilled", "pruned",
+                "traffic", "epoch_cw", "epoch_ccw", "slot_intra",
+                "tier_hops")
+
+
+def make_pool(num_slots, page, seed=0):
+    """Random float32 page pool [num_slots, page]."""
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(num_slots, page)).astype(np.float32))
+
+
+def striped_table(num_logical, num_nodes, pages_per_node) -> MemPortTable:
+    """Round-robin placement (home = id % nodes) — the default test layout."""
+    return MemPortTable.striped(num_logical, num_nodes, pages_per_node)
+
+
+def assert_telem_equal(got: BridgeTelemetry, exp: BridgeTelemetry, msg=""):
+    """Bit-exact comparison over every counter field."""
+    for name in TELEM_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, name)), np.asarray(getattr(exp, name)),
+            err_msg=f"{msg}{name}")
+
+
+def fake_telem(n, traffic_rows, spilled=None) -> BridgeTelemetry:
+    """Telemetry with the given [rows, n] traffic matrix.
+
+    Slot/epoch/tier histograms are derived from it as a flat bidirectional
+    program on a single-board fabric would have produced them (distance
+    d pages land at epoch min(d, n-d) - 1 on the shortest-way direction;
+    everything is intra-board, board page-hops = pages x hops).
+    """
+    traffic_rows = np.asarray(traffic_rows, np.int32)
+    rows = traffic_rows.shape[0]
+    slot = np.zeros((rows, n - 1), np.int32)
+    loop = np.zeros((rows,), np.int32)
+    for i in range(rows):
+        for h in range(n):
+            d = (h - i) % n
+            if d == 0:
+                loop[i] += traffic_rows[i, h]
+            else:
+                slot[i, d - 1] += traffic_rows[i, h]
+    bi = steering.bidirectional_program(n)
+    off = np.asarray(bi.offsets)
+    ep = np.asarray(bi.epoch)
+    e = num_epoch_bins(n)
+    cw = np.zeros((rows, e), np.int32)
+    ccw = np.zeros((rows, e), np.int32)
+    hops = np.abs(off)
+    tier = np.zeros((rows, 2), np.int32)
+    for k in range(n - 1):
+        tgt = cw if off[k] > 0 else ccw
+        tgt[:, ep[k]] += slot[:, k]
+        tier[:, 0] += slot[:, k] * hops[k]
+    return BridgeTelemetry(
+        slot_served=jnp.asarray(slot), loopback_served=jnp.asarray(loop),
+        spilled=jnp.asarray(np.zeros((rows,), np.int32) if spilled is None
+                            else np.asarray(spilled, np.int32)),
+        pruned=jnp.asarray(np.zeros((rows,), np.int32)),
+        traffic=jnp.asarray(traffic_rows),
+        epoch_cw=jnp.asarray(cw), epoch_ccw=jnp.asarray(ccw),
+        slot_intra=jnp.asarray(slot), tier_hops=jnp.asarray(tier))
+
+
+def random_fabric(rng, min_groups=1, max_groups=4, min_size=2,
+                  max_size=8) -> Topology:
+    """A random (possibly ragged) board + rack fabric for property tests."""
+    num_groups = int(rng.integers(min_groups, max_groups + 1))
+    sizes = [int(rng.integers(min_size, max_size + 1))
+             for _ in range(num_groups)]
+    return Topology.from_sizes(sizes)
