@@ -15,6 +15,11 @@ oracle otherwise), the measured distance loads compile a load-balanced
 program, and its predicted round latency under the *measured* loads is
 recorded against the static bidirectional split's.
 
+The ``pipeline`` section sweeps the pipelined multi-channel round engine
+(``channels``): modeled round latency per depth, real-datapath wall-clock
+per depth on an 8-device ring when one exists, and the control plane's
+telemetry-driven depth pick at a wire-bound and a latency-bound page size.
+
 Emits CSV rows: name,us_per_call,derived — and writes the same data
 machine-readably to ``BENCH_bridge.json`` at the repo root so the perf
 trajectory is tracked across PRs (schema checked by
@@ -55,6 +60,13 @@ SKEW_PAGES = {1: 6, 2: 3, 3: 2}
 # Hierarchical fabrics compared flat-vs-two-tier: the real 8-endpoint ring
 # (2 boards x 4) plus simulated rack-scale 16 and 32 endpoint fabrics.
 HIER_FABRICS = {"8": (2, 4), "16": (4, 4), "32": (4, 8)}
+
+# Pipelined round-engine depth sweep (the channels knob): modeled round
+# latency per depth, wall-clock on the real 8-ring when available, and the
+# control plane's telemetry-driven pick at a wire-bound (256 KiB) and a
+# latency-bound (4 KiB) page size.
+PIPELINE_CHANNELS = (1, 2, 4, 8)
+SMALL_PAGE_BYTES = 4096
 # Intra-board-heavy traffic: pages pulled from each board mate at local
 # ring delta 1/2/3+ (hotspot locality *within* the board).
 INTRA_PAGES = {1: 6, 2: 3, 3: 2}
@@ -85,14 +97,16 @@ def measure_sw_pull_us(reps: int = 50) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def skewed_traffic_scenario() -> tuple[dict, steering.RouteProgram]:
+def skewed_traffic_scenario() -> tuple:
     """Measure a skewed matrix, recompile, compare predicted latencies.
 
-    Returns ``(measured, program)``: the ``measured`` section of
-    BENCH_bridge.json — per-distance measured pages per round, the
-    static-bidirectional vs load-balanced predicted round latency under
-    those loads, and how the telemetry was captured (real 8-device ring or
-    oracle counters) — plus the telemetry-compiled load-balanced program.
+    Returns ``(measured, program, aggregator, control_plane)``: the
+    ``measured`` section of BENCH_bridge.json — per-distance measured pages
+    per round, the static-bidirectional vs load-balanced predicted round
+    latency under those loads, and how the telemetry was captured (real
+    8-device ring or oracle counters) — plus the telemetry-compiled
+    load-balanced program and the aggregator / control plane that compiled
+    it (``pipeline_sweep`` reuses them for the measured channels pick).
     """
     n, ppn = ROUTE_NODES, 16
     cp = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=n * ppn)
@@ -143,7 +157,63 @@ def skewed_traffic_scenario() -> tuple[dict, steering.RouteProgram]:
         "pruned": int(np.asarray(telem.pruned).sum()),
         "static_bidirectional_us": round(lat_bi, 2),
         "load_balanced_us": round(lat_lb, 2),
-    }, lb
+    }, lb, agg, cp
+
+
+def pipeline_sweep(agg: TelemetryAggregator, cp: ControlPlane,
+                   quick: bool = False) -> dict:
+    """Pipeline-depth sweep: the pipelined multi-channel round engine.
+
+    Models one bridge round at every depth in PIPELINE_CHANNELS (worst-case
+    budget loads on the bidirectional schedule — the overlap term hides
+    min(wire, RTT) behind max(wire, RTT) with 1/channels exposed), times the
+    real jitted datapath per depth on an 8-device ring when one exists, and
+    records the control plane's telemetry pick at a wire-bound and a
+    latency-bound page size.  Acceptance (validate_bench.py): every
+    channels > 1 modeled round latency <= the serial engine's.  The
+    wall-clock numbers are informational only: the host-CPU ring emulates
+    ppermute synchronously (nothing can overlap) and pays per-op dispatch
+    for the smaller chunked gathers, so the overlap win exists only where
+    the wire is real (the model's regime).
+    """
+    bi = steering.bidirectional_program(ROUTE_NODES)
+    model = {str(c): round(perfmodel.predict_round_latency_us(
+        bi, ROUTE_PAGE_BYTES, ROUTE_BUDGET, channels=c), 2)
+        for c in PIPELINE_CHANNELS}
+    out: dict = {
+        "source": "model",
+        "model_round_us": model,
+        "selected_channels": {
+            "wire_bound_256KiB": cp.select_channels(
+                ROUTE_BUDGET, ROUTE_PAGE_BYTES, telemetry=agg),
+            "latency_bound_4KiB": cp.select_channels(
+                ROUTE_BUDGET, SMALL_PAGE_BYTES, telemetry=agg),
+        },
+    }
+    n, ppn = ROUTE_NODES, 16
+    if jax.device_count() >= n:
+        out["source"] = f"{n}-device ring"
+        mesh = jax.make_mesh((n,), ("data",))
+        rng = np.random.default_rng(3)
+        pool = jnp.asarray(rng.normal(size=(n * ppn, 64)).astype(np.float32))
+        table = MemPortTable.striped(n * ppn, n, ppn)
+        want = jnp.asarray(
+            rng.integers(0, n * ppn, size=(n, 16)).astype(np.int32))
+        reps = 3 if quick else 30
+        measured = {}
+        with bridge.use_mesh(mesh):
+            for c in PIPELINE_CHANNELS:
+                pull = jax.jit(lambda p, w, t, _c=c: bridge.pull_pages(
+                    p, w, t, mesh=mesh, budget=ROUTE_BUDGET, channels=_c))
+                jax.block_until_ready(pull(pool, want, table))
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    r = pull(pool, want, table)
+                jax.block_until_ready(r)
+                measured[str(c)] = round(
+                    (time.perf_counter() - t0) / reps * 1e6, 1)
+        out["measured_us_per_call"] = measured
+    return out
 
 
 def hierarchical_scenario(num_boards: int, board_size: int) -> dict:
@@ -246,7 +316,7 @@ def rows(quick: bool = False) -> list[str]:
                               "page_bytes": ROUTE_PAGE_BYTES,
                               "budget": ROUTE_BUDGET, "variants": {}}
     # the measured closed loop: skew -> telemetry -> load-balanced program
-    measured, lb_prog = skewed_traffic_scenario()
+    measured, lb_prog, skew_agg, skew_cp = skewed_traffic_scenario()
     variants = dict(route_variants())
     variants["load_balanced"] = lb_prog
     for name, prog in variants.items():
@@ -273,6 +343,14 @@ def rows(quick: bool = False) -> list[str]:
         f"bridge_route_measured,0,source={measured['source']}"
         f" static_bi={measured['static_bidirectional_us']}us"
         f" load_balanced={measured['load_balanced_us']}us")
+    # pipelined multi-channel round engine: depth sweep + control-plane pick
+    pipe = pipeline_sweep(skew_agg, skew_cp, quick=quick)
+    bench["pipeline"] = pipe
+    sweep = " ".join(f"c{c}={pipe['model_round_us'][str(c)]}us"
+                     for c in PIPELINE_CHANNELS)
+    out.append(
+        f"bridge_pipeline_sweep,0,source={pipe['source']} {sweep}"
+        f" picks={pipe['selected_channels']}")
     # flat ring vs board + rack fabric (8 real endpoints, 16/32 simulated)
     bench["hierarchical"] = {}
     for label, (boards, size) in HIER_FABRICS.items():

@@ -202,6 +202,9 @@ class BridgeConfig:
     num_epochs: int = 0               # 0 -> one full ring rotation (N-1 epochs)
     mode: str = "pull"                # pull (paper) | push (beyond-paper)
     edge_buffer: bool = True          # double-buffer transfers across epochs
+    channels: int = 1                 # pipelined round-engine depth (1=serial;
+                                      # >1 overlaps request/data flits across
+                                      # round chunks, bit-exact results)
     mem_axis: str = "data"            # mesh axis hosting the memory pool
     # modelled hardware (perfmodel): paper values and TPU projection
     link_gbps: float = 10.0           # paper prototype: 10G Aurora

@@ -30,9 +30,20 @@ This is the paper's datapath (Fig. 1) mapped onto a TPU pod:
 * *edge buffering* — live slots within a round are independent dataflow
   chains, so the compiler overlaps them exactly like the paper's decoupled
   serdes clock domains pulling from edge buffers.  ``edge_buffer=False``
-  inserts ``optimization_barrier`` between consecutive slots to model a
-  bufferless bridge (a conservative serialization: it ignores the program's
-  epoch pairing, which only affects the analytical cost model);
+  inserts ``optimization_barrier`` between consecutive slots — starting
+  from the epoch-0 loopback access — to model a bufferless bridge (a
+  conservative serialization: it ignores the program's epoch pairing,
+  which only affects the analytical cost model);
+* *pipelined multi-channel rounds* — ``channels > 1`` splits each round's
+  ``budget`` lanes into ``channels`` virtual channels and software-pipelines
+  the scan body: chunk *g+1*'s **request flits** (the ``ppermute`` of slot
+  ids) are issued while chunk *g*'s **data flits** are still in flight, a
+  double-buffered carry of the in-flight ``(pending_req, pending_payload)``
+  state with an epilogue chunk draining the pipeline.  Results and
+  telemetry are bit-exact vs the serial engine for every ``channels`` (the
+  pipeline reorders wire traffic, never what is served); ``channels=1`` *is*
+  the serial engine, and a bufferless bridge (``edge_buffer=False``) has no
+  buffers to hold overlapped flits, so it always runs serial;
 * *lossless, no ack/retx* — ICI collectives are lossless and deterministic,
   so the assumption holds natively;
 * *in-band telemetry* — ``collect_telemetry=True`` additionally returns a
@@ -143,7 +154,10 @@ def _round_pull(pool_local: jax.Array, sub_ids: jax.Array, table: MemPortTable,
     # Epoch 0: loopback fast path (locally mapped region — no circuit hop).
     out = _gather_local(pool_local, jnp.where(dist == 0, slot, FREE))
 
-    prev = None
+    # A bufferless bridge serializes everything the datapath does in a
+    # round, *including* the epoch-0 loopback access: chain it into the
+    # barrier chain so the first circuit slot cannot launch under it.
+    prev = out
     for k, d in enumerate(steering.default_route_schedule(num_nodes)):
         # Runtime steering: slot k carries traffic only if the program wires
         # it *for this rank* (the group mask — a hierarchical program may
@@ -153,7 +167,7 @@ def _round_pull(pool_local: jax.Array, sub_ids: jax.Array, table: MemPortTable,
         serve = ((dist == d) & program.live[k]
                  & (program.rank_epoch[k, my] >= 0))
         req = jnp.where(serve, slot, FREE)                         # [B]
-        if not edge_buffer and prev is not None:
+        if not edge_buffer:
             # A bufferless bridge serializes slots: model it explicitly.
             req, prev = jax.lax.optimization_barrier((req, prev))
         fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
@@ -167,86 +181,307 @@ def _round_pull(pool_local: jax.Array, sub_ids: jax.Array, table: MemPortTable,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Pipelined multi-channel round engine (channels > 1)
+# ---------------------------------------------------------------------------
+#
+# The serial engine completes every epoch of round r before round r+1 issues
+# a single flit — the RTT of the deepest circuit is paid once per round with
+# the wire idle underneath it.  The paper couples serial transceivers to a
+# circuit network precisely so multiple outstanding transactions share the
+# wire; the pipelined engine reproduces that in software: each round's budget
+# splits into ``channels`` chunks, and while chunk g's data flits are still
+# in flight, chunk g+1's request flits are already on the wire.  The carry is
+# the classic double buffer — the in-flight (pending_req, pending_payload)
+# state — and an epilogue chunk drains the pipeline after the scan.
+
+def _pull_wire(pool_local: jax.Array, sub_ids: jax.Array, table: MemPortTable,
+               program: RouteProgram, axis: str, num_nodes: int, my):
+    """Request phase of one chunk: issue every live slot's request flits.
+
+    Returns the in-flight pipeline state (the double-buffered carry): the
+    request flits landed at their homes [S, cb], the serve masks [S, cb]
+    and the epoch-0 loopback pages [cb, *page_shape] (local, no flit).
+    """
+    home, slot = table.translate(sub_ids)
+    dist = steering.ring_distance(home, my, num_nodes)
+    out0 = _gather_local(pool_local, jnp.where(dist == 0, slot, FREE))
+    reqs, serves = [], []
+    for k, d in enumerate(steering.default_route_schedule(num_nodes)):
+        serve = ((dist == d) & program.live[k]
+                 & (program.rank_epoch[k, my] >= 0))
+        req = jnp.where(serve, slot, FREE)
+        fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
+        reqs.append(jax.lax.ppermute(req, axis, perm=fwd))
+        serves.append(serve)
+    return jnp.stack(reqs), jnp.stack(serves), out0
+
+
+def _pull_drain(pool_local: jax.Array, pending, axis: str,
+                num_nodes: int) -> jax.Array:
+    """Data phase of one chunk: serve the in-flight request flits.
+
+    Remote reads against the landed requests, returning data flits, merged
+    over the chunk's loopback pages.  FREE in-flight requests (the pipeline
+    prologue, dead slots) gather zeros and are masked out.
+    """
+    reqs, serves, out = pending
+    for k, d in enumerate(steering.default_route_schedule(num_nodes)):
+        bwd = [(j, (j - d) % num_nodes) for j in range(num_nodes)]
+        payload = _gather_local(pool_local, reqs[k])               # remote read
+        payload = jax.lax.ppermute(payload, axis, perm=bwd)        # data flits
+        mask = serves[k].reshape((-1,) + (1,) * (payload.ndim - 1))
+        out = jnp.where(mask, payload, out)
+    return out
+
+
+def _reassemble(chunks: jax.Array, want_len: int, lanes_per_round: int,
+                active_budget: jax.Array, page_shape, dtype) -> jax.Array:
+    """Re-assemble served round lanes into logical request order.
+
+    ``chunks`` is [rounds * lanes_per_round, *page_shape] in (round, lane)
+    order.  Round ``r`` served ``want[r*active_budget + k]`` in lane ``k``
+    (k < active_budget); lanes beyond the live budget (and the pipelined
+    engine's chunk padding) carried FREE requests and are dropped.
+    """
+    idx = jnp.arange(chunks.shape[0])
+    r = idx // lanes_per_round
+    k = idx % lanes_per_round
+    dest = r * active_budget + k
+    live = (k < active_budget) & (dest < want_len)
+    dest = jnp.where(live, dest, 0)
+    mask = live.reshape((-1,) + (1,) * len(page_shape))
+    upd = jnp.where(mask, chunks, jnp.zeros_like(chunks))
+    out = jnp.zeros((want_len,) + page_shape, dtype)
+    return out.at[dest].add(upd)
+
+
 def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
                 active_budget: jax.Array, program: RouteProgram, *, axis: str,
                 num_nodes: int, budget: int, rounds: int,
-                edge_buffer: bool) -> jax.Array:
-    """Pull ``want`` pages ([rounds*budget], FREE-padded) through the bridge."""
+                edge_buffer: bool, channels: int = 1) -> jax.Array:
+    """Pull ``want`` pages ([rounds*budget], FREE-padded) through the bridge.
+
+    Returns [want.shape[0], *page_shape]; requests the rate limiter never
+    reaches (``rounds == 0``, spilled tails) come back as zeros.
+
+    ``channels > 1`` runs the pipelined multi-channel engine (see the
+    module docstring); 1 is the serial engine.  A bufferless bridge or a
+    1-node ring has nothing to overlap — both always run serial.
+    """
     want = want.reshape(-1)
     page_shape = pool_local.shape[1:]
-
-    def body(ptr, _):
-        # Rate limiter: only the first ``active_budget`` slots of this round
-        # carry live requests; the pointer advances by the same amount, so a
-        # throttled node simply uses more of its (overprovisioned) rounds.
-        sub = jax.lax.dynamic_slice(want, (ptr,), (budget,))
-        lane = jnp.arange(budget)
-        sub = jnp.where(lane < active_budget, sub, FREE)
-        out = _round_pull(pool_local, sub, table, program, axis, num_nodes,
-                          edge_buffer)
-        return ptr + active_budget, (out, sub)
-
     if rounds == 0:
-        return jnp.zeros((0,) + page_shape, pool_local.dtype)
+        # All-dropped, correctly shaped: the docstring's contract even when
+        # a caller hands a non-empty ``want`` to a zero-round transfer.
+        return jnp.zeros((want.shape[0],) + page_shape, pool_local.dtype)
+    # Clamp the (runtime) rate limiter to the lane budget: an overdriven
+    # ``active_budget`` would walk ``ptr`` past the final round's window and
+    # make ``dynamic_slice`` silently re-serve tail requests.
+    active_budget = jnp.clip(active_budget, 0, budget)
+    pipelined = channels > 1 and num_nodes > 1 and edge_buffer
+
+    if not pipelined:
+        def body(ptr, _):
+            # Rate limiter: only the first ``active_budget`` slots of this
+            # round carry live requests; the pointer advances by the same
+            # amount, so a throttled node simply uses more of its
+            # (overprovisioned) rounds.
+            sub = jax.lax.dynamic_slice(want, (ptr,), (budget,))
+            lane = jnp.arange(budget)
+            sub = jnp.where((lane < active_budget)
+                            & (ptr + lane < want.shape[0]), sub, FREE)
+            out = _round_pull(pool_local, sub, table, program, axis,
+                              num_nodes, edge_buffer)
+            return ptr + active_budget, (out, sub)
+
+        ptr0 = _pvary(jnp.int32(0), axis)
+        _, (chunks, _) = jax.lax.scan(body, ptr0, None, length=rounds)
+        return _reassemble(chunks.reshape(rounds * budget, *page_shape),
+                           want.shape[0], budget, active_budget, page_shape,
+                           pool_local.dtype)
+
+    # Pipelined engine: rounds split into ``channels`` chunks of ``cb``
+    # lanes; the scan body issues chunk g+1's request flits, then drains
+    # chunk g's data flits (still in flight from the previous step) — the
+    # double-buffered carry.  Emission is therefore shifted by one chunk:
+    # the first emission is the pipeline prologue (all-FREE, dropped) and an
+    # epilogue drain after the scan yields the final chunk.
+    my = jax.lax.axis_index(axis)
+    cb = -(-budget // channels)
+    lane = jnp.arange(channels * cb)
+    nslots = num_nodes - 1
+
+    def empty_pending():
+        return tuple(_pvary(x, axis) for x in (
+            jnp.full((nslots, cb), FREE, jnp.int32),
+            jnp.zeros((nslots, cb), bool),
+            jnp.zeros((cb,) + page_shape, pool_local.dtype)))
+
+    def body(carry, _):
+        ptr, pending = carry
+        window = jax.lax.dynamic_slice(want, (ptr,), (budget,))
+        if channels * cb > budget:
+            window = jnp.concatenate(
+                [window, jnp.full((channels * cb - budget,), FREE,
+                                  want.dtype)])
+        window = jnp.where((lane < active_budget)
+                           & (ptr + lane < want.shape[0]), window, FREE)
+        outs = []
+        for c in range(channels):
+            inflight = _pull_wire(pool_local, window[c * cb:(c + 1) * cb],
+                                  table, program, axis, num_nodes, my)
+            outs.append(_pull_drain(pool_local, pending, axis, num_nodes))
+            pending = inflight
+        return (ptr + active_budget, pending), jnp.stack(outs)
+
     ptr0 = _pvary(jnp.int32(0), axis)
-    _, (chunks, _) = jax.lax.scan(body, ptr0, None, length=rounds)
-    # Re-assemble in logical request order.  Round ``r`` served
-    # ``want[r*active_budget + k]`` in lane ``k`` (k < active_budget); lanes
-    # beyond the live budget carried FREE requests and yield zeros.
-    flat = chunks.reshape(rounds * budget, *page_shape)
-    r = jnp.arange(rounds * budget) // budget
-    k = jnp.arange(rounds * budget) % budget
-    dest = r * active_budget + k
-    live = (k < active_budget) & (dest < want.shape[0])
-    dest = jnp.where(live, dest, 0)
-    mask = live.reshape((-1,) + (1,) * len(page_shape))
-    upd = jnp.where(mask, flat, jnp.zeros_like(flat))
-    out = jnp.zeros((want.shape[0],) + page_shape, pool_local.dtype)
-    return out.at[dest].add(upd)
+    (_, pending), chunks = jax.lax.scan(body, (ptr0, empty_pending()), None,
+                                        length=rounds)
+    last = _pull_drain(pool_local, pending, axis, num_nodes)   # epilogue
+    flat = chunks.reshape((rounds * channels, cb) + page_shape)
+    flat = jnp.concatenate([flat[1:], last[None]], 0)          # un-shift
+    return _reassemble(flat.reshape((rounds * channels * cb,) + page_shape),
+                       want.shape[0], channels * cb, active_budget,
+                       page_shape, pool_local.dtype)
+
+
+def _push_wire(sub_ids: jax.Array, data: jax.Array, table: MemPortTable,
+               program: RouteProgram, axis: str, num_nodes: int, my):
+    """Request phase of one push chunk: launch slot-id + payload flits.
+
+    Push flits travel together in the request direction; the in-flight
+    carry is (slots landed at home [S, cb], payload landed at home
+    [S, cb, *page], loopback slots [cb], loopback payload [cb, *page]).
+    """
+    home, slot = table.translate(sub_ids)
+    dist = steering.ring_distance(home, my, num_nodes)
+    slots_h, datas_h = [], []
+    for k, d in enumerate(steering.default_route_schedule(num_nodes)):
+        serve = ((dist == d) & program.live[k]
+                 & (program.rank_epoch[k, my] >= 0))
+        req = jnp.where(serve, slot, FREE)
+        fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
+        slots_h.append(jax.lax.ppermute(req, axis, perm=fwd))
+        datas_h.append(jax.lax.ppermute(data, axis, perm=fwd))
+    return (jnp.stack(slots_h), jnp.stack(datas_h),
+            jnp.where(dist == 0, slot, FREE), data)
+
+
+def _push_commit(pool: jax.Array, pending) -> jax.Array:
+    """Commit phase of one push chunk: scatter the landed flits home.
+
+    Loopback first, then slots in order — the serial engine's write order,
+    so the pipelined pool image is identical under the single-writer
+    contract.  FREE slots (pipeline prologue, dead pairings) drop.
+    """
+    slots_h, datas_h, loop_slots, loop_data = pending
+    pool = _scatter_local(pool, loop_slots, loop_data)
+    for k in range(slots_h.shape[0]):
+        pool = _scatter_local(pool, slots_h[k], datas_h[k])
+    return pool
 
 
 def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
                 table: MemPortTable, active_budget: jax.Array,
                 program: RouteProgram, *, axis: str, num_nodes: int,
-                budget: int, rounds: int) -> jax.Array:
+                budget: int, rounds: int, edge_buffer: bool = True,
+                channels: int = 1) -> jax.Array:
     """Write payload pages to their homes (single-writer contract).
 
     Rate-limiter parity with :func:`_pull_local`: each round writes only the
     first ``active_budget`` lanes and the pointer advances by the same
     amount, so requests past ``rounds * active_budget`` spill off the end of
-    the (overprovisioned) round budget and are dropped.
+    the (overprovisioned) round budget and are dropped.  ``edge_buffer`` and
+    ``channels`` carry the same semantics as on the pull path: a bufferless
+    bridge serializes the wire (loopback commit chained under the first
+    slot's flits), and ``channels > 1`` pipelines chunk g+1's request/data
+    flits over chunk g's commits (serial when bufferless or 1-node).
     """
     my = jax.lax.axis_index(axis)
     page_shape = pool_local.shape[1:]
     ids = dest_ids.reshape(-1)
     pay = payload.reshape((-1,) + page_shape)
-
-    def body(carry, _):
-        pool, ptr = carry
-        sub = jax.lax.dynamic_slice(ids, (ptr,), (budget,))
-        data = jax.lax.dynamic_slice(
-            pay, (ptr,) + (0,) * len(page_shape), (budget,) + page_shape)
-        lane = jnp.arange(budget)
-        sub = jnp.where(lane < active_budget, sub, FREE)
-        home, slot = table.translate(sub)
-        dist = steering.ring_distance(home, my, num_nodes)
-        pool = _scatter_local(pool, jnp.where(dist == 0, slot, FREE), data)
-        for k, d in enumerate(steering.default_route_schedule(num_nodes)):
-            fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
-            serve = ((dist == d) & program.live[k]
-                     & (program.rank_epoch[k, my] >= 0))
-            req = jnp.where(serve, slot, FREE)
-            slot_at_home = jax.lax.ppermute(req, axis, perm=fwd)
-            data_at_home = jax.lax.ppermute(data, axis, perm=fwd)
-            pool = _scatter_local(pool, slot_at_home, data_at_home)
-        return (pool, ptr + active_budget), None
-
     if rounds == 0:
         return pool_local
+    active_budget = jnp.clip(active_budget, 0, budget)  # see _pull_local
+    pipelined = channels > 1 and num_nodes > 1 and edge_buffer
+
+    if not pipelined:
+        def body(carry, _):
+            pool, ptr = carry
+            sub = jax.lax.dynamic_slice(ids, (ptr,), (budget,))
+            data = jax.lax.dynamic_slice(
+                pay, (ptr,) + (0,) * len(page_shape), (budget,) + page_shape)
+            lane = jnp.arange(budget)
+            sub = jnp.where((lane < active_budget)
+                            & (ptr + lane < ids.shape[0]), sub, FREE)
+            home, slot = table.translate(sub)
+            dist = steering.ring_distance(home, my, num_nodes)
+            pool = _scatter_local(pool, jnp.where(dist == 0, slot, FREE),
+                                  data)
+            prev = pool
+            for k, d in enumerate(steering.default_route_schedule(num_nodes)):
+                fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
+                serve = ((dist == d) & program.live[k]
+                         & (program.rank_epoch[k, my] >= 0))
+                req = jnp.where(serve, slot, FREE)
+                data_k = data
+                if not edge_buffer:
+                    # Bufferless: slot k's flits leave only after slot k-1's
+                    # (and the epoch-0 loopback commit) — see _round_pull.
+                    req, data_k, prev = jax.lax.optimization_barrier(
+                        (req, data_k, prev))
+                slot_at_home = jax.lax.ppermute(req, axis, perm=fwd)
+                data_at_home = jax.lax.ppermute(data_k, axis, perm=fwd)
+                pool = _scatter_local(pool, slot_at_home, data_at_home)
+                prev = data_at_home
+            return (pool, ptr + active_budget), None
+
+        ptr0 = _pvary(jnp.int32(0), axis)
+        (pool_local, _), _ = jax.lax.scan(body, (pool_local, ptr0), None,
+                                          length=rounds)
+        return pool_local
+
+    # Pipelined engine (mirror of _pull_local): issue chunk g+1's flits,
+    # then commit chunk g's (carried in flight), epilogue commits the last.
+    cb = -(-budget // channels)
+    lane = jnp.arange(channels * cb)
+    nslots = num_nodes - 1
+
+    def empty_pending():
+        return tuple(_pvary(x, axis) for x in (
+            jnp.full((nslots, cb), FREE, jnp.int32),
+            jnp.zeros((nslots, cb) + page_shape, pool_local.dtype),
+            jnp.full((cb,), FREE, jnp.int32),
+            jnp.zeros((cb,) + page_shape, pool_local.dtype)))
+
+    def body(carry, _):
+        pool, ptr, pending = carry
+        window = jax.lax.dynamic_slice(ids, (ptr,), (budget,))
+        dwin = jax.lax.dynamic_slice(
+            pay, (ptr,) + (0,) * len(page_shape), (budget,) + page_shape)
+        if channels * cb > budget:
+            window = jnp.concatenate(
+                [window, jnp.full((channels * cb - budget,), FREE,
+                                  ids.dtype)])
+            dwin = jnp.concatenate(
+                [dwin, jnp.zeros((channels * cb - budget,) + page_shape,
+                                 pay.dtype)])
+        window = jnp.where((lane < active_budget)
+                           & (ptr + lane < ids.shape[0]), window, FREE)
+        for c in range(channels):
+            inflight = _push_wire(window[c * cb:(c + 1) * cb],
+                                  dwin[c * cb:(c + 1) * cb], table, program,
+                                  axis, num_nodes, my)
+            pool = _push_commit(pool, pending)
+            pending = inflight
+        return (pool, ptr + active_budget, pending), None
+
     ptr0 = _pvary(jnp.int32(0), axis)
-    (pool_local, _), _ = jax.lax.scan(body, (pool_local, ptr0), None,
-                                      length=rounds)
-    return pool_local
+    (pool_local, _, pending), _ = jax.lax.scan(
+        body, (pool_local, ptr0, empty_pending()), None, length=rounds)
+    return _push_commit(pool_local, pending)                   # epilogue
 
 
 # ---------------------------------------------------------------------------
@@ -337,10 +572,16 @@ def _loopback_mask(flat: jax.Array, ids: jax.Array, table: MemPortTable,
     return jnp.where(served, flat, FREE)
 
 
+def _resolve_channels(channels: int) -> int:
+    if channels < 1:
+        raise ValueError(f"channels must be >= 1, got {channels}")
+    return int(channels)
+
+
 def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
                *, mesh: Optional[Mesh], mem_axis: str = "data",
                budget: int = 8, edge_buffer: bool = True,
-               overprovision: int = 1,
+               channels: int = 1, overprovision: int = 1,
                active_budget: Optional[jax.Array] = None,
                program: Optional[RouteProgram] = None,
                table_nodes: int = 0, collect_telemetry: bool = False,
@@ -356,6 +597,14 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
       program: runtime circuit schedule (default: full bidirectional
         coverage).  A **runtime input**: swapping unidirectional /
         bidirectional / pruned programs on a jitted caller never retraces.
+      channels: pipeline depth of the round engine (static, like
+        ``budget``).  1 = the serial engine; > 1 splits each round's budget
+        into ``channels`` virtual channels and overlaps chunk g+1's request
+        flits with chunk g's data flits (results and telemetry stay
+        bit-exact — the pipeline reorders wire traffic, never what is
+        served).  Ignored on the loopback path and under
+        ``edge_buffer=False`` (a bufferless bridge cannot hold overlapped
+        flits).
       table_nodes: logical node count of the table (0 = mesh size).  On a
         1-device mesh the pool may still model several logical memory nodes
         (loopback circuit); their slots flatten node-major.
@@ -375,6 +624,7 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
       ``(pages, telemetry)`` when ``collect_telemetry`` is set.
     """
     n = _mem_axis_size(mesh, mem_axis)
+    channels = _resolve_channels(channels)
     r = want.shape[-1]
     rounds = steering.num_rounds(r, budget, overprovision)
     pad = rounds * budget - r
@@ -417,7 +667,7 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
     out_spec = P(mem_axis, *([None] * pool_pages.ndim))
     body = functools.partial(
         _pull_local, axis=mem_axis, num_nodes=n, budget=budget,
-        rounds=rounds, edge_buffer=edge_buffer)
+        rounds=rounds, edge_buffer=edge_buffer, channels=channels)
     ab_vec = jnp.clip(jnp.broadcast_to(active_budget, (n,)), 0, budget)
 
     def mapped(pool, want_l, table_l, ab, prog, tt):
@@ -446,6 +696,7 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
 def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
                table: MemPortTable, *, mesh: Optional[Mesh],
                mem_axis: str = "data", budget: int = 8,
+               edge_buffer: bool = True, channels: int = 1,
                overprovision: int = 1,
                active_budget: Optional[jax.Array] = None,
                program: Optional[RouteProgram] = None,
@@ -457,6 +708,13 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
       pool_pages: as in :func:`pull_pages` (returned updated).
       dest: [num_nodes, R] logical page ids each node writes.
       payload: [num_nodes, R, *page_shape].
+      edge_buffer: as in :func:`pull_pages` — ``False`` models a bufferless
+        bridge by serializing each round's wire activity (loopback commit,
+        then slot after slot) with ``optimization_barrier``.
+      channels: pipeline depth of the round engine, same semantics as in
+        :func:`pull_pages` (chunk g+1's request/data flits overlap chunk
+        g's commits; the pool image stays identical under the
+        single-writer contract).
       active_budget: runtime rate limiter, same spill semantics as
         :func:`pull_pages`: each round writes only the first
         ``active_budget`` lanes, writes past ``rounds * active_budget``
@@ -467,6 +725,7 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
         (:class:`~repro.telemetry.counters.BridgeTelemetry`).
     """
     n = _mem_axis_size(mesh, mem_axis)
+    channels = _resolve_channels(channels)
     r = dest.shape[-1]
     rounds = steering.num_rounds(r, budget, overprovision)
     pad = rounds * budget - r
@@ -505,7 +764,8 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
 
     pages_spec = P(mem_axis, *([None] * (pool_pages.ndim - 1)))
     body = functools.partial(_push_local, axis=mem_axis, num_nodes=n,
-                             budget=budget, rounds=rounds)
+                             budget=budget, rounds=rounds,
+                             edge_buffer=edge_buffer, channels=channels)
     ab_vec = jnp.clip(jnp.broadcast_to(active_budget, (n,)), 0, budget)
 
     def mapped(pool, dest_l, pay_l, table_l, ab, prog, tt):

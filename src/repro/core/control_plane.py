@@ -11,6 +11,9 @@ tools":
   survivors and a migration plan is emitted (executed by ``repro.ft``),
 * straggler mitigation: step-time telemetry drives per-node rate limits
   (the bridge's ``active_budget``),
+* pipeline depth: :meth:`ControlPlane.select_channels` picks the bridge's
+  multi-channel round overlap (``channels``) from telemetry-measured wire
+  occupancy — serial until the wire is demonstrably busy,
 * circuit scheduling: :meth:`ControlPlane.route_program` compiles the
   bridge's runtime :class:`~repro.core.steering.RouteProgram` from the live
   placement table — bidirectional by default, pruned to the ring distances
@@ -378,6 +381,78 @@ class ControlPlane:
             return steering.pruned_program(base,
                                            (np.nonzero(w > 0)[0] + 1).tolist())
         return steering.pruned_program(base, self.live_distances(requesters))
+
+    def select_channels(self, budget: int, page_bytes: int, telemetry=None,
+                        max_channels: int = 8, program=None) -> int:
+        """Pick the bridge's pipeline depth from measured wire occupancy.
+
+        The pipelined round engine (``pull_pages``/``push_pages``
+        ``channels=``) overlaps chunk g+1's request flits with chunk g's
+        data flits, hiding min(wire, RTT) behind max(wire, RTT) with
+        1/channels of the hidden term left exposed as pipeline fill/drain
+        (``perfmodel._overlap_round_us``).  Doubling the depth halves that
+        exposure, so the smallest power-of-two depth leaving under ~10 % of
+        the round exposed is chosen, capped at ``max_channels`` and the
+        lane ``budget`` (a chunk needs at least one lane).
+
+        ``telemetry`` is a :class:`~repro.telemetry.TelemetryAggregator`
+        (or one step's raw :class:`~repro.telemetry.counters.BridgeTelemetry`);
+        the measured per-direction wire pages give the round's wire time and
+        the deepest measurably-live distance its RTT.  Pass the active
+        :class:`~repro.core.steering.RouteProgram` as ``program`` to price
+        RTT from the hops each circuit *actually drives*: a unidirectional,
+        pruned or load-balanced schedule may route a distance the long way
+        round, and the shortest-way fallback would underestimate its RTT —
+        keeping the engine serial in exactly the latency-bound regime where
+        overlap wins.  With no measurement — or no circuit traffic observed
+        — the serial engine (1) is kept: overlap is pure win only once the
+        wire is demonstrably busy, and an idle bridge should not pay the
+        deeper engine's compiled datapath.
+        """
+        from repro.core import perfmodel
+        hw = perfmodel.TPU_HW
+        if telemetry is None or budget < 2:
+            return 1
+        if hasattr(telemetry, "link_pages"):          # TelemetryAggregator
+            lp = telemetry.link_pages()
+            cw, ccw = float(lp["cw"]), float(lp["ccw"])
+            dist = np.asarray(telemetry.distance_pages(), float)
+            served = np.asarray(telemetry.served, float)
+        else:                                         # raw BridgeTelemetry
+            cw = float(np.asarray(telemetry.epoch_cw).sum())
+            ccw = float(np.asarray(telemetry.epoch_ccw).sum())
+            s = np.asarray(telemetry.slot_served)
+            dist = s.reshape((-1, s.shape[-1])).sum(0).astype(float)
+            served = np.asarray(telemetry.served_total(), float).reshape(-1)
+        busy = max(cw, ccw)
+        if busy <= 0 or not (dist > 0).any():
+            return 1
+        n = self.num_nodes
+        live_d = np.nonzero(dist > 0)[0] + 1
+        if program is not None:
+            # The schedule's real per-slot hop counts (long-way routes pay
+            # their full depth), restricted to measurably-loaded live slots.
+            hops = np.abs(np.asarray(program.offsets))
+            lv = np.asarray(program.live)
+            loaded = [d - 1 for d in live_d if lv[d - 1]]
+            deepest = int(hops[loaded].max()) if loaded else 0
+        else:
+            deepest = max(min(int(d), n - int(d)) for d in live_d)
+        if deepest == 0:
+            return 1
+        rtt_us = 2.0 * deepest * hw.ici_hop_latency_us
+        # Per-round wire time on the busier direction: the measurement spans
+        # however many rounds the busiest requester needed.
+        rounds = max(1.0, float(np.ceil(served.max() / max(budget, 1))))
+        wire_us = busy / rounds * page_bytes / (hw.ici_link_gbps * 1e9) * 1e6
+        hidden, exposed = min(wire_us, rtt_us), max(wire_us, rtt_us)
+        if hidden <= 0:
+            return 1
+        depth = 1
+        while (depth < min(max_channels, budget)
+               and hidden / depth > 0.1 * exposed):
+            depth *= 2
+        return min(depth, budget, max_channels)
 
     def affinity_migration(self, telemetry, min_share: float = 0.5,
                            limit: Optional[int] = None

@@ -177,13 +177,16 @@ def _tail_partial(q, tail_k, tail_v, lengths, page_tokens):
 def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
            k_new: jax.Array, v_new: jax.Array, *, page_tokens: int,
            max_pages: int, mesh: Optional[Mesh], mem_axis: str = "data",
-           budget: int = 8, program: Optional[RouteProgram] = None,
+           budget: int = 8, edge_buffer: bool = True, channels: int = 1,
+           program: Optional[RouteProgram] = None,
            collect_telemetry: bool = False, topology=None):
     """Append one token's (k, v) [B, kv, hd] for one layer.
 
     Tokens land in the local tail buffer; when a sequence's tail page fills,
     that page is flushed through the bridge to its pooled home (one masked
     ``push_pages`` — sequences not at a boundary contribute FREE slots).
+    ``edge_buffer`` / ``channels`` thread to the bridge write path
+    (bufferless serialization / the pipelined multi-channel round engine).
     With ``collect_telemetry`` the write-path counters of both pushes (k and
     v pages both cross the wire) come back summed: ``(layer, telemetry)``.
     """
@@ -209,12 +212,14 @@ def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
     dest_n = shape_for(jnp.where(dest >= 0, dest, FREE).astype(jnp.int32))
     k_pool = bridge.push_pages(layer.k_pool, dest_n, shape_for(tail_k),
                                table, mesh=mesh, mem_axis=mem_axis,
-                               budget=budget, program=program,
+                               budget=budget, edge_buffer=edge_buffer,
+                               channels=channels, program=program,
                                collect_telemetry=collect_telemetry,
                                topology=topology)
     v_pool = bridge.push_pages(layer.v_pool, dest_n, shape_for(tail_v),
                                table, mesh=mesh, mem_axis=mem_axis,
-                               budget=budget, program=program,
+                               budget=budget, edge_buffer=edge_buffer,
+                               channels=channels, program=program,
                                collect_telemetry=collect_telemetry,
                                topology=topology)
     telem = None
@@ -248,6 +253,7 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
                           page_tokens: int, max_pages: int,
                           mesh: Optional[Mesh], mem_axis: str = "data",
                           budget: int = 8, edge_buffer: bool = True,
+                          channels: int = 1,
                           program: Optional[RouteProgram] = None,
                           collect_telemetry: bool = False, topology=None):
     """Paper-faithful: pull pages through the bridge, attend locally.
@@ -255,8 +261,9 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
     q: [B, H, hd] -> out [B, H, hd].  Pages stream through an online-softmax
     accumulator in rounds of ``budget`` pages (cut-through consumption).
     ``program`` is the runtime circuit schedule threaded down to
-    :func:`repro.core.bridge.pull_pages`.  With ``collect_telemetry`` the
-    summed counters of the k and v pulls come back too: ``(out, telemetry)``.
+    :func:`repro.core.bridge.pull_pages`; ``channels`` its pipelined
+    multi-channel round overlap.  With ``collect_telemetry`` the summed
+    counters of the k and v pulls come back too: ``(out, telemetry)``.
     """
     b, h, hd = q.shape
     kv = layer.k_pool.shape[-2]
@@ -275,12 +282,14 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
 
     k_pages = bridge.pull_pages(layer.k_pool, want, table, mesh=mesh,
                                 mem_axis=mem_axis, budget=budget,
-                                edge_buffer=edge_buffer, program=program,
+                                edge_buffer=edge_buffer, channels=channels,
+                                program=program,
                                 collect_telemetry=collect_telemetry,
                                 topology=topology)
     v_pages = bridge.pull_pages(layer.v_pool, want, table, mesh=mesh,
                                 mem_axis=mem_axis, budget=budget,
-                                edge_buffer=edge_buffer, program=program,
+                                edge_buffer=edge_buffer, channels=channels,
+                                program=program,
                                 collect_telemetry=collect_telemetry,
                                 topology=topology)
     telem = None

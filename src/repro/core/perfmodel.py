@@ -246,10 +246,30 @@ def _slot_loads(program, budget: int, slot_pages):
     return np.where(live, pages, 0.0)
 
 
+def _overlap_round_us(wire_us: float, rtt_us: float, channels: int) -> float:
+    """The pipelined round engine's overlap term.
+
+    The serial engine (``channels == 1``) exposes the full wire time *plus*
+    the deepest circuit's RTT: the wire idles while the round's last data
+    flits fly home, and the RTT idles while the wire drains.  Splitting the
+    round into ``channels`` chunks overlaps chunk g+1's request flits with
+    chunk g's data flits, so the smaller of (wire, RTT) hides behind the
+    larger — except the pipeline's fill and drain, which expose 1/channels
+    of the hidden term:
+
+        t(C) = max(wire, rtt) + min(wire, rtt) / C
+
+    ``C=1`` degenerates to ``wire + rtt`` exactly (the classic serial
+    model); ``C -> inf`` approaches the fully-overlapped ``max(wire, rtt)``.
+    """
+    return max(wire_us, rtt_us) + min(wire_us, rtt_us) / max(channels, 1)
+
+
 def predict_round_latency_us(program, page_bytes: int, budget: int,
                              hw: TpuHW = TPU_HW, edge_buffer: bool = True,
                              slot_pages=None, topology=None,
-                             slot_intra_pages=None) -> float:
+                             slot_intra_pages=None,
+                             channels: int = 1) -> float:
     """Predicted latency of one bridge round under a route program.
 
     Each live slot is one circuit: RTT = 2 * hops * hop latency, payload =
@@ -257,6 +277,14 @@ def predict_round_latency_us(program, page_bytes: int, budget: int,
     circuits end to end; edge-buffered bridges overlap them, bounded by the
     busier direction's wire occupancy (circuits of one direction share that
     direction's links) plus the deepest circuit's RTT.
+
+    ``channels > 1`` prices the pipelined multi-channel round engine
+    (:func:`repro.core.bridge.pull_pages` ``channels=``): the round's RTT
+    exposure shrinks by the :func:`_overlap_round_us` overlap term, since
+    chunk g+1's request flits fly while chunk g's data flits are still in
+    the air.  ``channels=1`` degenerates bit-for-bit to the classic serial
+    model, and a bufferless bridge never overlaps (the engine runs serial
+    there), so ``edge_buffer=False`` ignores ``channels``.
 
     ``slot_pages`` switches from the worst-case assumption (every live slot
     moves a full ``budget`` of pages) to *measured* per-slot loads — e.g.
@@ -296,7 +324,10 @@ def predict_round_latency_us(program, page_bytes: int, budget: int,
             return float((rtt_us[live] + wire_us[live]).sum())
         cw_us = float(wire_us[live & (off > 0)].sum())
         ccw_us = float(wire_us[live & (off < 0)].sum())
-        return float(max(cw_us, ccw_us) + rtt_us[live].max())
+        if channels <= 1:
+            return float(max(cw_us, ccw_us) + rtt_us[live].max())
+        return float(_overlap_round_us(max(cw_us, ccw_us),
+                                       float(rtt_us[live].max()), channels))
 
     n = program.num_nodes
     served = program.rank_served()
@@ -340,8 +371,13 @@ def predict_round_latency_us(program, page_bytes: int, budget: int,
                       + rack_wire[live]).sum())
     cw_us = float(board_wire[live & (off > 0)].sum())
     ccw_us = float(board_wire[live & (off < 0)].sum())
-    return float(max(cw_us, ccw_us) + rack_wire[live].sum()
-                 + rtt_us[live].max())
+    if channels <= 1:
+        return float(max(cw_us, ccw_us) + rack_wire[live].sum()
+                     + rtt_us[live].max())
+    # Both tiers' wire occupancy pipelines against the deepest RTT alike.
+    return float(_overlap_round_us(
+        max(cw_us, ccw_us) + float(rack_wire[live].sum()),
+        float(rtt_us[live].max()), channels))
 
 
 def tpu_stream_penalty(kernel: str, page_bytes: int = 1 << 18,

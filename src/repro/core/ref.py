@@ -188,3 +188,116 @@ def push_pages_ref(pool_pages: jnp.ndarray, dest: jnp.ndarray,
     safe = jnp.where(flat >= 0, flat, pool_pages.shape[0])
     pay = payload.reshape((-1,) + payload.shape[2:]).astype(pool_pages.dtype)
     return pool_pages.at[safe].set(pay, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Pipelined multi-channel round engine oracles
+# ---------------------------------------------------------------------------
+
+def pipeline_schedule(num_requests: int, budget: int, channels: int,
+                      active_budget=None,
+                      overprovision: int = 1) -> list[np.ndarray]:
+    """The multi-channel engine's chunk schedule as logical request indices.
+
+    Walks exactly what ``bridge._pull_local`` / ``_push_local`` execute with
+    ``channels`` virtual channels — round windows of ``budget`` lanes
+    starting at ``round * active_budget``, split into chunks of
+    ``ceil(budget / channels)`` lanes, lanes past the (clamped) live budget
+    or the request array masked off — in *drain order* (the order chunk
+    outputs retire from the pipeline, one chunk behind their issue).  The
+    conformance properties the pipelined datapath must satisfy fall out of
+    this schedule alone:
+
+    * concatenated, it is a permutation-free, duplicate-free enumeration of
+      the rate limiter's served window (``rate_limit_mask``);
+    * it is **independent of results**: any ``channels`` serves the same
+      indices, so the pipelined engine is bit-exact vs the serial one.
+    """
+    from repro.core import steering
+    rounds = steering.num_rounds(num_requests, budget, overprovision)
+    padded_len = rounds * budget
+    ab = int(np.clip(np.asarray(
+        budget if active_budget is None else active_budget
+    ).reshape(-1)[0], 0, budget))
+    cb = -(-budget // max(channels, 1))
+    chunks: list[np.ndarray] = []
+    for r in range(rounds):
+        base = r * ab
+        for c in range(max(channels, 1)):
+            lanes = c * cb + np.arange(cb)
+            idx = base + lanes
+            chunks.append(idx[(lanes < ab) & (idx < padded_len)])
+    return chunks
+
+
+def pull_pages_pipelined_ref(pool_pages: jnp.ndarray, want: jnp.ndarray,
+                             table: MemPortTable, pages_per_node: int,
+                             program: Optional[RouteProgram] = None, *,
+                             budget: int, channels: int, active_budget=None,
+                             overprovision: int = 1) -> jnp.ndarray:
+    """Oracle for the pipelined pull engine (``channels`` virtual channels).
+
+    Simulates the engine's chunk schedule independently of the datapath —
+    issue one chunk ahead, drain one chunk behind, epilogue drain — and
+    serves each scheduled index through the same translate/steer rules as
+    :func:`pull_pages_ref`.  For every ``channels`` (including 1) the
+    result must equal the serial oracle under the rate-limiter mask: the
+    pipeline reorders wire traffic, never what is served.
+    """
+    want_np = np.asarray(want)
+    rows, r = want_np.reshape((-1, want_np.shape[-1])).shape
+    want2 = want_np.reshape((rows, r))
+    flat = np.asarray(flat_index(table, jnp.asarray(want2.reshape(-1)),
+                                 pages_per_node)).reshape(rows, r)
+    smask = np.asarray(served_mask(table, jnp.asarray(want2), program))
+    pool = np.asarray(pool_pages)
+    out = np.zeros((rows, r) + pool.shape[1:], pool.dtype)
+    ab = np.broadcast_to(np.asarray(
+        budget if active_budget is None else active_budget,
+        np.int64).reshape(-1), (rows,))
+    for i in range(rows):
+        in_flight: Optional[np.ndarray] = None    # the double buffer
+        for chunk in pipeline_schedule(r, budget, channels, ab[i],
+                                       overprovision) + [None]:
+            drain, in_flight = in_flight, chunk   # issue ahead, drain behind
+            if drain is None:
+                continue                          # pipeline prologue
+            for dest in drain:
+                if dest < r and smask[i, dest] and flat[i, dest] >= 0:
+                    out[i, dest] = pool[flat[i, dest]]
+    return jnp.asarray(out.reshape(want_np.shape + pool.shape[1:]))
+
+
+def push_pages_pipelined_ref(pool_pages: jnp.ndarray, dest: jnp.ndarray,
+                             payload: jnp.ndarray, table: MemPortTable,
+                             pages_per_node: int,
+                             program: Optional[RouteProgram] = None, *,
+                             budget: int, channels: int, active_budget=None,
+                             overprovision: int = 1) -> jnp.ndarray:
+    """Oracle for the pipelined push engine: commits retire in chunk order.
+
+    Must equal :func:`push_pages_ref` of the rate-limit-masked destination
+    list for every ``channels`` (single-writer pages).
+    """
+    dest_np = np.asarray(dest)
+    rows, r = dest_np.reshape((-1, dest_np.shape[-1])).shape
+    dest2 = dest_np.reshape((rows, r))
+    flat = np.asarray(flat_index(table, jnp.asarray(dest2.reshape(-1)),
+                                 pages_per_node)).reshape(rows, r)
+    smask = np.asarray(served_mask(table, jnp.asarray(dest2), program))
+    pay = np.asarray(payload).reshape((rows, r) + np.asarray(payload).shape[2:])
+    pool = np.array(pool_pages)                    # mutable copy
+    ab = np.broadcast_to(np.asarray(
+        budget if active_budget is None else active_budget,
+        np.int64).reshape(-1), (rows,))
+    for i in range(rows):
+        in_flight: Optional[np.ndarray] = None
+        for chunk in pipeline_schedule(r, budget, channels, ab[i],
+                                       overprovision) + [None]:
+            commit, in_flight = in_flight, chunk
+            if commit is None:
+                continue
+            for d in commit:
+                if d < r and smask[i, d] and flat[i, d] >= 0:
+                    pool[flat[i, d]] = pay[i, d].astype(pool.dtype)
+    return jnp.asarray(pool)

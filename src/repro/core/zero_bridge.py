@@ -92,17 +92,20 @@ class BridgeStore:
     table_nodes: int = 1        # logical memory nodes (== mesh size if > 1)
     program: Optional[RouteProgram] = None  # circuit schedule (None = full)
     topology: Optional[Topology] = None     # board + rack fabric (None = flat)
+    channels: int = 1           # pipelined round engine depth (1 = serial)
 
 
 def create_store(tree: Any, *, mesh: Optional[Mesh], mem_axis: str = "data",
                  page_elems: int = 16_384, budget: int = 8,
-                 cp: Optional[ControlPlane] = None,
+                 channels: int = 1, cp: Optional[ControlPlane] = None,
                  policy: str = "striped", dtype=jnp.float32) -> BridgeStore:
     """Allocate a pooled region for ``tree`` and write its initial image.
 
     The control plane's topology rides along: on a board + rack fabric the
     store's circuit schedule comes out hierarchical and its telemetry
-    carries per-tier occupancy.
+    carries per-tier occupancy.  ``channels`` is the store's pipelined
+    round-engine depth (a static knob, e.g. from
+    :meth:`~repro.core.control_plane.ControlPlane.select_channels`).
     """
     packer = TreePacker.plan(tree, page_elems)
     n = bridge._mem_axis_size(mesh, mem_axis)
@@ -120,7 +123,7 @@ def create_store(tree: Any, *, mesh: Optional[Mesh], mem_axis: str = "data",
     topo = None if cp.topology.is_flat else cp.topology
     store = BridgeStore(packer, table, pool, mem_axis, budget,
                         table_nodes=cp.num_nodes, program=cp.route_program(),
-                        topology=topo)
+                        topology=topo, channels=channels)
     return push_tree(store, tree, mesh=mesh)
 
 
@@ -145,7 +148,7 @@ def pull_tree(store: BridgeStore, *, mesh: Optional[Mesh],
         np.arange(store.packer.num_pages), n))
     got = bridge.pull_pages(store.pool, want, store.table, mesh=mesh,
                             mem_axis=store.mem_axis, budget=store.budget,
-                            program=store.program,
+                            channels=store.channels, program=store.program,
                             table_nodes=store.table_nodes,
                             collect_telemetry=collect_telemetry,
                             topology=store.topology)
@@ -178,7 +181,8 @@ def push_tree(store: BridgeStore, tree: Any, *, mesh: Optional[Mesh],
     payload = pages.reshape(n, per, store.packer.page_elems)
     pool = bridge.push_pages(store.pool, jnp.asarray(dest), payload,
                              store.table, mesh=mesh, mem_axis=store.mem_axis,
-                             budget=store.budget, program=store.program,
+                             budget=store.budget, channels=store.channels,
+                             program=store.program,
                              table_nodes=store.table_nodes,
                              collect_telemetry=collect_telemetry,
                              topology=store.topology)

@@ -30,12 +30,16 @@ def main() -> None:
     ap.add_argument("--telemetry", action="store_true",
                     help="collect in-band bridge counters (bridge_* "
                          "placements) and print the aggregate")
+    ap.add_argument("--channels", type=int, default=1,
+                    help="pipelined bridge round-engine depth (1=serial)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
            else configs.get_config(args.arch))
     shape = ShapeConfig("cli", args.max_len, args.batch, "decode")
-    run = RunConfig(model=cfg, shape=shape, kv_placement=args.kv)
+    from repro.config import BridgeConfig
+    run = RunConfig(model=cfg, shape=shape, kv_placement=args.kv,
+                    bridge=BridgeConfig(channels=args.channels))
 
     from repro.models import transformer
     params = transformer.init_params(cfg, jax.random.key(0))
@@ -65,12 +69,22 @@ def main() -> None:
           f"({dt/args.steps*1e3:.1f} ms/step)")
     print("sample:", np.stack(emitted, 1)[0][:16])
     if collect:
+        from repro.core.control_plane import ControlPlane
         from repro.telemetry import TelemetryAggregator
         telem = serve_step_mod.collect_state_telemetry(state)
         if telem is not None:
             agg = TelemetryAggregator(telem.num_nodes)
             agg.update(telem)
             print(agg.describe())
+            # The closed loop's pipeline-depth pick from measured occupancy
+            # (what --channels should be next run).
+            cp = ControlPlane(telem.num_nodes, 1, 1)
+            page_bytes = (args.page_tokens * cfg.num_kv_heads * cfg.head_dim
+                          * jnp.dtype(cfg.dtype).itemsize)
+            pick = cp.select_channels(run.bridge.epoch_budget, page_bytes,
+                                      telemetry=agg)
+            print(f"control plane channels pick: {pick} "
+                  f"(running with {args.channels})")
 
 
 if __name__ == "__main__":

@@ -79,7 +79,8 @@ class BridgeCacheOps:
     def __init__(self, *, mode: str, max_len: int, page_tokens: int,
                  mesh: Optional[Mesh], mem_axis: str = "data",
                  budget: int = 8, edge_buffer: bool = True,
-                 collect_telemetry: bool = False, dtype=jnp.bfloat16):
+                 channels: int = 1, collect_telemetry: bool = False,
+                 dtype=jnp.bfloat16):
         assert mode in ("pull", "push"), mode
         self.mode = mode
         self.max_len = max_len
@@ -89,6 +90,7 @@ class BridgeCacheOps:
         self.mem_axis = mem_axis
         self.budget = budget
         self.edge_buffer = edge_buffer
+        self.channels = channels
         self.collect_telemetry = collect_telemetry
         self.dtype = dtype
 
@@ -137,6 +139,7 @@ class BridgeCacheOps:
             st["paged"], table, lengths, k_new, v_new,
             page_tokens=self.page_tokens, max_pages=self.max_pages,
             mesh=self.mesh, mem_axis=self.mem_axis, budget=self.budget,
+            edge_buffer=self.edge_buffer, channels=self.channels,
             collect_telemetry=collect)
         telem = None
         if collect:
@@ -147,7 +150,8 @@ class BridgeCacheOps:
                 q, layer, table, visible, page_tokens=self.page_tokens,
                 max_pages=self.max_pages, mesh=self.mesh,
                 mem_axis=self.mem_axis, budget=self.budget,
-                edge_buffer=self.edge_buffer, collect_telemetry=collect)
+                edge_buffer=self.edge_buffer, channels=self.channels,
+                collect_telemetry=collect)
             if collect:
                 att, pull_telem = att
                 telem = telemetry_counters.add(telem, pull_telem)

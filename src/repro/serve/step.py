@@ -32,6 +32,7 @@ def make_cache_ops(run: RunConfig, mesh: Optional[Mesh],
             mesh=mesh, mem_axis=run.bridge.mem_axis,
             budget=run.bridge.epoch_budget,
             edge_buffer=run.bridge.edge_buffer,
+            channels=run.bridge.channels,
             collect_telemetry=collect_telemetry, dtype=dtype)
     raise ValueError(kp)
 

@@ -53,6 +53,16 @@ def main():
     assert not np.any(np.asarray(store.table.home) == 1)
     print("ok: elastic remap restore")
 
+    # pipelined round engine: a channels=4 store round-trips bit-exactly
+    # (push and pull both run the multi-channel datapath)
+    import dataclasses
+    store4 = dataclasses.replace(store, channels=4)
+    store4 = zero_bridge.push_tree(store4, tree2, mesh=mesh)
+    got4 = zero_bridge.pull_tree(store4, mesh=mesh)
+    for a, b in zip(jax.tree.leaves(got4), jax.tree.leaves(got3)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("ok: channels=4 store roundtrip bit-exact")
+
     print("ALL OK")
 
 

@@ -462,3 +462,192 @@ def test_migration_plan_roundtrips_through_table():
     for s in plan:
         assert int(old_table.home[s.page_id]) == s.old_home
         assert int(old_table.slot[s.page_id]) == s.old_slot
+
+
+# ---------------------------------------------------------------------------
+# Pipelined multi-channel round engine + push/pull parity bugfixes
+# ---------------------------------------------------------------------------
+
+def _one_node_mesh():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _run_pull_local(pool, want_row, active_budget, *, budget, rounds,
+                    channels=1):
+    """Drive bridge._pull_local directly (1-node mem axis) — the only way
+    to hand the scan body inputs the public wrapper pre-sanitizes."""
+    import functools
+    from jax.sharding import PartitionSpec as P
+    mesh = _one_node_mesh()
+    table = MemPortTable.striped(pool.shape[0], 1, pool.shape[0])
+    prog = steering.bidirectional_program(1)
+    body = functools.partial(bridge._pull_local, axis="data", num_nodes=1,
+                             budget=budget, rounds=rounds, edge_buffer=True,
+                             channels=channels)
+
+    def mapped(pool_l, want_l, ab):
+        return body(pool_l, want_l[0], table, ab[0], prog)[None]
+
+    with bridge.use_mesh(mesh):
+        return np.asarray(bridge.shard_map(
+            mapped, mesh,
+            in_specs=(P("data", None), P("data", None), P("data")),
+            out_specs=P("data", None, None), mem_axis="data",
+        )(pool, jnp.asarray(want_row)[None],
+          jnp.asarray([active_budget], jnp.int32))[0])
+
+
+def _run_push_local(pool, dest_row, payload_rows, active_budget, *, budget,
+                    rounds, channels=1):
+    import functools
+    from jax.sharding import PartitionSpec as P
+    mesh = _one_node_mesh()
+    table = MemPortTable.striped(pool.shape[0], 1, pool.shape[0])
+    prog = steering.bidirectional_program(1)
+    body = functools.partial(bridge._push_local, axis="data", num_nodes=1,
+                             budget=budget, rounds=rounds, channels=channels)
+
+    def mapped(pool_l, dest_l, pay_l, ab):
+        return body(pool_l, dest_l[0], pay_l[0], table, ab[0], prog)
+
+    with bridge.use_mesh(mesh):
+        return np.asarray(bridge.shard_map(
+            mapped, mesh,
+            in_specs=(P("data", None), P("data", None),
+                      P("data", None, None), P("data")),
+            out_specs=P("data", None), mem_axis="data",
+        )(pool, jnp.asarray(dest_row)[None],
+          jnp.asarray(payload_rows)[None],
+          jnp.asarray([active_budget], jnp.int32)))
+
+
+def test_pull_push_signature_parity():
+    """Regression: push_pages historically lacked pull's edge_buffer knob.
+    Every shared bridge knob must exist on both paths with one default."""
+    import inspect
+    pull = inspect.signature(bridge.pull_pages).parameters
+    push = inspect.signature(bridge.push_pages).parameters
+    shared = ("mesh", "mem_axis", "budget", "edge_buffer", "channels",
+              "overprovision", "active_budget", "program", "table_nodes",
+              "collect_telemetry", "topology")
+    for name in shared:
+        assert name in pull, f"pull_pages lost {name!r}"
+        assert name in push, f"push_pages missing {name!r}"
+        assert pull[name].default == push[name].default, name
+    locals_ = (inspect.signature(bridge._pull_local).parameters,
+               inspect.signature(bridge._push_local).parameters)
+    for name in ("edge_buffer", "channels"):
+        assert all(name in p for p in locals_), name
+
+
+def test_pull_local_rounds_zero_returns_request_shaped_zeros():
+    """Regression: rounds == 0 with a non-empty ``want`` must return the
+    [want.shape[0], *page] all-dropped zeros the docstring promises, not a
+    zero-row array (the caller indexes it by request position)."""
+    pool = make_pool_np(16, 4)
+    want = np.asarray([3, 0, FREE, 7, 11], np.int32)
+    got = _run_pull_local(pool, want, 8, budget=8, rounds=0)
+    assert got.shape == (5, 4)
+    np.testing.assert_array_equal(got, np.zeros((5, 4), np.float32))
+    # telemetry counts every live request as a rate-limiter drop
+    from repro.telemetry.counters import transfer_telemetry
+    from repro.core.topology import Topology
+    topo = Topology.flat(1)
+    telem = transfer_telemetry(
+        jnp.asarray(want), MemPortTable.striped(16, 1, 16),
+        steering.bidirectional_program(1), jnp.int32(8), my=0, num_nodes=1,
+        budget=8, rounds=0, topo=topo.tables(), num_groups=1)
+    assert int(telem.spilled) == 4  # the FREE hole is not a live request
+    assert int(telem.served_total()) == 0
+
+
+@pytest.mark.parametrize("channels", [1, 2])
+def test_pull_local_overdriven_budget_clamps(channels):
+    """Regression: an ``active_budget`` above ``budget`` used to walk the
+    round pointer past the final window, so ``dynamic_slice`` silently
+    clamped and re-served tail requests into the wrong output rows."""
+    pool = make_pool_np(16, 4)
+    table = MemPortTable.striped(16, 1, 16)
+    want = np.arange(16, dtype=np.int32)
+    got = _run_pull_local(pool, want, 12, budget=8, rounds=2,
+                          channels=channels)
+    exp = np.asarray(ref.pull_pages_ref(pool, jnp.asarray(want)[None],
+                                        table, pages_per_node=16))[0]
+    np.testing.assert_array_equal(got, exp)
+
+
+@pytest.mark.parametrize("channels", [1, 2])
+def test_push_local_overdriven_budget_clamps(channels):
+    """Write-path twin of the clamp regression, plus spill accounting: the
+    telemetry oracle (which clips) must agree with what actually landed."""
+    pool = make_pool_np(16, 4)
+    table = MemPortTable.striped(16, 1, 16)
+    dest = np.arange(12, dtype=np.int32)
+    padded = steering.pad_requests(dest, 2, 8)
+    payload = np.zeros((16, 4), np.float32)
+    payload[:12] = np.arange(1, 13, dtype=np.float32)[:, None]
+    got = _run_push_local(pool, padded, payload, 9, budget=8, rounds=2,
+                          channels=channels)
+    exp = np.asarray(ref.push_pages_ref(
+        pool, jnp.asarray(dest)[None], jnp.asarray(payload[None, :12]),
+        table, pages_per_node=16))
+    np.testing.assert_array_equal(got, exp)
+    telem = ref.expected_transfer_telemetry(
+        padded[None], table, None, num_nodes=1, budget=8, active_budget=9,
+        overprovision=2)
+    assert int(np.asarray(telem.spilled).sum()) == 0  # window covers all 12
+
+
+def test_channels_loopback_and_serial_paths_identical():
+    """channels is a no-op on the loopback path and must be accepted
+    everywhere the serial engine runs (edge_buffer=False, n == 1)."""
+    pool = make_pool_np(16, 8)
+    table = MemPortTable.striped(12, 1, 16)
+    want = jnp.asarray([[3, 0, 7, FREE, 11, 2]], jnp.int32)
+    base = np.asarray(bridge.pull_pages(pool, want, table, mesh=None,
+                                        budget=4))
+    for ch in (2, 4):
+        got = np.asarray(bridge.pull_pages(pool, want, table, mesh=None,
+                                           budget=4, channels=ch))
+        np.testing.assert_array_equal(got, base)
+    with pytest.raises(ValueError):
+        bridge.pull_pages(pool, want, table, mesh=None, budget=4, channels=0)
+    with pytest.raises(ValueError):
+        bridge.push_pages(pool, want, jnp.ones((1, 6, 8)), table, mesh=None,
+                          budget=4, channels=-1)
+
+
+def test_control_plane_select_channels():
+    """Pipeline depth from measured wire occupancy: serial when idle or
+    wire-bound (nothing worth hiding), deep when the RTT is a comparable
+    share of the round (latency-bound: overlap wins)."""
+    from repro.telemetry import TelemetryAggregator
+    n = 8
+    cp = ControlPlane(num_nodes=n, pages_per_node=8, num_logical=8)
+    assert cp.select_channels(8, 1 << 18) == 1            # no measurement
+    agg = TelemetryAggregator(n, page_bytes=4096)
+    assert cp.select_channels(8, 4096, telemetry=agg) == 1  # idle wire
+    tm = np.zeros((n, n), np.int32)
+    for i in range(n):
+        tm[i, (i + 1) % n] = 16
+        tm[i, (i + 3) % n] = 8
+    agg.update(fake_telem(n, tm))
+    deep = cp.select_channels(8, 4096, telemetry=agg)      # latency-bound
+    assert deep > 1
+    assert deep <= 8
+    assert cp.select_channels(8, 1 << 20, telemetry=agg) == 1  # wire-bound
+    assert cp.select_channels(1, 4096, telemetry=agg) == 1     # budget floor
+    # one step's raw BridgeTelemetry works like the aggregator
+    assert cp.select_channels(8, 4096, telemetry=fake_telem(n, tm)) == deep
+    # program-aware RTT: a schedule routing traffic the long way round pays
+    # its real hop depth — the shortest-way fallback (min(d, N-d) = 1 hop
+    # for distance 7) would call this wire-bound and stay serial
+    tm_far = np.zeros((n, n), np.int32)
+    for i in range(n):
+        tm_far[i, (i + 7) % n] = 24
+    agg_far = TelemetryAggregator(n, page_bytes=1 << 15)
+    agg_far.update(fake_telem(n, tm_far))
+    uni = steering.unidirectional_program(n)          # d=7 driven as +7 hops
+    assert cp.select_channels(8, 1 << 15, telemetry=agg_far) == 1
+    assert cp.select_channels(8, 1 << 15, telemetry=agg_far,
+                              program=uni) > 1

@@ -190,3 +190,48 @@ def test_rack_tier_asymmetry_penalizes_inter_board_pages():
         hier, 1 << 18, 8, slot_pages=w, topology=topo,
         slot_intra_pages=np.zeros_like(w))
     assert all_inter > all_intra
+
+
+def test_pipelined_channels_degenerates_and_overlaps():
+    """channels=1 must reproduce the classic serial model bit-for-bit;
+    deeper pipelines monotonically shrink the round latency toward the
+    fully-overlapped max(wire, RTT) floor — never below it."""
+    page_bytes, budget = 1 << 18, 8
+    for prog in (steering.bidirectional_program(8),
+                 steering.unidirectional_program(8)):
+        serial = pm.predict_round_latency_us(prog, page_bytes, budget)
+        assert pm.predict_round_latency_us(prog, page_bytes, budget,
+                                           channels=1) == serial
+        prev = serial
+        for c in (2, 4, 8, 64):
+            cur = pm.predict_round_latency_us(prog, page_bytes, budget,
+                                              channels=c)
+            assert cur < prev
+            prev = cur
+        # the fully-overlapped floor: one term completely hidden
+        assert prev > serial / 2
+    # bufferless bridges cannot overlap: channels is ignored there
+    bi = steering.bidirectional_program(8)
+    nobuf = pm.predict_round_latency_us(bi, page_bytes, budget,
+                                        edge_buffer=False)
+    assert pm.predict_round_latency_us(bi, page_bytes, budget,
+                                       edge_buffer=False,
+                                       channels=4) == nobuf
+
+
+def test_pipelined_channels_hierarchical_degenerates_and_overlaps():
+    """The overlap term applies to the two-tier model identically:
+    channels=1 is bit-for-bit the serial hierarchical model."""
+    topo = Topology.boards(2, 4)
+    hier = steering.hierarchical_program(topo)
+    page_bytes, budget = 1 << 18, 8
+    serial = pm.predict_round_latency_us(hier, page_bytes, budget,
+                                         topology=topo)
+    assert pm.predict_round_latency_us(hier, page_bytes, budget,
+                                       topology=topo, channels=1) == serial
+    prev = serial
+    for c in (2, 4, 8):
+        cur = pm.predict_round_latency_us(hier, page_bytes, budget,
+                                          topology=topo, channels=c)
+        assert cur < prev
+        prev = cur
