@@ -2,11 +2,14 @@
 
 Run after ``benchmarks/bridge_latency.py``: validates that the emitted
 perf record has the expected shape (so the cross-PR trajectory stays
-machine-readable) and that both closed-loop acceptance bars held — the
+machine-readable) and that the closed-loop acceptance bars held — the
 telemetry-compiled load-balanced program predicts a strictly lower round
-latency than the static bidirectional split under the measured skew, and
-on every board + rack fabric the hierarchical schedule strictly beats the
-topology-blind flat bidirectional one under intra-board-heavy traffic.
+latency than the static bidirectional split under the measured skew, on
+every board + rack fabric the hierarchical schedule strictly beats the
+topology-blind flat bidirectional one under intra-board-heavy traffic,
+and the orchestrator's QoS windows keep the interactive tenant's
+co-located completion latency within 1.5x of its solo run (the isolation
+bound) while naive FIFO sharing is strictly worse.
 """
 from __future__ import annotations
 
@@ -17,7 +20,7 @@ import sys
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
 
 TOP_KEYS = {"sw_pull_1page_us", "num_nodes", "page_bytes", "budget",
-            "variants", "measured", "hierarchical", "pipeline"}
+            "variants", "measured", "hierarchical", "pipeline", "tenancy"}
 VARIANTS = {"unidirectional", "bidirectional", "pruned", "load_balanced"}
 VARIANT_KEYS = {"epochs", "live_slots", "total_hops", "bytes_per_round",
                 "model_round_us", "model_round_us_bufferless"}
@@ -31,6 +34,16 @@ HIER_KEYS = {"source", "num_boards", "board_size", "intra_pages",
 PIPELINE_KEYS = {"source", "model_round_us", "selected_channels"}
 PIPELINE_CHANNELS = {"1", "2", "4", "8"}
 PIPELINE_PICKS = {"wire_bound_256KiB", "latency_bound_4KiB"}
+TENANCY_KEYS = {"source", "interactive_pages", "batch_backlog_pages",
+                "windows", "refit_windows", "interactive_solo_us",
+                "interactive_naive_us", "interactive_qos_us",
+                "qos_isolation_ratio", "naive_degradation_ratio",
+                "tenant_served", "tenant_spilled"}
+TENANCY_TENANTS = {"interactive", "batch"}
+# The isolation acceptance bound: under batch co-location the QoS scheduler
+# must keep the interactive tenant's completion latency within 1.5x of its
+# solo run (the naive FIFO composition has no such bound and must be worse).
+TENANCY_ISOLATION_BOUND = 1.5
 
 
 def fail(msg: str) -> None:
@@ -121,13 +134,42 @@ def main() -> None:
                if not isinstance(mus[c], (int, float))]
         if bad:
             fail(f"pipeline measured sweep non-numeric depths {sorted(bad)}")
+    ten = bench["tenancy"]
+    gone = TENANCY_KEYS - ten.keys()
+    if gone:
+        fail(f"tenancy section missing keys {sorted(gone)}")
+    for key in ("windows", "refit_windows", "tenant_served",
+                "tenant_spilled"):
+        if not TENANCY_TENANTS <= ten[key].keys():
+            fail(f"tenancy {key} missing tenants "
+                 f"{sorted(TENANCY_TENANTS - ten[key].keys())}")
+    bad = [k for k in ("interactive_solo_us", "interactive_naive_us",
+                       "interactive_qos_us", "qos_isolation_ratio",
+                       "naive_degradation_ratio")
+           if not isinstance(ten[k], (int, float))]
+    if bad:
+        fail(f"tenancy non-numeric keys {bad}")
+    # The isolation acceptance bar: QoS scheduling bounds the interactive
+    # tenant's co-located latency; naive equal-FIFO sharing does not.
+    if not ten["qos_isolation_ratio"] <= TENANCY_ISOLATION_BOUND:
+        fail(f"tenancy: QoS isolation ratio {ten['qos_isolation_ratio']} "
+             f"above the {TENANCY_ISOLATION_BOUND}x acceptance bound")
+    if not ten["naive_degradation_ratio"] > ten["qos_isolation_ratio"]:
+        fail(f"tenancy: naive sharing ({ten['naive_degradation_ratio']}x) "
+             f"not worse than QoS ({ten['qos_isolation_ratio']}x) — the "
+             f"scheduler is not isolating anything")
+    if ten["tenant_served"]["interactive"] <= 0:
+        fail("tenancy: interactive tenant served no pages")
     h8 = hier["8"]
     print(f"BENCH_bridge.json ok: {len(bench['variants'])} variants, "
           f"measured {m['source']}: static {m['static_bidirectional_us']}us "
           f"-> load-balanced {m['load_balanced_us']}us; hierarchical 2x4 "
           f"{h8['flat_bidirectional_us']}us -> {h8['hierarchical_us']}us; "
           f"pipeline c1 {sweep['1']}us -> c8 {sweep['8']}us "
-          f"(picks: {pipe['selected_channels']})")
+          f"(picks: {pipe['selected_channels']}); tenancy "
+          f"{ten['source']}: solo {ten['interactive_solo_us']}us -> qos "
+          f"{ten['interactive_qos_us']}us (x{ten['qos_isolation_ratio']}) "
+          f"vs naive x{ten['naive_degradation_ratio']}")
 
 
 if __name__ == "__main__":

@@ -50,7 +50,11 @@ This is the paper's datapath (Fig. 1) mapped onto a TPU pod:
   :class:`~repro.telemetry.counters.BridgeTelemetry` of per-slot served
   counts, spills, pruned drops and a traffic-matrix row, computed as masked
   integer sums with static shapes (swapping programs with collection on
-  never retraces); the control plane closes the loop on it.
+  never retraces); the control plane closes the loop on it.  A per-request
+  ``tenant_ids`` lane (runtime input, same shape as the request list)
+  additionally attributes every outcome to its tenant in static
+  ``[max_tenants]`` histograms — the measurement the orchestrator's
+  multi-tenant QoS scheduler re-fits its budget shares from.
 
 All functions exist in two forms: a ``*_local`` body to be used inside
 ``shard_map`` (N nodes on the mem axis) and a reference oracle in
@@ -527,7 +531,9 @@ def _resolve_topology(topology: Optional[Topology],
 def _loopback_telemetry(ids: jax.Array, table: MemPortTable,
                         program: Optional[RouteProgram], tn: int,
                         active_budget, budget: int, rounds: int,
-                        topology: Optional[Topology]
+                        topology: Optional[Topology],
+                        tenant_ids: Optional[jax.Array] = None,
+                        max_tenants: int = _telemetry.DEFAULT_MAX_TENANTS
                         ) -> _telemetry.BridgeTelemetry:
     """Telemetry for the 1-device path: row i of ``ids`` is logical
     requester i; the whole batch shares ``active_budget``'s first element
@@ -537,13 +543,17 @@ def _loopback_telemetry(ids: jax.Array, table: MemPortTable,
     tt = topo.tables()
     ab = jnp.clip(jnp.asarray(active_budget).reshape(-1)[0], 0, budget)
     rows = ids.reshape((-1, ids.shape[-1]))
+    if tenant_ids is None:
+        tenant_ids = jnp.zeros_like(ids)
+    trows = tenant_ids.reshape((-1, tenant_ids.shape[-1]))
 
-    def per_row(row, my):
+    def per_row(row, my, trow):
         return _telemetry.transfer_telemetry(
             row, table, prog, ab, my=my, num_nodes=tn, budget=budget,
-            rounds=rounds, topo=tt, num_groups=topo.num_groups)
+            rounds=rounds, topo=tt, num_groups=topo.num_groups,
+            tenant_ids=trow, max_tenants=max_tenants)
 
-    return jax.vmap(per_row)(rows, jnp.arange(rows.shape[0]))
+    return jax.vmap(per_row)(rows, jnp.arange(rows.shape[0]), trows)
 
 
 def _telemetry_specs(mem_axis: str) -> _telemetry.BridgeTelemetry:
@@ -552,7 +562,9 @@ def _telemetry_specs(mem_axis: str) -> _telemetry.BridgeTelemetry:
         slot_served=P(mem_axis, None), loopback_served=P(mem_axis),
         spilled=P(mem_axis), pruned=P(mem_axis), traffic=P(mem_axis, None),
         epoch_cw=P(mem_axis, None), epoch_ccw=P(mem_axis, None),
-        slot_intra=P(mem_axis, None), tier_hops=P(mem_axis, None))
+        slot_intra=P(mem_axis, None), tier_hops=P(mem_axis, None),
+        tenant_served=P(mem_axis, None), tenant_spilled=P(mem_axis, None),
+        tenant_pruned=P(mem_axis, None))
 
 
 def _loopback_mask(flat: jax.Array, ids: jax.Array, table: MemPortTable,
@@ -585,7 +597,9 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
                active_budget: Optional[jax.Array] = None,
                program: Optional[RouteProgram] = None,
                table_nodes: int = 0, collect_telemetry: bool = False,
-               topology: Optional[Topology] = None):
+               topology: Optional[Topology] = None,
+               tenant_ids: Optional[jax.Array] = None,
+               max_tenants: int = 0):
     """Pull logical pages through the bridge.
 
     Args:
@@ -619,18 +633,40 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         Classifies each transfer's tier for the telemetry counters; its
         tables are compile-time constants, so flat and hierarchical
         *programs* swap on one trace.
+      tenant_ids: optional [num_nodes, R] tenant-id lane aligned with
+        ``want`` (a **runtime input**, like the table: swapping tenant
+        shares / window compositions never retraces).  Attribution is
+        observational — it bins the telemetry's per-tenant counters and
+        never changes what is served.  None = all tenant 0; without
+        ``collect_telemetry`` the lane is ignored entirely (never
+        materialized on the hot path).
+      max_tenants: static width of the per-tenant telemetry histograms
+        (0 = the :data:`repro.telemetry.counters.DEFAULT_MAX_TENANTS`).
     Returns:
       [num_nodes, R, *page_shape] gathered pages, sharded on dim 0 — or
       ``(pages, telemetry)`` when ``collect_telemetry`` is set.
     """
     n = _mem_axis_size(mesh, mem_axis)
     channels = _resolve_channels(channels)
+    if max_tenants <= 0:
+        max_tenants = _telemetry.DEFAULT_MAX_TENANTS
     r = want.shape[-1]
     rounds = steering.num_rounds(r, budget, overprovision)
+    if tenant_ids is not None and tenant_ids.shape != want.shape:
+        raise ValueError(f"tenant_ids shape {tenant_ids.shape} != request "
+                         f"shape {want.shape}")
+    # The lane only feeds the telemetry counters: without collection it is
+    # never materialized or threaded (no wasted operand on the hot path).
+    if collect_telemetry and tenant_ids is None:
+        tenant_ids = jnp.zeros(want.shape, jnp.int32)
     pad = rounds * budget - r
     if pad:
         want = jnp.concatenate(
             [want, jnp.full(want.shape[:-1] + (pad,), FREE, want.dtype)], -1)
+        if collect_telemetry:
+            tenant_ids = jnp.concatenate(
+                [tenant_ids, jnp.zeros(tenant_ids.shape[:-1] + (pad,),
+                                       tenant_ids.dtype)], -1)
     if active_budget is None:
         active_budget = jnp.int32(budget)
 
@@ -655,7 +691,7 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         if collect_telemetry:
             return out, _loopback_telemetry(want, table, program, tn,
                                             active_budget, budget, rounds,
-                                            topology)
+                                            topology, tenant_ids, max_tenants)
         return out
     if table_nodes and table_nodes != n:
         raise ValueError(f"table has {table_nodes} nodes but mem axis "
@@ -670,24 +706,29 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         rounds=rounds, edge_buffer=edge_buffer, channels=channels)
     ab_vec = jnp.clip(jnp.broadcast_to(active_budget, (n,)), 0, budget)
 
-    def mapped(pool, want_l, table_l, ab, prog, tt):
+    def mapped(pool, want_l, table_l, ab, prog, tt, *ten_l):
         out = body(pool, want_l[0], table_l, ab[0], prog)
         if not collect_telemetry:
             return out[None]
         telem = _telemetry.transfer_telemetry(
             want_l[0], table_l, prog, ab[0],
             my=jax.lax.axis_index(mem_axis), num_nodes=n, budget=budget,
-            rounds=rounds, topo=tt, num_groups=topo.num_groups)
+            rounds=rounds, topo=tt, num_groups=topo.num_groups,
+            tenant_ids=ten_l[0][0], max_tenants=max_tenants)
         return out[None], jax.tree.map(lambda x: x[None], telem)
 
     out_specs = ((out_spec, _telemetry_specs(mem_axis))
                  if collect_telemetry else out_spec)
+    in_specs = (pages_spec, P(mem_axis, None), P(), P(mem_axis), P(),
+                TopoTables(group=P(), local_rank=P(), group_size=P()))
+    args = (pool_pages, want, table, ab_vec, program, topo.tables())
+    if collect_telemetry:
+        in_specs += (P(mem_axis, None),)
+        args += (tenant_ids,)
     out = shard_map(
-        mapped, mesh,
-        in_specs=(pages_spec, P(mem_axis, None), P(), P(mem_axis), P(),
-                  TopoTables(group=P(), local_rank=P(), group_size=P())),
-        out_specs=out_specs, mem_axis=mem_axis,
-    )(pool_pages, want, table, ab_vec, program, topo.tables())
+        mapped, mesh, in_specs=in_specs, out_specs=out_specs,
+        mem_axis=mem_axis,
+    )(*args)
     if collect_telemetry:
         return out[0][:, :r], out[1]
     return out[:, :r]
@@ -701,7 +742,9 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
                active_budget: Optional[jax.Array] = None,
                program: Optional[RouteProgram] = None,
                table_nodes: int = 0, collect_telemetry: bool = False,
-               topology: Optional[Topology] = None):
+               topology: Optional[Topology] = None,
+               tenant_ids: Optional[jax.Array] = None,
+               max_tenants: int = 0):
     """Write pages to their homes through the bridge (single-writer pages).
 
     Args:
@@ -723,15 +766,28 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
         coverage), same semantics as in :func:`pull_pages`.
       collect_telemetry: also return per-node write-path counters
         (:class:`~repro.telemetry.counters.BridgeTelemetry`).
+      tenant_ids / max_tenants: per-request tenant attribution lane for the
+        telemetry counters, same semantics as in :func:`pull_pages`.
     """
     n = _mem_axis_size(mesh, mem_axis)
     channels = _resolve_channels(channels)
+    if max_tenants <= 0:
+        max_tenants = _telemetry.DEFAULT_MAX_TENANTS
     r = dest.shape[-1]
     rounds = steering.num_rounds(r, budget, overprovision)
+    if tenant_ids is not None and tenant_ids.shape != dest.shape:
+        raise ValueError(f"tenant_ids shape {tenant_ids.shape} != request "
+                         f"shape {dest.shape}")
+    if collect_telemetry and tenant_ids is None:
+        tenant_ids = jnp.zeros(dest.shape, jnp.int32)
     pad = rounds * budget - r
     if pad:
         dest = jnp.concatenate(
             [dest, jnp.full(dest.shape[:-1] + (pad,), FREE, dest.dtype)], -1)
+        if collect_telemetry:
+            tenant_ids = jnp.concatenate(
+                [tenant_ids, jnp.zeros(tenant_ids.shape[:-1] + (pad,),
+                                       tenant_ids.dtype)], -1)
         zeros = jnp.zeros(payload.shape[:1] + (pad,) + payload.shape[2:],
                           payload.dtype)
         payload = jnp.concatenate([payload, zeros], 1)
@@ -754,7 +810,7 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
         if collect_telemetry:
             return out, _loopback_telemetry(dest, table, program, tn,
                                             active_budget, budget, rounds,
-                                            topology)
+                                            topology, tenant_ids, max_tenants)
         return out
     if table_nodes and table_nodes != n:
         raise ValueError(f"table has {table_nodes} nodes but mem axis "
@@ -768,23 +824,28 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
                              edge_buffer=edge_buffer, channels=channels)
     ab_vec = jnp.clip(jnp.broadcast_to(active_budget, (n,)), 0, budget)
 
-    def mapped(pool, dest_l, pay_l, table_l, ab, prog, tt):
+    def mapped(pool, dest_l, pay_l, table_l, ab, prog, tt, *ten_l):
         out = body(pool, dest_l[0], pay_l[0], table_l, ab[0], prog)
         if not collect_telemetry:
             return out
         telem = _telemetry.transfer_telemetry(
             dest_l[0], table_l, prog, ab[0],
             my=jax.lax.axis_index(mem_axis), num_nodes=n, budget=budget,
-            rounds=rounds, topo=tt, num_groups=topo.num_groups)
+            rounds=rounds, topo=tt, num_groups=topo.num_groups,
+            tenant_ids=ten_l[0][0], max_tenants=max_tenants)
         return out, jax.tree.map(lambda x: x[None], telem)
 
     out_specs = ((pages_spec, _telemetry_specs(mem_axis))
                  if collect_telemetry else pages_spec)
+    in_specs = (pages_spec, P(mem_axis, None),
+                P(mem_axis, None, *([None] * (payload.ndim - 2))), P(),
+                P(mem_axis), P(),
+                TopoTables(group=P(), local_rank=P(), group_size=P()))
+    args = (pool_pages, dest, payload, table, ab_vec, program, topo.tables())
+    if collect_telemetry:
+        in_specs += (P(mem_axis, None),)
+        args += (tenant_ids,)
     return shard_map(
-        mapped, mesh,
-        in_specs=(pages_spec, P(mem_axis, None),
-                  P(mem_axis, None, *([None] * (payload.ndim - 2))), P(),
-                  P(mem_axis), P(),
-                  TopoTables(group=P(), local_rank=P(), group_size=P())),
-        out_specs=out_specs, mem_axis=mem_axis,
-    )(pool_pages, dest, payload, table, ab_vec, program, topo.tables())
+        mapped, mesh, in_specs=in_specs, out_specs=out_specs,
+        mem_axis=mem_axis,
+    )(*args)

@@ -98,6 +98,7 @@ class ControlPlane:
         self._home = np.full((num_logical,), FREE, np.int64)
         self._slot = np.full((num_logical,), FREE, np.int64)
         self._next_logical = 0
+        self._free_logical: list[int] = []   # released ids, recycled first
         self._regions: dict[int, Region] = {}
         self._next_region = 0
         self.nodes = [NodeState() for _ in range(num_nodes)]
@@ -112,18 +113,43 @@ class ControlPlane:
     def free_slots(self, node: int) -> int:
         return len(self._free[node])
 
+    def free_logical(self) -> int:
+        """Unclaimed logical page ids (released-and-recycled + never minted).
+
+        The admission-control side of capacity: an allocation needs this
+        many ids free *and* enough physical slots (``free_slots``)."""
+        return (len(self._free_logical)
+                + self.num_logical - self._next_logical)
+
     @property
     def alive_nodes(self) -> list[int]:
         return [i for i, n in enumerate(self.nodes) if n.alive]
 
     # -- allocation -----------------------------------------------------------
+    def _take_logical(self, num_pages: int) -> np.ndarray:
+        """Claim ``num_pages`` logical ids, recycling released ones first.
+
+        ``_next_logical`` alone is monotonic: allocate/release churn (lease
+        turnover in the orchestrator) would exhaust the logical space while
+        the pool still has free slots.  Released ids return via
+        :meth:`release` and are handed out again (lowest first, for
+        deterministic placement) before fresh ids are minted.
+        """
+        fresh = self.num_logical - self._next_logical
+        if num_pages > len(self._free_logical) + fresh:
+            raise RuntimeError("logical page space exhausted")
+        self._free_logical.sort()
+        reuse = self._free_logical[:num_pages]
+        del self._free_logical[:num_pages]
+        n_new = num_pages - len(reuse)
+        ids = np.asarray(
+            reuse + list(range(self._next_logical,
+                               self._next_logical + n_new)), np.int64)
+        self._next_logical += n_new
+        return ids
+
     def allocate(self, num_pages: int, name: str = "",
                  policy: Policy = "striped", affinity: int = 0) -> Region:
-        if self._next_logical + num_pages > self.num_logical:
-            raise RuntimeError("logical page space exhausted")
-        ids = np.arange(self._next_logical, self._next_logical + num_pages)
-        self._next_logical += num_pages
-
         alive = self.alive_nodes
         if not alive:
             raise RuntimeError("no alive nodes")
@@ -133,19 +159,35 @@ class ControlPlane:
             homes = [alive[int(self._rng.integers(len(alive)))]
                      for _ in range(num_pages)]
         elif policy == "affinity":
+            if not 0 <= affinity < self.num_nodes:
+                raise ValueError(f"affinity node {affinity} out of range")
             homes = [affinity] * num_pages
         else:
             raise ValueError(policy)
+        ids = self._take_logical(num_pages)
         for pid, h in zip(ids, homes):
-            if not self._free[h]:
-                # Topology-aware spill: a full home overflows onto its own
-                # board first (board-ring traffic instead of rack-ring),
+            # A dead affinity target must not home pages even when its free
+            # list still has entries (a monitor may mark a node dead without
+            # a fail_node remap — its slots are quarantined, not reusable).
+            if not self._free[h] or not self.nodes[h].alive:
+                # Topology-aware spill: a full/dead home overflows onto its
+                # own board first (board-ring traffic instead of rack-ring),
                 # then onto the globally emptiest survivor.
                 h = max(alive, key=lambda n: (
                     len(self._free[n]) > 0
                     and self.topology.group[n] == self.topology.group[h],
                     len(self._free[n])))
                 if not self._free[h]:
+                    # Roll the partial allocation back: slots placed so far
+                    # return to their free lists, every claimed id is
+                    # recycled.
+                    for i in ids:
+                        if self._home[i] != FREE:
+                            self._free[int(self._home[i])].append(
+                                int(self._slot[i]))
+                            self._home[i] = FREE
+                            self._slot[i] = FREE
+                        self._free_logical.append(int(i))
                     raise RuntimeError("pool out of slots")
             s = self._free[h].pop(0)
             self._home[pid] = h
@@ -157,16 +199,28 @@ class ControlPlane:
         return region
 
     def release(self, region: Region) -> None:
+        if region.region_id not in self._regions:
+            # Stale handle: the region was already released.  With logical
+            # ids recycled on release, acting on a stale handle would free
+            # pages now owned by a *different* region (alias two tenants);
+            # idempotence here is what makes recycling safe.
+            return
         for pid in region.page_ids:
             h, s = int(self._home[pid]), int(self._slot[pid])
+            if h == FREE:
+                # Unplaced id (defensive): nothing to free.
+                continue
             # Slot quarantine: a dead node's slots must not return to its
             # free list (a monitor may mark a node dead before/without a
             # fail_node remap).  revive_node rebuilds the free list from the
             # table, so slots released while the node was down reappear then.
-            if h != FREE and self.nodes[h].alive:
+            if self.nodes[h].alive:
                 self._free[h].append(s)
             self._home[pid] = FREE
             self._slot[pid] = FREE
+            # Logical ids are recycled (lease churn must not exhaust the
+            # monotonic id space while the pool has free slots).
+            self._free_logical.append(int(pid))
         self._regions.pop(region.region_id, None)
 
     # -- failure handling (elastic remap) --------------------------------------

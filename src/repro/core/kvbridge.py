@@ -179,7 +179,8 @@ def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
            max_pages: int, mesh: Optional[Mesh], mem_axis: str = "data",
            budget: int = 8, edge_buffer: bool = True, channels: int = 1,
            program: Optional[RouteProgram] = None,
-           collect_telemetry: bool = False, topology=None):
+           collect_telemetry: bool = False, topology=None,
+           tenant_of_seq: Optional[jax.Array] = None, max_tenants: int = 0):
     """Append one token's (k, v) [B, kv, hd] for one layer.
 
     Tokens land in the local tail buffer; when a sequence's tail page fills,
@@ -189,6 +190,8 @@ def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
     (bufferless serialization / the pipelined multi-channel round engine).
     With ``collect_telemetry`` the write-path counters of both pushes (k and
     v pages both cross the wire) come back summed: ``(layer, telemetry)``.
+    ``tenant_of_seq`` (i32[B], runtime input) attributes each sequence's
+    flush traffic to its tenant in the telemetry's per-tenant bins.
     """
     b = lengths.shape[0]
     off = lengths % page_tokens
@@ -203,25 +206,34 @@ def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
     per_node = -(-b // n)
     pad = n * per_node - b
 
-    def shape_for(x):
+    def shape_for(x, fill=0):
         if pad:
             x = jnp.concatenate(
-                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], 0)
+                [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)], 0)
         return x.reshape((n, per_node) + x.shape[1:])
 
-    dest_n = shape_for(jnp.where(dest >= 0, dest, FREE).astype(jnp.int32))
+    # Padding rows (batch not a multiple of the mesh size) must carry FREE
+    # destinations — a zero pad would be a live push of zero payloads into
+    # logical page 0 (sequence 0's first KV page) every step.
+    dest_n = shape_for(jnp.where(dest >= 0, dest, FREE).astype(jnp.int32),
+                       fill=FREE)
+    tenants_n = None
+    if tenant_of_seq is not None:
+        tenants_n = shape_for(tenant_of_seq.astype(jnp.int32))
     k_pool = bridge.push_pages(layer.k_pool, dest_n, shape_for(tail_k),
                                table, mesh=mesh, mem_axis=mem_axis,
                                budget=budget, edge_buffer=edge_buffer,
                                channels=channels, program=program,
                                collect_telemetry=collect_telemetry,
-                               topology=topology)
+                               topology=topology, tenant_ids=tenants_n,
+                               max_tenants=max_tenants)
     v_pool = bridge.push_pages(layer.v_pool, dest_n, shape_for(tail_v),
                                table, mesh=mesh, mem_axis=mem_axis,
                                budget=budget, edge_buffer=edge_buffer,
                                channels=channels, program=program,
                                collect_telemetry=collect_telemetry,
-                               topology=topology)
+                               topology=topology, tenant_ids=tenants_n,
+                               max_tenants=max_tenants)
     telem = None
     if collect_telemetry:
         k_pool, telem_k = k_pool
@@ -255,7 +267,9 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
                           budget: int = 8, edge_buffer: bool = True,
                           channels: int = 1,
                           program: Optional[RouteProgram] = None,
-                          collect_telemetry: bool = False, topology=None):
+                          collect_telemetry: bool = False, topology=None,
+                          tenant_of_seq: Optional[jax.Array] = None,
+                          max_tenants: int = 0):
     """Paper-faithful: pull pages through the bridge, attend locally.
 
     q: [B, H, hd] -> out [B, H, hd].  Pages stream through an online-softmax
@@ -264,6 +278,8 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
     :func:`repro.core.bridge.pull_pages`; ``channels`` its pipelined
     multi-channel round overlap.  With ``collect_telemetry`` the summed
     counters of the k and v pulls come back too: ``(out, telemetry)``.
+    ``tenant_of_seq`` (i32[B], runtime input) attributes each sequence's
+    page pulls to its tenant in the telemetry's per-tenant bins.
     """
     b, h, hd = q.shape
     kv = layer.k_pool.shape[-2]
@@ -279,19 +295,29 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
         want_b = jnp.concatenate(
             [want_b, jnp.full((pad, max_pages), FREE, jnp.int32)], 0)
     want = want_b.reshape(n, per_node * max_pages)
+    tenants = None
+    if tenant_of_seq is not None:
+        ten_b = jnp.broadcast_to(tenant_of_seq.astype(jnp.int32)[:, None],
+                                 (b, max_pages))
+        if pad:
+            ten_b = jnp.concatenate(
+                [ten_b, jnp.zeros((pad, max_pages), jnp.int32)], 0)
+        tenants = ten_b.reshape(n, per_node * max_pages)
 
     k_pages = bridge.pull_pages(layer.k_pool, want, table, mesh=mesh,
                                 mem_axis=mem_axis, budget=budget,
                                 edge_buffer=edge_buffer, channels=channels,
                                 program=program,
                                 collect_telemetry=collect_telemetry,
-                                topology=topology)
+                                topology=topology, tenant_ids=tenants,
+                                max_tenants=max_tenants)
     v_pages = bridge.pull_pages(layer.v_pool, want, table, mesh=mesh,
                                 mem_axis=mem_axis, budget=budget,
                                 edge_buffer=edge_buffer, channels=channels,
                                 program=program,
                                 collect_telemetry=collect_telemetry,
-                                topology=topology)
+                                topology=topology, tenant_ids=tenants,
+                                max_tenants=max_tenants)
     telem = None
     if collect_telemetry:
         k_pages, telem_k = k_pages

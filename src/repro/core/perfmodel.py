@@ -380,6 +380,32 @@ def predict_round_latency_us(program, page_bytes: int, budget: int,
         float(rtt_us[live].max()), channels))
 
 
+def predict_transfer_latency_us(program, page_bytes: int, budget: int,
+                                num_requests: int, hw: TpuHW = TPU_HW,
+                                edge_buffer: bool = True, slot_pages=None,
+                                topology=None, slot_intra_pages=None,
+                                channels: int = 1,
+                                overprovision: int = 1) -> float:
+    """Predicted completion latency of a whole transfer (all its rounds).
+
+    The bridge serves ``num_requests`` pages per requester in
+    ``steering.num_rounds`` rounds of ``budget`` lanes; each round costs
+    :func:`predict_round_latency_us` under the given loads.  This is the
+    admission-control currency of the orchestrator: a tenant's SLO bounds
+    the completion latency of its per-step window, and co-located windows
+    shift ``slot_pages``/``num_requests`` — the model prices the shift
+    without touching the datapath.
+    """
+    from repro.core import steering
+    rounds = steering.num_rounds(num_requests, budget, overprovision)
+    if rounds == 0:
+        return 0.0
+    return rounds * predict_round_latency_us(
+        program, page_bytes, budget, hw=hw, edge_buffer=edge_buffer,
+        slot_pages=slot_pages, topology=topology,
+        slot_intra_pages=slot_intra_pages, channels=channels)
+
+
 def tpu_stream_penalty(kernel: str, page_bytes: int = 1 << 18,
                        hw: TpuHW = TPU_HW) -> float:
     """Paper Fig. 3 analogue on TPU: HBM-local vs bridge-remote STREAM."""

@@ -93,7 +93,8 @@ def expected_transfer_telemetry(ids, table: MemPortTable,
                                 program: Optional[RouteProgram], *,
                                 num_nodes: int, budget: int,
                                 active_budget=None, overprovision: int = 1,
-                                topology: Optional[Topology] = None):
+                                topology: Optional[Topology] = None,
+                                tenant_ids=None, max_tenants: int = 0):
     """Oracle for ``pull_pages`` / ``push_pages`` ``collect_telemetry``.
 
     Walks every request of every row (row i = requester i) with plain
@@ -110,13 +111,28 @@ def expected_transfer_telemetry(ids, table: MemPortTable,
     a scalar shared by every row (what the loopback path actually applies).
     Returns a :class:`~repro.telemetry.counters.BridgeTelemetry` with
     [rows, ...] leaves.
+
+    ``tenant_ids`` ([rows, r], aligned with ``ids``; None = all tenant 0)
+    attributes every outcome to its request's tenant exactly like the
+    datapath's tenant lane: ids clip into [0, max_tenants), so the
+    per-tenant served/spilled/pruned histograms always sum back to the
+    untagged counters.  ``max_tenants=0`` uses the default static width.
     """
     from repro.core import steering
-    from repro.telemetry.counters import BridgeTelemetry, num_epoch_bins
+    from repro.telemetry.counters import (BridgeTelemetry,
+                                          DEFAULT_MAX_TENANTS,
+                                          num_epoch_bins)
 
     ids = np.asarray(ids)
     rows, r = ids.shape
     n = num_nodes
+    if max_tenants <= 0:
+        max_tenants = DEFAULT_MAX_TENANTS
+    if tenant_ids is None:
+        tenant = np.zeros((rows, r), np.int64)
+    else:
+        tenant = np.asarray(tenant_ids, np.int64).reshape(rows, r)
+    tenant = np.clip(tenant, 0, max_tenants - 1)
     rounds = steering.num_rounds(r, budget, overprovision)
     ab = np.broadcast_to(
         np.asarray(budget if active_budget is None else active_budget,
@@ -141,25 +157,33 @@ def expected_transfer_telemetry(ids, table: MemPortTable,
     epoch_ccw = np.zeros((rows, e), np.int32)
     slot_intra = np.zeros((rows, s), np.int32)
     tier_hops = np.zeros((rows, 2), np.int32)
+    tenant_served = np.zeros((rows, max_tenants), np.int32)
+    tenant_spilled = np.zeros((rows, max_tenants), np.int32)
+    tenant_pruned = np.zeros((rows, max_tenants), np.int32)
     for i in range(rows):
         lim = rounds * int(np.clip(ab[i], 0, budget))
         for j, pid in enumerate(ids[i]):
             if pid < 0 or home_col[pid] < 0:
                 continue  # FREE hole or unmapped page: not a live request
+            t = int(tenant[i, j])
             if j >= lim:
                 spilled[i] += 1
+                tenant_spilled[i, t] += 1
                 continue
             h = int(home_col[pid])
             d = (h - i) % n
             if d == 0:
                 loopback[i] += 1
                 traffic[i, h] += 1
+                tenant_served[i, t] += 1
                 continue
             if not live[d - 1] or rank_epoch[d - 1, i] < 0:
                 pruned[i] += 1
+                tenant_pruned[i, t] += 1
                 continue
             slot_served[i, d - 1] += 1
             traffic[i, h] += 1
+            tenant_served[i, t] += 1
             bins = epoch_cw if off[d - 1] > 0 else epoch_ccw
             bins[i, rank_epoch[d - 1, i]] += 1
             sign = 1 if off[d - 1] > 0 else -1
@@ -175,7 +199,10 @@ def expected_transfer_telemetry(ids, table: MemPortTable,
         traffic=jnp.asarray(traffic), epoch_cw=jnp.asarray(epoch_cw),
         epoch_ccw=jnp.asarray(epoch_ccw),
         slot_intra=jnp.asarray(slot_intra),
-        tier_hops=jnp.asarray(tier_hops))
+        tier_hops=jnp.asarray(tier_hops),
+        tenant_served=jnp.asarray(tenant_served),
+        tenant_spilled=jnp.asarray(tenant_spilled),
+        tenant_pruned=jnp.asarray(tenant_pruned))
 
 
 def push_pages_ref(pool_pages: jnp.ndarray, dest: jnp.ndarray,

@@ -93,12 +93,15 @@ class BridgeStore:
     program: Optional[RouteProgram] = None  # circuit schedule (None = full)
     topology: Optional[Topology] = None     # board + rack fabric (None = flat)
     channels: int = 1           # pipelined round engine depth (1 = serial)
+    tenant_id: int = 0          # telemetry attribution of the store's traffic
+    max_tenants: int = 0        # per-tenant histogram width (0 = default)
 
 
 def create_store(tree: Any, *, mesh: Optional[Mesh], mem_axis: str = "data",
                  page_elems: int = 16_384, budget: int = 8,
                  channels: int = 1, cp: Optional[ControlPlane] = None,
-                 policy: str = "striped", dtype=jnp.float32) -> BridgeStore:
+                 policy: str = "striped", dtype=jnp.float32,
+                 tenant_id: int = 0, max_tenants: int = 0) -> BridgeStore:
     """Allocate a pooled region for ``tree`` and write its initial image.
 
     The control plane's topology rides along: on a board + rack fabric the
@@ -106,6 +109,9 @@ def create_store(tree: Any, *, mesh: Optional[Mesh], mem_axis: str = "data",
     carries per-tier occupancy.  ``channels`` is the store's pipelined
     round-engine depth (a static knob, e.g. from
     :meth:`~repro.core.control_plane.ControlPlane.select_channels`).
+    ``tenant_id`` tags every transfer of the store in the telemetry's
+    per-tenant bins (a training job sharing the pool with serving tenants
+    shows up as its own line in the orchestrator's accounting).
     """
     packer = TreePacker.plan(tree, page_elems)
     n = bridge._mem_axis_size(mesh, mem_axis)
@@ -123,7 +129,8 @@ def create_store(tree: Any, *, mesh: Optional[Mesh], mem_axis: str = "data",
     topo = None if cp.topology.is_flat else cp.topology
     store = BridgeStore(packer, table, pool, mem_axis, budget,
                         table_nodes=cp.num_nodes, program=cp.route_program(),
-                        topology=topo, channels=channels)
+                        topology=topo, channels=channels,
+                        tenant_id=tenant_id, max_tenants=max_tenants)
     return push_tree(store, tree, mesh=mesh)
 
 
@@ -151,7 +158,11 @@ def pull_tree(store: BridgeStore, *, mesh: Optional[Mesh],
                             channels=store.channels, program=store.program,
                             table_nodes=store.table_nodes,
                             collect_telemetry=collect_telemetry,
-                            topology=store.topology)
+                            topology=store.topology,
+                            tenant_ids=(jnp.full(want.shape, store.tenant_id,
+                                                 jnp.int32)
+                                        if collect_telemetry else None),
+                            max_tenants=store.max_tenants)
     telem = None
     if collect_telemetry:
         got, telem = got
@@ -185,7 +196,11 @@ def push_tree(store: BridgeStore, tree: Any, *, mesh: Optional[Mesh],
                              program=store.program,
                              table_nodes=store.table_nodes,
                              collect_telemetry=collect_telemetry,
-                             topology=store.topology)
+                             topology=store.topology,
+                             tenant_ids=(jnp.full((n, per), store.tenant_id,
+                                                  jnp.int32)
+                                         if collect_telemetry else None),
+                             max_tenants=store.max_tenants)
     telem = None
     if collect_telemetry:
         pool, telem = pool

@@ -112,7 +112,10 @@ class ElasticTrainer:
         if self.telemetry is None:
             n = (self.cp.num_nodes if self.cp is not None
                  else int(telem.traffic.shape[-1]))
-            self.telemetry = TelemetryAggregator(n)
+            # Tenant width follows the measurement: a store created with a
+            # wider max_tenants must not trip the aggregator's width check.
+            self.telemetry = TelemetryAggregator(
+                n, max_tenants=telem.max_tenants)
         self.telemetry.update(telem)
 
     def rate_limits(self, static_budget: int):

@@ -32,6 +32,10 @@ def main() -> None:
                          "placements) and print the aggregate")
     ap.add_argument("--channels", type=int, default=1,
                     help="pipelined bridge round-engine depth (1=serial)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="serve the batch as K tenants (sequence b belongs "
+                         "to tenant b %% K); with --telemetry the bridge "
+                         "counters attribute traffic per tenant")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -44,9 +48,15 @@ def main() -> None:
     from repro.models import transformer
     params = transformer.init_params(cfg, jax.random.key(0))
     collect = args.telemetry and args.kv in ("bridge_pull", "bridge_push")
+    if args.tenants < 1:
+        ap.error("--tenants must be >= 1")
+    tenant_of_seq = (np.arange(args.batch) % args.tenants
+                     if args.tenants > 1 else None)
     cache_ops = serve_step_mod.make_cache_ops(
         run, mesh=None, max_len=args.max_len, page_tokens=args.page_tokens,
-        collect_telemetry=collect, dtype=jnp.dtype(cfg.dtype))
+        collect_telemetry=collect, tenant_of_seq=tenant_of_seq,
+        max_tenants=args.tenants if args.tenants > 1 else 0,
+        dtype=jnp.dtype(cfg.dtype))
     enc_out = None
     if cfg.cross_attention:
         enc_out = jnp.asarray(np.random.default_rng(0).normal(
@@ -73,9 +83,16 @@ def main() -> None:
         from repro.telemetry import TelemetryAggregator
         telem = serve_step_mod.collect_state_telemetry(state)
         if telem is not None:
-            agg = TelemetryAggregator(telem.num_nodes)
+            agg = TelemetryAggregator(telem.num_nodes,
+                                      max_tenants=telem.max_tenants)
             agg.update(telem)
             print(agg.describe())
+            if args.tenants > 1:
+                served = np.asarray(telem.tenant_served).sum(0)
+                spilled = np.asarray(telem.tenant_spilled).sum(0)
+                for t in range(args.tenants):
+                    print(f"tenant {t}: served={int(served[t])} pages "
+                          f"spilled={int(spilled[t])}")
             # The closed loop's pipeline-depth pick from measured occupancy
             # (what --channels should be next run).
             cp = ControlPlane(telem.num_nodes, 1, 1)

@@ -1,0 +1,24 @@
+"""repro.orchestrator — multi-tenant, QoS-aware orchestration of the pool.
+
+The layer the paper's closing claim asks for: tenants
+(:mod:`~repro.orchestrator.tenants`), admission control
+(:mod:`~repro.orchestrator.admission`), weighted-fair QoS scheduling
+(:mod:`~repro.orchestrator.scheduler`) and the facade driving the
+:class:`~repro.core.control_plane.ControlPlane` through a measure ->
+re-fit ``step()`` lifecycle (:mod:`~repro.orchestrator.orchestrator`).
+"""
+from repro.orchestrator.admission import (ADMITTED, QUEUED, REJECTED,
+                                          AdmissionController,
+                                          AdmissionDecision, PendingRequest)
+from repro.orchestrator.orchestrator import Orchestrator
+from repro.orchestrator.scheduler import (Schedule, WeightedFairScheduler,
+                                          water_fill)
+from repro.orchestrator.tenants import (QOS_CLASSES, Lease, TenantSpec,
+                                        qos_rank, validate_tenants)
+
+__all__ = [
+    "ADMITTED", "QUEUED", "REJECTED", "AdmissionController",
+    "AdmissionDecision", "PendingRequest", "Orchestrator", "Schedule",
+    "WeightedFairScheduler", "water_fill", "QOS_CLASSES", "Lease",
+    "TenantSpec", "qos_rank", "validate_tenants",
+]

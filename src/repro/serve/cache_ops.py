@@ -74,12 +74,20 @@ class BridgeCacheOps:
     layer's decode state (``st["telem"]``), summed over the layer's bridge
     transfers every step — hardware-style monotonic counters the serving
     loop reads off the returned state and feeds to an aggregator.
+
+    **Tenancy**: ``tenant_of_seq`` (i32[batch]) maps each batch slot to the
+    tenant that owns its sequence; every page the slot pulls or flushes is
+    attributed to that tenant in the telemetry's per-tenant bins, which is
+    how a multi-tenant serving loop feeds the orchestrator's QoS scheduler.
+    A plain python list/array is fine — it is converted once and enters the
+    jitted step as a runtime constant of static shape.
     """
 
     def __init__(self, *, mode: str, max_len: int, page_tokens: int,
                  mesh: Optional[Mesh], mem_axis: str = "data",
                  budget: int = 8, edge_buffer: bool = True,
                  channels: int = 1, collect_telemetry: bool = False,
+                 tenant_of_seq=None, max_tenants: int = 0,
                  dtype=jnp.bfloat16):
         assert mode in ("pull", "push"), mode
         self.mode = mode
@@ -92,6 +100,9 @@ class BridgeCacheOps:
         self.edge_buffer = edge_buffer
         self.channels = channels
         self.collect_telemetry = collect_telemetry
+        self.tenant_of_seq = (None if tenant_of_seq is None
+                              else jnp.asarray(tenant_of_seq, jnp.int32))
+        self.max_tenants = max_tenants
         self.dtype = dtype
 
     # -- shared state: the memport table (a runtime input, reprogrammable) ---
@@ -122,7 +133,10 @@ class BridgeCacheOps:
             tail_k=jnp.zeros(tail, self.dtype),
             tail_v=jnp.zeros(tail, self.dtype))}
         if self.collect_telemetry:
-            st["telem"] = telemetry_counters.zeros(n, leading=(n,))
+            mt = (self.max_tenants
+                  or telemetry_counters.DEFAULT_MAX_TENANTS)
+            st["telem"] = telemetry_counters.zeros(n, leading=(n,),
+                                                   max_tenants=mt)
         return st
 
     def append_and_attend(self, cfg, st, shared, lengths, q, k_new, v_new, *,
@@ -140,7 +154,8 @@ class BridgeCacheOps:
             page_tokens=self.page_tokens, max_pages=self.max_pages,
             mesh=self.mesh, mem_axis=self.mem_axis, budget=self.budget,
             edge_buffer=self.edge_buffer, channels=self.channels,
-            collect_telemetry=collect)
+            collect_telemetry=collect, tenant_of_seq=self.tenant_of_seq,
+            max_tenants=self.max_tenants)
         telem = None
         if collect:
             layer, telem = layer
@@ -151,7 +166,9 @@ class BridgeCacheOps:
                 max_pages=self.max_pages, mesh=self.mesh,
                 mem_axis=self.mem_axis, budget=self.budget,
                 edge_buffer=self.edge_buffer, channels=self.channels,
-                collect_telemetry=collect)
+                collect_telemetry=collect,
+                tenant_of_seq=self.tenant_of_seq,
+                max_tenants=self.max_tenants)
             if collect:
                 att, pull_telem = att
                 telem = telemetry_counters.add(telem, pull_telem)

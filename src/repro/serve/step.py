@@ -16,7 +16,16 @@ from repro.serve.cache_ops import BridgeCacheOps, RingCacheOps
 def make_cache_ops(run: RunConfig, mesh: Optional[Mesh],
                    max_len: int, page_tokens: int = 512,
                    collect_telemetry: bool = False,
+                   tenant_of_seq=None, max_tenants: int = 0,
                    dtype=jnp.bfloat16):
+    """Build the KV-placement ops for a serve step.
+
+    ``tenant_of_seq`` ([batch] tenant ids) threads multi-tenant telemetry
+    attribution into the bridge placements — the per-tenant counters a
+    :class:`~repro.orchestrator.Orchestrator` re-fits its QoS schedule
+    from.  Ignored by the local/ring placements (no bridge traffic to
+    attribute).
+    """
     kp = run.kv_placement
     if kp == "local":
         cfgm = run.model
@@ -33,7 +42,9 @@ def make_cache_ops(run: RunConfig, mesh: Optional[Mesh],
             budget=run.bridge.epoch_budget,
             edge_buffer=run.bridge.edge_buffer,
             channels=run.bridge.channels,
-            collect_telemetry=collect_telemetry, dtype=dtype)
+            collect_telemetry=collect_telemetry,
+            tenant_of_seq=tenant_of_seq, max_tenants=max_tenants,
+            dtype=dtype)
     raise ValueError(kp)
 
 

@@ -18,7 +18,8 @@ from typing import Dict
 
 import numpy as np
 
-from repro.telemetry.counters import BridgeTelemetry, num_epoch_bins
+from repro.telemetry.counters import (BridgeTelemetry, DEFAULT_MAX_TENANTS,
+                                      num_epoch_bins)
 
 
 def dominant_requester(traffic: np.ndarray, home: int) -> tuple[int, float]:
@@ -44,19 +45,24 @@ class TelemetryAggregator:
     * the per-ring-distance **load histogram** (pages over all requesters),
     * per-direction / per-epoch **wire occupancy** (link utilization),
     * per-node **drop counters**: rate-limiter spills and pruned-circuit
-      drops, plus served totals to turn them into rates.
+      drops, plus served totals to turn them into rates,
+    * per-**tenant** served/spill/prune histograms (summed over requesters)
+      — the orchestrator's QoS scheduler re-fits budget shares from the
+      measured per-tenant demand.
 
     ``update`` accepts telemetry whose leading dim is the requester: row i
     is ring node i (N-device path) or logical requester i (loopback path).
     """
 
     def __init__(self, num_nodes: int, page_bytes: int = 0,
-                 alpha: float = 0.25):
+                 alpha: float = 0.25,
+                 max_tenants: int = DEFAULT_MAX_TENANTS):
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
         self.num_nodes = num_nodes
         self.page_bytes = page_bytes
         self.alpha = alpha
+        self.max_tenants = max_tenants
         self.steps = 0
         n, s = num_nodes, max(num_nodes - 1, 0)
         e = num_epoch_bins(n)
@@ -70,11 +76,19 @@ class TelemetryAggregator:
         self.served = np.zeros((n,))
         self.spilled = np.zeros((n,))
         self.pruned = np.zeros((n,))
+        self.tenant_served = np.zeros((max_tenants,))
+        self.tenant_spilled = np.zeros((max_tenants,))
+        self.tenant_pruned = np.zeros((max_tenants,))
         # Raw drops of the most recent update (not EWMA-smoothed): the
         # control plane's censorship guard needs "was the LAST measurement
         # clean", which a decaying average can never answer with zero.
         self.last_spilled = np.zeros((n,))
         self.last_pruned = np.zeros((n,))
+        # Raw per-tenant counters of the most recent update: the scheduler's
+        # work-conserving re-fit keys on the LAST step's demand (served +
+        # spilled), which the EWMA would smear across share changes.
+        self.last_tenant_served = np.zeros((max_tenants,))
+        self.last_tenant_spilled = np.zeros((max_tenants,))
 
     # -- folding --------------------------------------------------------------
     def _fold(self, avg: np.ndarray, new: np.ndarray) -> None:
@@ -114,6 +128,18 @@ class TelemetryAggregator:
                    rowed(telem.loopback_served, ()) + slot.sum(1))
         self._fold(self.spilled, rowed(telem.spilled, ()))
         self._fold(self.pruned, rowed(telem.pruned, ()))
+        t = telem.tenant_served.shape[-1]
+        if t != self.max_tenants:
+            raise ValueError(f"telemetry attributes {t} tenants for a "
+                             f"max_tenants={self.max_tenants} aggregator")
+        ten_served = rowed(telem.tenant_served, (t,)).sum(0)
+        ten_spilled = rowed(telem.tenant_spilled, (t,)).sum(0)
+        self._fold(self.tenant_served, ten_served)
+        self._fold(self.tenant_spilled, ten_spilled)
+        self._fold(self.tenant_pruned,
+                   rowed(telem.tenant_pruned, (t,)).sum(0))
+        self.last_tenant_served = ten_served
+        self.last_tenant_spilled = ten_spilled
         self.last_spilled = rowed(telem.spilled, ())
         self.last_pruned = rowed(telem.pruned, ())
         self.steps += 1
@@ -182,6 +208,29 @@ class TelemetryAggregator:
             return {"board": 0.0, "rack": 0.0}
         return {k: v / total for k, v in th.items()}
 
+    # -- the multi-tenant views (orchestration plane) --------------------------
+    def tenant_pages(self) -> np.ndarray:
+        """EWMA pages served per tenant per step, [max_tenants]."""
+        return self.tenant_served.copy()
+
+    def tenant_bytes(self) -> np.ndarray:
+        return self.tenant_served * self.page_bytes
+
+    def tenant_demand(self) -> np.ndarray:
+        """LAST step's offered load per tenant (served + spilled pages).
+
+        Raw, not EWMA: the scheduler's work-conserving re-fit needs the
+        demand under the *current* share split — a smoothed average would
+        keep crediting a tenant for traffic it stopped offering.
+        """
+        return self.last_tenant_served + self.last_tenant_spilled
+
+    def tenant_spill_rate(self) -> np.ndarray:
+        """Per-tenant fraction of offered pages the rate limiter dropped."""
+        total = self.tenant_served + self.tenant_spilled
+        return np.divide(self.tenant_spilled, total,
+                         out=np.zeros_like(total), where=total > 0)
+
     def spill_rate(self) -> np.ndarray:
         """Per-node fraction of live requests the rate limiter dropped."""
         total = self.served + self.spilled
@@ -211,6 +260,11 @@ class TelemetryAggregator:
                  "  dist pages: " + " ".join(
                      f"d{d}={p:.1f}" for d, p in
                      enumerate(self.dist_pages, start=1) if p > 0)]
+        if self.tenant_served.sum() + self.tenant_spilled.sum() > 0:
+            lines.append("  tenants: " + " ".join(
+                f"t{t}={s:.1f}/{sp:.1f}sp" for t, (s, sp) in
+                enumerate(zip(self.tenant_served, self.tenant_spilled))
+                if s + sp > 0))
         for i in range(self.num_nodes):
             lines.append(
                 f"  node {i}: served={self.served[i]:.1f} "

@@ -30,10 +30,23 @@ Counter semantics for one requester's (padded) request list:
   the epoch the program assigns *this requester*), and the **per-tier**
   occupancy: intra-board pages per slot plus board / rack page-hops under
   the :mod:`repro.core.topology` realization contract.
+
+**Tenant attribution** (the orchestration plane): every request may carry a
+tenant id in a parallel lane (``pull_pages`` / ``push_pages``
+``tenant_ids=``), and each counter outcome — served, spilled, pruned — is
+additionally binned per tenant into static ``[max_tenants]`` histograms.
+The lane is a *runtime input* with the same shape as the request list, so
+swapping tenant shares / window compositions between steps never retraces;
+no lane means every request belongs to tenant 0, which keeps the per-tenant
+sums reconciling exactly with the untagged counters in all cases:
+
+    tenant_served.sum(-1) == served_total()
+    tenant_spilled.sum(-1) == spilled;  tenant_pruned.sum(-1) == pruned
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +60,13 @@ def num_epoch_bins(num_nodes: int) -> int:
     """Static epoch-histogram length: a hierarchical schedule uses at most
     (G-1) intra epochs + (N-1) gateway epochs <= 2(N-1)."""
     return 2 * max(num_nodes - 1, 0)
+
+
+#: Default static width of the per-tenant attribution histograms.  Like
+#: ``budget`` this is a compile-time knob: deployments expecting more
+#: concurrent tenants pass a larger ``max_tenants`` once; *which* tenant
+#: owns which request stays a runtime lane value.
+DEFAULT_MAX_TENANTS = 4
 
 
 @jax.tree_util.register_dataclass
@@ -77,6 +97,11 @@ class BridgeTelemetry:
       tier_hops:        [..., 2] page-hops per tier (board, rack) under the
                         topology's path realization — per-tier wire
                         occupancy.
+      tenant_served:    pages served per tenant (loopback + circuit; the
+                        tenant-id request lane bins them, absent lane = all
+                        tenant 0).
+      tenant_spilled:   rate-limiter drops per tenant.
+      tenant_pruned:    pruned-circuit drops per tenant.
     """
 
     slot_served: jax.Array      # i32[..., N-1]
@@ -88,10 +113,17 @@ class BridgeTelemetry:
     epoch_ccw: jax.Array        # i32[..., 2(N-1)]
     slot_intra: jax.Array       # i32[..., N-1]
     tier_hops: jax.Array        # i32[..., 2]
+    tenant_served: jax.Array    # i32[..., max_tenants]
+    tenant_spilled: jax.Array   # i32[..., max_tenants]
+    tenant_pruned: jax.Array    # i32[..., max_tenants]
 
     @property
     def num_nodes(self) -> int:
         return self.traffic.shape[-1]
+
+    @property
+    def max_tenants(self) -> int:
+        return self.tenant_served.shape[-1]
 
     def served_total(self) -> jax.Array:
         """Pages served per requester (loopback + all circuit slots)."""
@@ -110,8 +142,13 @@ class BridgeTelemetry:
         intra = self.slot_intra.sum(-1)
         return intra, self.slot_served.sum(-1) - intra
 
+    def tenant_bytes(self, page_bytes: int) -> jax.Array:
+        """Per-tenant wire+loopback bytes (static page size x served)."""
+        return self.tenant_served * page_bytes
 
-def zeros(num_nodes: int, leading: tuple[int, ...] = ()) -> BridgeTelemetry:
+
+def zeros(num_nodes: int, leading: tuple[int, ...] = (),
+          max_tenants: int = DEFAULT_MAX_TENANTS) -> BridgeTelemetry:
     """All-zero telemetry for an N-node ring (accumulator seed)."""
     s = max(num_nodes - 1, 0)
     e = num_epoch_bins(num_nodes)
@@ -119,7 +156,9 @@ def zeros(num_nodes: int, leading: tuple[int, ...] = ()) -> BridgeTelemetry:
     return BridgeTelemetry(slot_served=z(s), loopback_served=z(),
                            spilled=z(), pruned=z(), traffic=z(num_nodes),
                            epoch_cw=z(e), epoch_ccw=z(e), slot_intra=z(s),
-                           tier_hops=z(2))
+                           tier_hops=z(2), tenant_served=z(max_tenants),
+                           tenant_spilled=z(max_tenants),
+                           tenant_pruned=z(max_tenants))
 
 
 def add(a: BridgeTelemetry, b: BridgeTelemetry) -> BridgeTelemetry:
@@ -127,10 +166,20 @@ def add(a: BridgeTelemetry, b: BridgeTelemetry) -> BridgeTelemetry:
     return jax.tree.map(jnp.add, a, b)
 
 
+def _tenant_bins(tenant: jax.Array, mask: jax.Array,
+                 max_tenants: int) -> jax.Array:
+    """i32[max_tenants]: count of ``mask`` requests per (clipped) tenant."""
+    return jnp.zeros((max_tenants,), jnp.int32).at[
+        jnp.where(mask, tenant, max_tenants)].add(1, mode="drop")
+
+
 def transfer_telemetry(ids: jax.Array, table: MemPortTable,
                        program: RouteProgram, active_budget: jax.Array, *,
                        my, num_nodes: int, budget: int, rounds: int,
-                       topo: TopoTables, num_groups: int) -> BridgeTelemetry:
+                       topo: TopoTables, num_groups: int,
+                       tenant_ids: Optional[jax.Array] = None,
+                       max_tenants: int = DEFAULT_MAX_TENANTS
+                       ) -> BridgeTelemetry:
     """Counters for one requester's padded request list (pull or push).
 
     Pure jnp — runs inside the ``shard_map`` body (``my`` = axis index) and,
@@ -145,13 +194,23 @@ def transfer_telemetry(ids: jax.Array, table: MemPortTable,
       rounds: static round count the transfer was compiled for.
       topo: the (static) topology tables classifying each pair's tier and
         hop counts; ``num_groups`` the rack-ring length.
+      tenant_ids: [rounds * budget] tenant-id lane aligned with ``ids``
+        (None = all tenant 0); ids clip into [0, max_tenants) so every
+        counted request is attributed somewhere and the per-tenant sums
+        reconcile with the untagged counters.
+      max_tenants: static width of the tenant histograms.
     """
     ids = ids.reshape(-1)
+    if tenant_ids is None:
+        tenant_ids = jnp.zeros_like(ids)
+    tenant = jnp.clip(tenant_ids.reshape(-1), 0, max_tenants - 1)
     home, _ = table.translate(ids)
     live = (ids >= 0) & (home >= 0)
     ab = jnp.clip(jnp.asarray(active_budget), 0, budget)
     in_window = jnp.arange(ids.shape[0]) < rounds * ab
-    spilled = jnp.sum(live & ~in_window).astype(jnp.int32)
+    spill_mask = live & ~in_window
+    spilled = jnp.sum(spill_mask).astype(jnp.int32)
+    tenant_spilled = _tenant_bins(tenant, spill_mask, max_tenants)
 
     cand = live & in_window
     dist = jnp.mod(home - my, num_nodes)
@@ -169,7 +228,12 @@ def transfer_telemetry(ids: jax.Array, table: MemPortTable,
                                pruned=jnp.int32(0), traffic=traffic,
                                epoch_cw=empty, epoch_ccw=empty,
                                slot_intra=empty,
-                               tier_hops=jnp.zeros((2,), jnp.int32))
+                               tier_hops=jnp.zeros((2,), jnp.int32),
+                               tenant_served=_tenant_bins(
+                                   tenant, is_loop, max_tenants),
+                               tenant_spilled=tenant_spilled,
+                               tenant_pruned=jnp.zeros((max_tenants,),
+                                                       jnp.int32))
 
     slot = jnp.clip(dist - 1, 0, nslots - 1)
     remote = cand & (dist > 0)
@@ -177,7 +241,8 @@ def transfer_telemetry(ids: jax.Array, table: MemPortTable,
     # the program's group mask must wire it for THIS requester rank.
     rank_wired = program.live & (program.rank_epoch[:, my] >= 0)
     wired = remote & rank_wired[slot]
-    pruned = jnp.sum(remote & ~rank_wired[slot]).astype(jnp.int32)
+    prune_mask = remote & ~rank_wired[slot]
+    pruned = jnp.sum(prune_mask).astype(jnp.int32)
     slot_served = jnp.zeros((nslots,), jnp.int32).at[
         jnp.where(wired, slot, nslots)].add(1, mode="drop")
     served = is_loop | wired
@@ -206,4 +271,9 @@ def transfer_telemetry(ids: jax.Array, table: MemPortTable,
                            loopback_served=loopback_served, spilled=spilled,
                            pruned=pruned, traffic=traffic,
                            epoch_cw=epoch_cw, epoch_ccw=epoch_ccw,
-                           slot_intra=slot_intra, tier_hops=tier_hops)
+                           slot_intra=slot_intra, tier_hops=tier_hops,
+                           tenant_served=_tenant_bins(tenant, served,
+                                                      max_tenants),
+                           tenant_spilled=tenant_spilled,
+                           tenant_pruned=_tenant_bins(tenant, prune_mask,
+                                                      max_tenants))

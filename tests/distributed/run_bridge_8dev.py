@@ -24,7 +24,8 @@ from repro.telemetry import TelemetryAggregator  # noqa: E402
 
 TELEM_FIELDS = ("slot_served", "loopback_served", "spilled", "pruned",
                 "traffic", "epoch_cw", "epoch_ccw", "slot_intra",
-                "tier_hops")
+                "tier_hops", "tenant_served", "tenant_spilled",
+                "tenant_pruned")
 
 
 def check(name, got, exp, atol=1e-5):

@@ -13,13 +13,15 @@ import numpy as np
 from repro.core import steering
 from repro.core.memport import MemPortTable
 from repro.core.topology import Topology
-from repro.telemetry.counters import BridgeTelemetry, num_epoch_bins
+from repro.telemetry.counters import (BridgeTelemetry, DEFAULT_MAX_TENANTS,
+                                      num_epoch_bins)
 
 #: Every BridgeTelemetry leaf, in dataclass order — keep in sync with
 #: repro.telemetry.counters (assert_telem_equal walks all of them).
 TELEM_FIELDS = ("slot_served", "loopback_served", "spilled", "pruned",
                 "traffic", "epoch_cw", "epoch_ccw", "slot_intra",
-                "tier_hops")
+                "tier_hops", "tenant_served", "tenant_spilled",
+                "tenant_pruned")
 
 
 def make_pool(num_slots, page, seed=0):
@@ -72,14 +74,24 @@ def fake_telem(n, traffic_rows, spilled=None) -> BridgeTelemetry:
         tgt = cw if off[k] > 0 else ccw
         tgt[:, ep[k]] += slot[:, k]
         tier[:, 0] += slot[:, k] * hops[k]
+    # Tenant attribution with no lane: everything belongs to tenant 0.
+    sp = (np.zeros((rows,), np.int32) if spilled is None
+          else np.asarray(spilled, np.int32))
+    ten_served = np.zeros((rows, DEFAULT_MAX_TENANTS), np.int32)
+    ten_served[:, 0] = loop + slot.sum(1)
+    ten_spilled = np.zeros((rows, DEFAULT_MAX_TENANTS), np.int32)
+    ten_spilled[:, 0] = sp
     return BridgeTelemetry(
         slot_served=jnp.asarray(slot), loopback_served=jnp.asarray(loop),
-        spilled=jnp.asarray(np.zeros((rows,), np.int32) if spilled is None
-                            else np.asarray(spilled, np.int32)),
+        spilled=jnp.asarray(sp),
         pruned=jnp.asarray(np.zeros((rows,), np.int32)),
         traffic=jnp.asarray(traffic_rows),
         epoch_cw=jnp.asarray(cw), epoch_ccw=jnp.asarray(ccw),
-        slot_intra=jnp.asarray(slot), tier_hops=jnp.asarray(tier))
+        slot_intra=jnp.asarray(slot), tier_hops=jnp.asarray(tier),
+        tenant_served=jnp.asarray(ten_served),
+        tenant_spilled=jnp.asarray(ten_spilled),
+        tenant_pruned=jnp.asarray(
+            np.zeros((rows, DEFAULT_MAX_TENANTS), np.int32)))
 
 
 def random_fabric(rng, min_groups=1, max_groups=4, min_size=2,
