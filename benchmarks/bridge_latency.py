@@ -17,8 +17,16 @@ recorded against the static bidirectional split's.
 
 The ``pipeline`` section sweeps the pipelined multi-channel round engine
 (``channels``): modeled round latency per depth, real-datapath wall-clock
-per depth on an 8-device ring when one exists, and the control plane's
-telemetry-driven depth pick at a wire-bound and a latency-bound page size.
+per depth on an 8-device ring when one exists (fused and unfused engines
+both, plus a normalized ``model_vs_measured_error`` record), and the
+control plane's telemetry-driven depth pick at a wire-bound and a
+latency-bound page size.
+
+The ``fused`` section times the fused Pallas datapath against the unfused
+ppermute-chain escape hatch at the wire-bound (256 KiB) and latency-bound
+(4 KiB) page sizes and counts copies/collectives in both lowered HLO
+programs; it is also written standalone to ``BENCH_fused_compare.json``
+(the CI comparison artifact).
 
 The ``tenancy`` section co-locates an interactive decode tenant with a
 batch-pull noisy neighbour through ``repro.orchestrator``: the same offered
@@ -38,11 +46,15 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks import hlo_analysis  # noqa: E402
 
 from repro.core import bridge, perfmodel, ref, steering
 from repro.core.control_plane import ControlPlane
@@ -52,6 +64,9 @@ from repro.orchestrator import Orchestrator, TenantSpec
 from repro.telemetry import TelemetryAggregator
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
+# Standalone fused-vs-unfused comparison record (CI uploads it next to
+# BENCH_bridge.json so the fused-datapath claim is a first-class artifact).
+FUSED_JSON = BENCH_JSON.with_name("BENCH_fused_compare.json")
 
 # Route-program comparison geometry: an 8-node mem ring moving 256 KiB pages
 # in rounds of 8; "pruned" keeps the three distances a blocked/affinity
@@ -75,6 +90,10 @@ HIER_FABRICS = {"8": (2, 4), "16": (4, 4), "32": (4, 8)}
 # latency-bound (4 KiB) page size.
 PIPELINE_CHANNELS = (1, 2, 4, 8)
 SMALL_PAGE_BYTES = 4096
+
+# Fused-vs-unfused epoch comparison geometry: the wire-bound (256 KiB) and
+# latency-bound (4 KiB) page sizes of the control plane's two regimes.
+FUSED_PAGE_SIZES = {"256KiB": 1 << 18, "4KiB": SMALL_PAGE_BYTES}
 # Intra-board-heavy traffic: pages pulled from each board mate at local
 # ring delta 1/2/3+ (hotspot locality *within* the board).
 INTRA_PAGES = {1: 6, 2: 3, 3: 2}
@@ -214,19 +233,114 @@ def pipeline_sweep(agg: TelemetryAggregator, cp: ControlPlane,
         want = jnp.asarray(
             rng.integers(0, n * ppn, size=(n, 16)).astype(np.int32))
         reps = 3 if quick else 30
-        measured = {}
+        measured: dict = {}
+        measured_unfused: dict = {}
         with bridge.use_mesh(mesh):
             for c in PIPELINE_CHANNELS:
-                pull = jax.jit(lambda p, w, t, _c=c: bridge.pull_pages(
-                    p, w, t, mesh=mesh, budget=ROUTE_BUDGET, channels=_c))
-                jax.block_until_ready(pull(pool, want, table))
-                t0 = time.perf_counter()
-                for _ in range(reps):
-                    r = pull(pool, want, table)
-                jax.block_until_ready(r)
-                measured[str(c)] = round(
-                    (time.perf_counter() - t0) / reps * 1e6, 1)
+                for fused, acc in ((True, measured),
+                                   (False, measured_unfused)):
+                    pull = jax.jit(
+                        lambda p, w, t, _c=c, _f=fused: bridge.pull_pages(
+                            p, w, t, mesh=mesh, budget=ROUTE_BUDGET,
+                            channels=_c, fused=_f))
+                    jax.block_until_ready(pull(pool, want, table))
+                    t0 = time.perf_counter()
+                    for _ in range(reps):
+                        r = pull(pool, want, table)
+                    jax.block_until_ready(r)
+                    acc[str(c)] = round(
+                        (time.perf_counter() - t0) / reps * 1e6, 1)
         out["measured_us_per_call"] = measured
+        out["measured_unfused_us_per_call"] = measured_unfused
+        # Model-vs-measured shape error: both sweeps normalized to their
+        # serial (channels=1) point, so the record tracks whether deeper
+        # pipelines *scale* the way the model says they should — the PR 4
+        # regression (measured wall-clock growing with depth while the
+        # model predicts a mild win) shows up here as a large error, and
+        # validate_bench.py bands the fused sweep itself.
+        err = {str(c): round(abs(
+            measured[str(c)] / measured["1"]
+            - model[str(c)] / model["1"]), 3) for c in PIPELINE_CHANNELS}
+        err["mean"] = round(sum(err.values()) / len(err), 3)
+        out["model_vs_measured_error"] = err
+    return out
+
+
+def fused_section(quick: bool = False) -> dict:
+    """Fused vs unfused epoch wall-clock + lowered-datapath op counts.
+
+    Times one jitted ``pull_pages`` epoch (2 rounds of budget 8) on the
+    real 8-device ring with the fused Pallas datapath on and off, at the
+    wire-bound (256 KiB) and latency-bound (4 KiB) page sizes.  Acceptance
+    (validate_bench.py): fused beats unfused at **both** sizes — the fused
+    engine collapses each round's 2*(N-1)*channels steering collectives
+    to at most N (one request all_gather plus the payload exchange: an
+    all_to_all on TPU, a ppermute hop per slot off-TPU) and drops the
+    per-slot mask->gather->commit chain, so its win must not depend on
+    the wire-bound regime.
+
+    Methodology: the emulated ring timeshares one host (CI runs on a
+    single core), so back-to-back config sweeps drift by double-digit
+    percentages and whichever engine runs first in a fixed rotation eats a
+    positional penalty (allocator/cache state left by the previous cycle).
+    Each page size therefore times the two engines as interleaved pairs
+    with the order flipped every repetition (ABBA) and records the
+    per-engine **median** — ambient drift and the positional bias cancel
+    instead of deciding the gate.  The ``hlo`` block counts intermediate
+    ``copy`` ops and collectives in both lowered programs
+    (benchmarks/hlo_analysis.py), making the dispatch-overhead claim
+    inspectable rather than inferred.
+    """
+    n, ppn = ROUTE_NODES, 16
+    out: dict = {"source": "model-only", "page_sweep": {}}
+    if jax.device_count() < n:
+        return out
+    out["source"] = f"{n}-device ring"
+    mesh = jax.make_mesh((n,), ("data",))
+    rng = np.random.default_rng(11)
+    table = MemPortTable.striped(n * ppn, n, ppn)
+    want = jnp.asarray(
+        rng.integers(0, n * ppn, size=(n, 16)).astype(np.int32))
+    reps = 10 if quick else 24
+    with bridge.use_mesh(mesh):
+        for label, page_bytes in FUSED_PAGE_SIZES.items():
+            pool = jnp.asarray(rng.normal(
+                size=(n * ppn, page_bytes // 4)).astype(np.float32))
+            entry: dict = {"page_bytes": page_bytes}
+            pulls, samples = {}, {}
+            for fused in (True, False):
+                pulls[fused] = jax.jit(
+                    lambda p, w, t, _f=fused: bridge.pull_pages(
+                        p, w, t, mesh=mesh, budget=ROUTE_BUDGET, fused=_f))
+                jax.block_until_ready(pulls[fused](pool, want, table))
+                samples[fused] = []
+            for rep in range(reps):
+                order = (True, False) if rep % 2 == 0 else (False, True)
+                for fused in order:
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(pulls[fused](pool, want, table))
+                    samples[fused].append(time.perf_counter() - t0)
+            entry["fused_us"] = round(
+                float(np.median(samples[True])) * 1e6, 1)
+            entry["unfused_us"] = round(
+                float(np.median(samples[False])) * 1e6, 1)
+            entry["speedup"] = round(entry["unfused_us"]
+                                     / max(entry["fused_us"], 1e-9), 2)
+            out["page_sweep"][label] = entry
+        # Lowered-HLO structure at the latency-bound size (where dispatch
+        # and copy overhead, not wire bytes, decide the epoch time).
+        pool = jnp.asarray(rng.normal(
+            size=(n * ppn, SMALL_PAGE_BYTES // 4)).astype(np.float32))
+        hlo = {}
+        for fused, key in ((True, "fused"), (False, "unfused")):
+            text = jax.jit(lambda p, w, t, _f=fused: bridge.pull_pages(
+                p, w, t, mesh=mesh, budget=ROUTE_BUDGET, fused=_f)).lower(
+                    pool, want, table).compile().as_text()
+            hlo[f"{key}_copies"] = hlo_analysis.count_ops(text, "copy")
+            hlo[f"{key}_collectives"] = sum(
+                hlo_analysis.count_ops(text, c)
+                for c in hlo_analysis.COLLECTIVES)
+        out["hlo"] = hlo
     return out
 
 
@@ -522,6 +636,17 @@ def rows(quick: bool = False) -> list[str]:
     out.append(
         f"bridge_pipeline_sweep,0,source={pipe['source']} {sweep}"
         f" picks={pipe['selected_channels']}")
+    # fused vs unfused epoch wall-clock (the Pallas datapath claim)
+    fus = fused_section(quick=quick)
+    bench["fused"] = fus
+    FUSED_JSON.write_text(json.dumps(fus, indent=2) + "\n")
+    if fus["page_sweep"]:
+        cmp_str = " ".join(
+            f"{label}:{e['fused_us']}us_vs_{e['unfused_us']}us"
+            f"(x{e['speedup']})" for label, e in fus["page_sweep"].items())
+        out.append(f"bridge_fused_epoch,0,source={fus['source']} {cmp_str}")
+    else:
+        out.append(f"bridge_fused_epoch,0,source={fus['source']}")
     # flat ring vs board + rack fabric (8 real endpoints, 16/32 simulated)
     bench["hierarchical"] = {}
     for label, (boards, size) in HIER_FABRICS.items():

@@ -293,5 +293,14 @@ def analyze(text: str) -> HloStats:
     return stats
 
 
+def count_ops(text: str, opcode: str) -> int:
+    """Count instructions whose opcode starts with ``opcode``, across every
+    computation (fusion bodies included).  Used by the bench suite to flag
+    intermediate ``copy`` ops and collective counts in lowered datapaths."""
+    comps = parse_hlo(text)
+    return sum(1 for comp in comps.values() for ins in comp.instructions
+               if ins.opcode.startswith(opcode))
+
+
 def analyze_compiled(compiled) -> HloStats:
     return analyze(compiled.as_text())

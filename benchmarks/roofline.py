@@ -19,6 +19,37 @@ def load(mesh: str = "1pod") -> list[dict]:
     return recs
 
 
+def fused_bridge_rows() -> list[str]:
+    """Analytic bytes/flop of the fused bridge kernels (BENCH geometry).
+
+    The serve/gather/commit pair (kernels/bridge_gather.py) is pure data
+    movement — per round it reads and writes each of the L in-flight lanes'
+    pages once on each side of the wire, zero FLOPs, so its roofline point
+    sits on the memory axis: the epoch is won or lost on dispatch and copy
+    elimination, which is exactly what the fused pallas_call removes (see
+    BENCH_bridge.json's ``fused`` section for the measured confirmation).
+    The streaming decode-attention kernel (kernels/bridge_attention.py)
+    does 4*T*hd FLOPs per head-lane visit over a (T, kv, hd) f32 page pair
+    read once — its bytes/flop shows it compute-dense enough that folding
+    it into the pull loop costs no memory-bound slack.
+    """
+    page_bytes = 1 << 18
+    lanes = 8
+    gather_bytes = 2 * 2 * lanes * page_bytes  # rd+wr, gather + commit
+    out = [
+        f"roofline_fused_bridge_gather,0,bytes/round={gather_bytes} "
+        f"flops=0 pure_movement (L={lanes} x {page_bytes >> 10}KiB pages, "
+        f"rd+wr both kernels)"]
+    t, kv, hd, h = 4, 2, 16, 8
+    flops = 4 * t * hd * h          # qk^T + pv per head over one page pair
+    bytes_ = 2 * t * kv * hd * 4    # k + v page read once (f32)
+    out.append(
+        f"roofline_fused_stream_attn,0,bytes/lane={bytes_} "
+        f"flops/lane={flops} bytes_per_flop={bytes_ / flops:.2f} "
+        f"(T={t} kv={kv} hd={hd} H={h})")
+    return out
+
+
 def rows(mesh: str = "1pod") -> list[str]:
     out = []
     for r in load(mesh):
@@ -58,7 +89,7 @@ def markdown_table(mesh: str = "1pod") -> str:
 
 
 def run() -> list[str]:
-    return rows("1pod")
+    return rows("1pod") + fused_bridge_rows()
 
 
 if __name__ == "__main__":

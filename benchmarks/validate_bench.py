@@ -20,7 +20,8 @@ import sys
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
 
 TOP_KEYS = {"sw_pull_1page_us", "num_nodes", "page_bytes", "budget",
-            "variants", "measured", "hierarchical", "pipeline", "tenancy"}
+            "variants", "measured", "hierarchical", "pipeline", "tenancy",
+            "fused"}
 VARIANTS = {"unidirectional", "bidirectional", "pruned", "load_balanced"}
 VARIANT_KEYS = {"epochs", "live_slots", "total_hops", "bytes_per_round",
                 "model_round_us", "model_round_us_bufferless"}
@@ -44,6 +45,12 @@ TENANCY_TENANTS = {"interactive", "batch"}
 # must keep the interactive tenant's completion latency within 1.5x of its
 # solo run (the naive FIFO composition has no such bound and must be worse).
 TENANCY_ISOLATION_BOUND = 1.5
+# Measured pipeline-sweep band: with the fused datapath the per-round
+# collective count no longer scales with channels, so deeper pipelines may
+# cost at most this factor over the serial engine's wall-clock (dispatch
+# jitter allowance) — the PR 4 regression was a 3.3x monotonic blow-up.
+MEASURED_SWEEP_BAND = 1.35
+FUSED_PAGE_SIZES = {"256KiB", "4KiB"}
 
 
 def fail(msg: str) -> None:
@@ -121,10 +128,12 @@ def main() -> None:
     if not sweep["4"] <= sweep["1"]:
         fail(f"pipelined ({sweep['4']}us) above serial ({sweep['1']}us)")
     # Wall-clock sweep (present when the bench ran on a real 8-device
-    # ring): schema-checked only.  The host-CPU ring emulates ppermute
-    # synchronously, so nothing can overlap there and the measured numbers
-    # track per-op dispatch, not wire behavior — gating on them would fail
-    # every CI run for reasons the model (the acceptance bar) rules out.
+    # ring): with the fused datapath this is an acceptance bar, not just a
+    # schema check.  The fused engine issues one collective pair per round
+    # regardless of depth, so the measured epoch time must stay inside a
+    # tolerance band of the serial engine's at every channels > 1 — a
+    # dispatch-overhead regression (the unfused engines' 37ms -> 121ms
+    # monotonic blow-up from channels 1 -> 8) fails CI here.
     if "measured_us_per_call" in pipe:
         mus = pipe["measured_us_per_call"]
         gone = PIPELINE_CHANNELS - mus.keys()
@@ -134,6 +143,40 @@ def main() -> None:
                if not isinstance(mus[c], (int, float))]
         if bad:
             fail(f"pipeline measured sweep non-numeric depths {sorted(bad)}")
+        band = MEASURED_SWEEP_BAND * mus["1"]
+        over = {c: mus[c] for c in PIPELINE_CHANNELS if mus[c] > band}
+        if over:
+            fail(f"measured pipeline sweep regresses with depth: {over} "
+                 f"above {MEASURED_SWEEP_BAND}x the serial engine's "
+                 f"{mus['1']}us — per-round dispatch is scaling with "
+                 f"channels again")
+        if "model_vs_measured_error" not in pipe:
+            fail("pipeline measured sweep missing model_vs_measured_error")
+        err = pipe["model_vs_measured_error"]
+        bad = [k for k in set(PIPELINE_CHANNELS) | {"mean"}
+               if not isinstance(err.get(k), (int, float))]
+        if bad:
+            fail(f"model_vs_measured_error non-numeric keys {sorted(bad)}")
+    # Fused-vs-unfused epoch comparison: when measured on a real ring, the
+    # fused Pallas datapath must beat the unfused chain at both the
+    # wire-bound and the latency-bound page size.
+    fus = bench["fused"]
+    if "page_sweep" not in fus or "source" not in fus:
+        fail("fused section missing page_sweep/source")
+    if fus["page_sweep"]:
+        gone = FUSED_PAGE_SIZES - fus["page_sweep"].keys()
+        if gone:
+            fail(f"fused page sweep missing sizes {sorted(gone)}")
+        for label, e in fus["page_sweep"].items():
+            bad = [k for k in ("fused_us", "unfused_us", "speedup")
+                   if not isinstance(e.get(k), (int, float))]
+            if bad:
+                fail(f"fused {label!r} non-numeric keys {bad}")
+            if not e["fused_us"] < e["unfused_us"]:
+                fail(f"fused epoch at {label} ({e['fused_us']}us) not "
+                     f"below unfused ({e['unfused_us']}us)")
+    elif "ring" in fus["source"]:
+        fail("fused section measured on a ring but has no page sweep")
     ten = bench["tenancy"]
     gone = TENANCY_KEYS - ten.keys()
     if gone:
@@ -161,7 +204,13 @@ def main() -> None:
     if ten["tenant_served"]["interactive"] <= 0:
         fail("tenancy: interactive tenant served no pages")
     h8 = hier["8"]
-    print(f"BENCH_bridge.json ok: {len(bench['variants'])} variants, "
+    if fus["page_sweep"]:
+        fstr = ", fused " + " ".join(
+            f"{lbl} x{e['speedup']}" for lbl, e in fus["page_sweep"].items())
+    else:
+        fstr = ""
+    print(f"BENCH_bridge.json ok:{fstr}\n  "
+          f"{len(bench['variants'])} variants, "
           f"measured {m['source']}: static {m['static_bidirectional_us']}us "
           f"-> load-balanced {m['load_balanced_us']}us; hierarchical 2x4 "
           f"{h8['flat_bidirectional_us']}us -> {h8['hierarchical_us']}us; "

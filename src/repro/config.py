@@ -205,6 +205,10 @@ class BridgeConfig:
     channels: int = 1                 # pipelined round-engine depth (1=serial;
                                       # >1 overlaps request/data flits across
                                       # round chunks, bit-exact results)
+    fused: bool = True                # fused Pallas datapath: one kernel pair
+                                      # + one collective pair per round
+                                      # (bit-exact; False = unfused ppermute
+                                      # chain escape hatch)
     mem_axis: str = "data"            # mesh axis hosting the memory pool
     # modelled hardware (perfmodel): paper values and TPU projection
     link_gbps: float = 10.0           # paper prototype: 10G Aurora

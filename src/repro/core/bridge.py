@@ -46,6 +46,24 @@ This is the paper's datapath (Fig. 1) mapped onto a TPU pod:
   buffers to hold overlapped flits, so it always runs serial;
 * *lossless, no ack/retx* — ICI collectives are lossless and deterministic,
   so the assumption holds natively;
+* *fused datapath* — ``fused=True`` (the default) replaces the per-slot
+  mask → dynamic-slice gather → payload-commit op chain *and* the
+  2·(N-1)·channels ``ppermute`` ladder with one epoch-batched engine: per
+  round, one ``all_gather`` broadcasts every node's request window, the
+  Pallas gather kernel (:func:`repro.kernels.bridge_gather.gather_pages`)
+  serves all slots from the local pool shard, the payloads return through
+  the exchange lowering picked by :func:`_fused_exchange_mode` (one
+  ``all_to_all`` on TPU; one backward ``ppermute`` hop per slot off-TPU,
+  where XLA's all-to-all emulation is copy-pathological), and the round
+  commits without a per-slot select chain
+  (:func:`~repro.kernels.bridge_gather.pull_commit` /
+  :func:`~repro.kernels.bridge_gather.push_commit`, pool buffer donated
+  via ``input_output_aliases``; an add-tree over the landed rows in
+  ladder mode) — serve conditions, gather and commit fused exactly as the
+  paper couples the transceiver datapath to the circuit network.  Pages
+  and telemetry are bit-exact vs ``fused=False`` (the unfused chain stays
+  as the escape hatch, and a bufferless bridge always runs the unfused
+  serial engine — serialization barriers are the point there);
 * *in-band telemetry* — ``collect_telemetry=True`` additionally returns a
   :class:`~repro.telemetry.counters.BridgeTelemetry` of per-slot served
   counts, spills, pruned drops and a traffic-matrix row, computed as masked
@@ -74,6 +92,7 @@ from repro.core import ref as _ref
 from repro.core import steering
 from repro.core.steering import RouteProgram
 from repro.core.topology import Topology, TopoTables
+from repro.kernels import bridge_gather as _bg
 from repro.telemetry import counters as _telemetry
 
 
@@ -263,7 +282,8 @@ def _reassemble(chunks: jax.Array, want_len: int, lanes_per_round: int,
 def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
                 active_budget: jax.Array, program: RouteProgram, *, axis: str,
                 num_nodes: int, budget: int, rounds: int,
-                edge_buffer: bool, channels: int = 1) -> jax.Array:
+                edge_buffer: bool, channels: int = 1,
+                fused: bool = False) -> jax.Array:
     """Pull ``want`` pages ([rounds*budget], FREE-padded) through the bridge.
 
     Returns [want.shape[0], *page_shape]; requests the rate limiter never
@@ -272,6 +292,12 @@ def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
     ``channels > 1`` runs the pipelined multi-channel engine (see the
     module docstring); 1 is the serial engine.  A bufferless bridge or a
     1-node ring has nothing to overlap — both always run serial.
+
+    ``fused`` runs the epoch-batched fused engine instead
+    (:func:`_pull_local_fused`): one collective pair + one Pallas kernel
+    pair per round, bit-exact vs both unfused engines.  A bufferless
+    bridge has no edge buffers to land a whole round's flits in, so it
+    always runs the unfused serial engine.
     """
     want = want.reshape(-1)
     page_shape = pool_local.shape[1:]
@@ -283,6 +309,11 @@ def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
     # ``active_budget`` would walk ``ptr`` past the final round's window and
     # make ``dynamic_slice`` silently re-serve tail requests.
     active_budget = jnp.clip(active_budget, 0, budget)
+    if fused and num_nodes > 1 and edge_buffer:
+        return _pull_local_fused(
+            pool_local, want, table, active_budget, program, axis=axis,
+            num_nodes=num_nodes, budget=budget, rounds=rounds,
+            channels=channels)
     pipelined = channels > 1 and num_nodes > 1 and edge_buffer
 
     if not pipelined:
@@ -297,10 +328,10 @@ def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
                             & (ptr + lane < want.shape[0]), sub, FREE)
             out = _round_pull(pool_local, sub, table, program, axis,
                               num_nodes, edge_buffer)
-            return ptr + active_budget, (out, sub)
+            return ptr + active_budget, out
 
         ptr0 = _pvary(jnp.int32(0), axis)
-        _, (chunks, _) = jax.lax.scan(body, ptr0, None, length=rounds)
+        _, chunks = jax.lax.scan(body, ptr0, None, length=rounds)
         return _reassemble(chunks.reshape(rounds * budget, *page_shape),
                            want.shape[0], budget, active_budget, page_shape,
                            pool_local.dtype)
@@ -350,6 +381,228 @@ def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
                        page_shape, pool_local.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Fused round engine (Pallas datapath kernels + epoch-batched wire rounds)
+# ---------------------------------------------------------------------------
+#
+# The unfused engines move every circuit slot's flits as a separate
+# ``ppermute`` pair — 2*(N-1) collectives per round (per chunk when
+# pipelined), each a sync point, with per-slot gather/merge ops
+# materializing an intermediate between them.  The fused engine batches a
+# round's *entire* request traffic into one collective and collapses the
+# node-local datapath into the :mod:`repro.kernels.bridge_gather` kernels:
+#
+#   1. ONE ``all_gather`` ships every node's request window [n, L] (the
+#      round's request flits, all slots and channels together);
+#   2. every node re-derives the steering for the requesters it serves from
+#      the replicated table/program (pure local compute — the request
+#      preparation unit runs where the data lives) and serves all slots in
+#      :func:`~repro.kernels.bridge_gather.gather_pages` grids;
+#   3. the payload flits return via the exchange lowering picked by
+#      :func:`_fused_exchange_mode` — ONE ``all_to_all`` ("a2a": node h's
+#      row j carries the pages it served for requester j; on the push
+#      path, a second ``all_gather`` lands the write payloads), or one
+#      backward ``ppermute`` hop per slot ("ladder");
+#   4. the round retires without a per-slot select chain: in "a2a" mode
+#      the ``pull_commit`` / ``push_commit`` kernel merges loopback +
+#      landed payloads in one grid (pool buffer donated on push); in
+#      "ladder" mode the schedule wires every distance to exactly one slot
+#      and unserved lanes carry zero flits, so the pull commit is a pure
+#      add-tree over the landed rows.
+#
+# Collective count per round drops from 2*(N-1)*channels to 2 ("a2a") or
+# N ("ladder"), independent of pipeline depth; results and telemetry stay
+# bit-exact vs the unfused engines (same serve conditions, same commit
+# order — the fused round only batches wire traffic, never changes what is
+# served).  With every channel's lanes riding the same collectives, the
+# channels knob no longer multiplies dispatch overhead.
+
+# Payload-exchange pattern for the fused pull engine: "a2a" batches every
+# slot's data flits into one ``all_to_all``; "ladder" rotates each slot's
+# row home with one ``ppermute`` hop.  Both are bit-exact; see
+# :func:`_fused_exchange_mode` for the selection policy.
+_FUSED_EXCHANGE: str | None = None
+
+
+def _fused_exchange_mode() -> str:
+    """Pick the fused pull engine's payload-exchange lowering.
+
+    On TPU the single ``all_to_all`` is the whole point — one collective
+    retires every slot's data flits.  XLA:CPU's all-to-all emulation is
+    copy-pathological at large payloads (measured ~9x a ppermute ladder
+    moving identical bytes at 256 KiB pages), so off-TPU the ladder wins
+    wire-bound rounds while staying well under the unfused engine's
+    2*(N-1) collectives (it drops the request ppermutes and the per-slot
+    merge chain).  ``_FUSED_EXCHANGE`` overrides for A/B measurement.
+    """
+    if _FUSED_EXCHANGE is not None:
+        return _FUSED_EXCHANGE
+    return "a2a" if jax.default_backend() == "tpu" else "ladder"
+
+
+def _fused_steering(allwin: jax.Array, table: MemPortTable,
+                    program: RouteProgram, my, num_nodes: int):
+    """Re-derive every node's steering from the replicated control plane.
+
+    allwin: [n, L] the round's gathered request windows.  Returns
+    (requester ring ranks [S], per-slot served pool rows [S, L] with FREE
+    on unserved lanes) for the slots *this* node serves: slot k's
+    requester sits at ring distance d_k behind us.
+    """
+    home_all, slot_all = table.translate(allwin)
+    reqs, requesters = [], []
+    for k, d in enumerate(steering.default_route_schedule(num_nodes)):
+        requester = jnp.mod(my - d, num_nodes)
+        dist = steering.ring_distance(home_all[requester], requester,
+                                      num_nodes)
+        serve = ((dist == d) & program.live[k]
+                 & (program.rank_epoch[k, requester] >= 0))
+        reqs.append(jnp.where(serve, slot_all[requester], FREE))
+        requesters.append(requester)
+    return jnp.stack(requesters), jnp.stack(reqs)
+
+
+def _fused_window(want: jax.Array, ptr, budget: int, lanes: int, lane,
+                  active_budget) -> jax.Array:
+    """One round's request window, padded to ``lanes`` and rate-limited."""
+    window = jax.lax.dynamic_slice(want, (ptr,), (budget,))
+    if lanes > budget:
+        window = jnp.concatenate(
+            [window, jnp.full((lanes - budget,), FREE, want.dtype)])
+    return jnp.where((lane < active_budget)
+                     & (ptr + lane < want.shape[0]), window, FREE)
+
+
+def _pull_local_fused(pool_local: jax.Array, want: jax.Array,
+                      table: MemPortTable, active_budget: jax.Array,
+                      program: RouteProgram, *, axis: str, num_nodes: int,
+                      budget: int, rounds: int, channels: int) -> jax.Array:
+    """Fused pull engine: 2 collectives + 2 kernels per round (see above)."""
+    page_shape = pool_local.shape[1:]
+    cb = -(-budget // channels)
+    lanes = channels * cb
+    lane = jnp.arange(lanes)
+    sched = steering.default_route_schedule(num_nodes)
+    my = jax.lax.axis_index(axis)
+    pool2, _, _e = _bg._flatten_pages(pool_local)
+    exchange = _fused_exchange_mode()
+
+    def body(ptr, _):
+        window = _fused_window(want, ptr, budget, lanes, lane, active_budget)
+        allwin = jax.lax.all_gather(window, axis)              # request flits
+        src_rows, reqs = _fused_steering(allwin, table, program, my,
+                                         num_nodes)
+        home, slot = table.translate(window)
+        dist = steering.ring_distance(home, my, num_nodes)
+        loop_slot = jnp.where(dist == 0, slot, FREE)
+        if exchange == "a2a":
+            # Payload flits: node h's send row j is what it served for
+            # requester j.  Steering the *request ids* into exchange row
+            # order (a [n, lanes] int scatter) lets the gather kernel emit
+            # payloads straight into the ``all_to_all`` layout — no
+            # full-size zeros + payload-scatter materialization around the
+            # collective.  Requester j then finds slot k's pages in the
+            # row of its serving home (j + d_k), so the commit kernel's
+            # per-lane choice indexes ``recv`` rows directly.
+            reqs_by_row = jnp.full((num_nodes, lanes), FREE, jnp.int32)
+            reqs_by_row = reqs_by_row.at[src_rows].set(reqs)
+            send = _bg.gather_pages(pool2, reqs_by_row)        # [n, lanes, e]
+            recv = jax.lax.all_to_all(send, axis, 0, 0)
+            choice = jnp.where(dist == 0, 0, -1)
+            for k, d in enumerate(sched):
+                serve = ((dist == d) & program.live[k]
+                         & (program.rank_epoch[k, my] >= 0))
+                choice = jnp.where(serve, jnp.mod(my + d, num_nodes) + 1,
+                                   choice)
+            out = _bg.pull_commit(pool2, recv, choice, loop_slot)
+        else:
+            # Rotation ladder: slot k's send lanes are ``reqs[k]`` verbatim
+            # (what we serve for the requester d_k behind us), so each
+            # slot's gathered flits ppermute straight back by distance.
+            # The schedule wires every distance to exactly one slot and
+            # unserved lanes gather zero flits, so the commit merge
+            # degenerates to an add-tree over the landed rows + the
+            # epoch-0 loopback gather — no staged exchange buffer, no
+            # per-slot select chain, and XLA fuses the whole tree into a
+            # single output pass.
+            out = _bg.gather_pages(pool2, loop_slot)
+            for k, d in enumerate(sched):
+                flit = _bg.gather_pages(pool2, reqs[k])
+                out = out + jax.lax.ppermute(
+                    flit, axis,
+                    perm=[(j, (j - d) % num_nodes)
+                          for j in range(num_nodes)])
+        return ptr + active_budget, out
+
+    ptr0 = _pvary(jnp.int32(0), axis)
+    _, chunks = jax.lax.scan(body, ptr0, None, length=rounds)
+    return _reassemble(
+        chunks.reshape((rounds * lanes,) + page_shape), want.shape[0],
+        lanes, active_budget, page_shape, pool_local.dtype)
+
+
+def _push_local_fused(pool_local: jax.Array, ids: jax.Array, pay: jax.Array,
+                      table: MemPortTable, active_budget: jax.Array,
+                      program: RouteProgram, *, axis: str, num_nodes: int,
+                      budget: int, rounds: int, channels: int) -> jax.Array:
+    """Fused push engine: batched data flits + 1 commit kernel per round.
+
+    The write payloads travel batched — one ``all_gather`` in "a2a"
+    exchange mode (every node lands the full round of data flits), one
+    forward ``ppermute`` hop per slot in "ladder" mode (the same bytes the
+    unfused engine moves, without its request-flit collectives) — and the
+    round retires in a single
+    :func:`~repro.kernels.bridge_gather.push_commit` grid against the
+    **donated** pool shard, walking the serial engine's commit order.
+    """
+    cb = -(-budget // channels)
+    lanes = channels * cb
+    lane = jnp.arange(lanes)
+    sched = steering.default_route_schedule(num_nodes)
+    my = jax.lax.axis_index(axis)
+    pool2, _, e = _bg._flatten_pages(pool_local)
+    nrows = pool2.shape[0]
+    pay2 = pay.reshape(pay.shape[0], e)
+    exchange = _fused_exchange_mode()
+
+    def body(carry, _):
+        pool_pad, ptr = carry
+        window = _fused_window(ids, ptr, budget, lanes, lane, active_budget)
+        dwin = jax.lax.dynamic_slice(pay2, (ptr, 0), (budget, e))
+        if lanes > budget:
+            dwin = jnp.concatenate(
+                [dwin, jnp.zeros((lanes - budget, e), pay2.dtype)])
+        allwin = jax.lax.all_gather(window, axis)              # request flits
+        src_rows, slots = _fused_steering(allwin, table, program, my,
+                                          num_nodes)
+        if exchange == "a2a":
+            alldata = jax.lax.all_gather(dwin, axis)           # data flits
+            landed = alldata[src_rows]                         # [S, lanes, e]
+        else:
+            # Rotation ladder: requester j's flits for distance d land at
+            # home (j + d) in one forward hop — slot k's landed data is
+            # the window of the requester d_k behind us, no full-fabric
+            # broadcast or landed-row re-gather.
+            landed = jnp.stack([
+                jax.lax.ppermute(
+                    dwin, axis,
+                    perm=[(j, (j + d) % num_nodes)
+                          for j in range(num_nodes)])
+                for d in sched])
+        home, slot = table.translate(window)
+        dist = steering.ring_distance(home, my, num_nodes)
+        loop_slots = jnp.where(dist == 0, slot, FREE)
+        slots_all = jnp.concatenate([loop_slots[None], slots])  # [S+1, lanes]
+        pool_pad = _bg.push_commit(pool_pad, slots_all, dwin, landed,
+                                   channels=channels, cb=cb)
+        return (pool_pad, ptr + active_budget), None
+
+    ptr0 = _pvary(jnp.int32(0), axis)
+    (pool_pad, _), _ = jax.lax.scan(
+        body, (_bg.pad_pool(pool2), ptr0), None, length=rounds)
+    return pool_pad[:nrows].reshape(pool_local.shape)
+
+
 def _push_wire(sub_ids: jax.Array, data: jax.Array, table: MemPortTable,
                program: RouteProgram, axis: str, num_nodes: int, my):
     """Request phase of one push chunk: launch slot-id + payload flits.
@@ -390,7 +643,7 @@ def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
                 table: MemPortTable, active_budget: jax.Array,
                 program: RouteProgram, *, axis: str, num_nodes: int,
                 budget: int, rounds: int, edge_buffer: bool = True,
-                channels: int = 1) -> jax.Array:
+                channels: int = 1, fused: bool = False) -> jax.Array:
     """Write payload pages to their homes (single-writer contract).
 
     Rate-limiter parity with :func:`_pull_local`: each round writes only the
@@ -401,6 +654,9 @@ def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
     bridge serializes the wire (loopback commit chained under the first
     slot's flits), and ``channels > 1`` pipelines chunk g+1's request/data
     flits over chunk g's commits (serial when bufferless or 1-node).
+    ``fused`` batches each round into one collective pair + one donated
+    commit kernel (:func:`_push_local_fused`; unfused-serial fallback when
+    bufferless).
     """
     my = jax.lax.axis_index(axis)
     page_shape = pool_local.shape[1:]
@@ -409,6 +665,11 @@ def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
     if rounds == 0:
         return pool_local
     active_budget = jnp.clip(active_budget, 0, budget)  # see _pull_local
+    if fused and num_nodes > 1 and edge_buffer:
+        return _push_local_fused(
+            pool_local, ids, pay, table, active_budget, program, axis=axis,
+            num_nodes=num_nodes, budget=budget, rounds=rounds,
+            channels=channels)
     pipelined = channels > 1 and num_nodes > 1 and edge_buffer
 
     if not pipelined:
@@ -599,7 +860,7 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
                table_nodes: int = 0, collect_telemetry: bool = False,
                topology: Optional[Topology] = None,
                tenant_ids: Optional[jax.Array] = None,
-               max_tenants: int = 0):
+               max_tenants: int = 0, fused: bool = True):
     """Pull logical pages through the bridge.
 
     Args:
@@ -642,6 +903,18 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         materialized on the hot path).
       max_tenants: static width of the per-tenant telemetry histograms
         (0 = the :data:`repro.telemetry.counters.DEFAULT_MAX_TENANTS`).
+      fused: run each epoch through the fused Pallas datapath (default ON):
+        serve-condition evaluation, the page gather and the payload commit
+        collapse into one kernel pair per round, and the round's wire
+        traffic batches into a single request ``all_gather`` plus the
+        payload exchange (an ``all_to_all`` on TPU, one ``ppermute`` hop
+        per slot off-TPU — :func:`_fused_exchange_mode`) instead of
+        2·(N-1)·channels ``ppermute`` sync
+        points.  Results and telemetry are bit-exact vs ``fused=False``
+        (the escape hatch back to the unfused ppermute-chain engines); a
+        bufferless bridge (``edge_buffer=False``) always runs unfused
+        serial.  On the loopback path the fused gather runs as one
+        :func:`~repro.kernels.bridge_gather.gather_pages` grid.
     Returns:
       [num_nodes, R, *page_shape] gathered pages, sharded on dim 0 — or
       ``(pages, telemetry)`` when ``collect_telemetry`` is set.
@@ -683,7 +956,10 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
         served = jnp.broadcast_to(idx < rounds * ab, want.shape).reshape(-1)
         flat = jnp.where(served, flat, FREE)
         flat = _loopback_mask(flat, want, table, program, tn)
-        out = _gather_local(pool_pages, flat)
+        if fused:
+            out = _bg.gather_pages(pool_pages, flat)
+        else:
+            out = _gather_local(pool_pages, flat)
         out = out.reshape(want.shape + pool_pages.shape[1:])
         # Trim the round padding on the *request* dim (pages may be
         # multi-dimensional, so slice by position, not from the back).
@@ -703,7 +979,8 @@ def pull_pages(pool_pages: jax.Array, want: jax.Array, table: MemPortTable,
     out_spec = P(mem_axis, *([None] * pool_pages.ndim))
     body = functools.partial(
         _pull_local, axis=mem_axis, num_nodes=n, budget=budget,
-        rounds=rounds, edge_buffer=edge_buffer, channels=channels)
+        rounds=rounds, edge_buffer=edge_buffer, channels=channels,
+        fused=fused)
     ab_vec = jnp.clip(jnp.broadcast_to(active_budget, (n,)), 0, budget)
 
     def mapped(pool, want_l, table_l, ab, prog, tt, *ten_l):
@@ -744,7 +1021,7 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
                table_nodes: int = 0, collect_telemetry: bool = False,
                topology: Optional[Topology] = None,
                tenant_ids: Optional[jax.Array] = None,
-               max_tenants: int = 0):
+               max_tenants: int = 0, fused: bool = True):
     """Write pages to their homes through the bridge (single-writer pages).
 
     Args:
@@ -768,6 +1045,14 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
         (:class:`~repro.telemetry.counters.BridgeTelemetry`).
       tenant_ids / max_tenants: per-request tenant attribution lane for the
         telemetry counters, same semantics as in :func:`pull_pages`.
+      fused: run each epoch through the fused Pallas datapath, same
+        semantics as in :func:`pull_pages` — on the write path the round's
+        address flits batch into one ``all_gather``, data flits take the
+        backend-picked payload exchange (an ``all_gather`` on TPU, one
+        forward ``ppermute`` hop per slot off-TPU —
+        :func:`_fused_exchange_mode`), and everything retires through one
+        :func:`~repro.kernels.bridge_gather.push_commit` grid against the
+        donated pool shard.
     """
     n = _mem_axis_size(mesh, mem_axis)
     channels = _resolve_channels(channels)
@@ -805,8 +1090,11 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
         served = jnp.broadcast_to(idx < rounds * ab, dest.shape).reshape(-1)
         flat = jnp.where(served, flat, FREE)
         flat = _loopback_mask(flat, dest, table, program, tn)
-        out = _scatter_local(
-            pool_pages, flat, payload.reshape((-1,) + payload.shape[2:]))
+        flat_pay = payload.reshape((-1,) + payload.shape[2:])
+        if fused:
+            out = _bg.scatter_pages(pool_pages, flat, flat_pay)
+        else:
+            out = _scatter_local(pool_pages, flat, flat_pay)
         if collect_telemetry:
             return out, _loopback_telemetry(dest, table, program, tn,
                                             active_budget, budget, rounds,
@@ -821,7 +1109,8 @@ def push_pages(pool_pages: jax.Array, dest: jax.Array, payload: jax.Array,
     pages_spec = P(mem_axis, *([None] * (pool_pages.ndim - 1)))
     body = functools.partial(_push_local, axis=mem_axis, num_nodes=n,
                              budget=budget, rounds=rounds,
-                             edge_buffer=edge_buffer, channels=channels)
+                             edge_buffer=edge_buffer, channels=channels,
+                             fused=fused)
     ab_vec = jnp.clip(jnp.broadcast_to(active_budget, (n,)), 0, budget)
 
     def mapped(pool, dest_l, pay_l, table_l, ab, prog, tt, *ten_l):

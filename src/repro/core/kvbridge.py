@@ -22,7 +22,10 @@ Three decode-attention placements:
 * ``bridge_pull``  — paper-faithful: the master *pulls* KV pages through the
   memport + ring-circuit datapath and computes attention locally, streaming
   page rounds through an online-softmax accumulator (cut-through: a page is
-  consumed the moment it lands, never stored);
+  consumed the moment it lands, never stored — literal under ``fused=True``,
+  where each round folds into the flash-decode accumulators *inside* the
+  attention grid, :mod:`repro.kernels.bridge_attention`, and the full
+  ``[B, max_pages]`` pull buffer never materializes);
 * ``bridge_push``  — beyond-paper: the *query* is broadcast to the memory
   nodes, each computes partial flash-decode attention over its resident
   pages, and partials merge with a log-sum-exp reduction.  Collective bytes
@@ -40,6 +43,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import bridge
 from repro.core.memport import FREE, MemPortTable
 from repro.core.steering import RouteProgram
+from repro.kernels.bridge_attention import stream_decode_accumulate
 from repro.telemetry import counters as telemetry_counters
 
 NEG_INF = -1e30
@@ -180,14 +184,17 @@ def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
            budget: int = 8, edge_buffer: bool = True, channels: int = 1,
            program: Optional[RouteProgram] = None,
            collect_telemetry: bool = False, topology=None,
-           tenant_of_seq: Optional[jax.Array] = None, max_tenants: int = 0):
+           tenant_of_seq: Optional[jax.Array] = None, max_tenants: int = 0,
+           fused: bool = True):
     """Append one token's (k, v) [B, kv, hd] for one layer.
 
     Tokens land in the local tail buffer; when a sequence's tail page fills,
     that page is flushed through the bridge to its pooled home (one masked
     ``push_pages`` — sequences not at a boundary contribute FREE slots).
     ``edge_buffer`` / ``channels`` thread to the bridge write path
-    (bufferless serialization / the pipelined multi-channel round engine).
+    (bufferless serialization / the pipelined multi-channel round engine);
+    ``fused`` selects the fused Pallas commit datapath (the default — see
+    :func:`repro.core.bridge.push_pages`).
     With ``collect_telemetry`` the write-path counters of both pushes (k and
     v pages both cross the wire) come back summed: ``(layer, telemetry)``.
     ``tenant_of_seq`` (i32[B], runtime input) attributes each sequence's
@@ -226,14 +233,14 @@ def append(layer: PagedKVLayer, table: MemPortTable, lengths: jax.Array,
                                channels=channels, program=program,
                                collect_telemetry=collect_telemetry,
                                topology=topology, tenant_ids=tenants_n,
-                               max_tenants=max_tenants)
+                               max_tenants=max_tenants, fused=fused)
     v_pool = bridge.push_pages(layer.v_pool, dest_n, shape_for(tail_v),
                                table, mesh=mesh, mem_axis=mem_axis,
                                budget=budget, edge_buffer=edge_buffer,
                                channels=channels, program=program,
                                collect_telemetry=collect_telemetry,
                                topology=topology, tenant_ids=tenants_n,
-                               max_tenants=max_tenants)
+                               max_tenants=max_tenants, fused=fused)
     telem = None
     if collect_telemetry:
         k_pool, telem_k = k_pool
@@ -269,7 +276,7 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
                           program: Optional[RouteProgram] = None,
                           collect_telemetry: bool = False, topology=None,
                           tenant_of_seq: Optional[jax.Array] = None,
-                          max_tenants: int = 0):
+                          max_tenants: int = 0, fused: bool = True):
     """Paper-faithful: pull pages through the bridge, attend locally.
 
     q: [B, H, hd] -> out [B, H, hd].  Pages stream through an online-softmax
@@ -280,6 +287,15 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
     counters of the k and v pulls come back too: ``(out, telemetry)``.
     ``tenant_of_seq`` (i32[B], runtime input) attributes each sequence's
     page pulls to its tenant in the telemetry's per-tenant bins.
+
+    ``fused`` (default ON) makes the cut-through literal: each round of
+    landed pages is consumed **inside the attention grid**
+    (:func:`repro.kernels.bridge_attention.stream_decode_accumulate` folds
+    the round straight into the flash-decode ``(m, l, acc)`` accumulators),
+    so the peak pull footprint is one round of pages instead of the full
+    ``[B, max_pages]`` buffer pair.  The pulled pages and the telemetry are
+    bit-exact vs ``fused=False``; the attention output matches at float
+    tolerance (the online accumulation visits pages in landing order).
     """
     b, h, hd = q.shape
     kv = layer.k_pool.shape[-2]
@@ -304,40 +320,74 @@ def decode_attention_pull(q: jax.Array, layer: PagedKVLayer,
                 [ten_b, jnp.zeros((pad, max_pages), jnp.int32)], 0)
         tenants = ten_b.reshape(n, per_node * max_pages)
 
-    k_pages = bridge.pull_pages(layer.k_pool, want, table, mesh=mesh,
-                                mem_axis=mem_axis, budget=budget,
-                                edge_buffer=edge_buffer, channels=channels,
-                                program=program,
-                                collect_telemetry=collect_telemetry,
-                                topology=topology, tenant_ids=tenants,
-                                max_tenants=max_tenants)
-    v_pages = bridge.pull_pages(layer.v_pool, want, table, mesh=mesh,
-                                mem_axis=mem_axis, budget=budget,
-                                edge_buffer=edge_buffer, channels=channels,
-                                program=program,
-                                collect_telemetry=collect_telemetry,
-                                topology=topology, tenant_ids=tenants,
-                                max_tenants=max_tenants)
+    pull_kw = dict(mesh=mesh, mem_axis=mem_axis, budget=budget,
+                   edge_buffer=edge_buffer, channels=channels,
+                   program=program, collect_telemetry=collect_telemetry,
+                   topology=topology, max_tenants=max_tenants, fused=fused)
     telem = None
-    if collect_telemetry:
-        k_pages, telem_k = k_pages
-        v_pages, telem_v = v_pages
-        telem = telemetry_counters.add(telem_k, telem_v)
-    # [n, per_node*max_pages, T, kv, hd] -> [B(+pad), P, T, kv, hd]
-    k_pages = k_pages.reshape(n * per_node, max_pages, page_tokens, kv, hd)[:b]
-    v_pages = v_pages.reshape(n * per_node, max_pages, page_tokens, kv, hd)[:b]
+    if fused:
+        # Streamed rounds: pull one bridge round of pages at a time and fold
+        # it straight into the flash-decode accumulators — the materialized
+        # state is (m, l, acc) + one round of pages, never the full pull
+        # buffer.  Splitting one R-request transfer into R/budget 1-round
+        # transfers moves the same flits through the same per-round
+        # collectives (and, with no throttled active_budget, sums to
+        # bit-exact telemetry: every round's spill count is zero either
+        # way).
+        rtot = want.shape[-1]
+        rounds = -(-rtot // budget)
+        m_s = jnp.full((b, h), NEG_INF, jnp.float32)
+        l_s = jnp.zeros((b, h), jnp.float32)
+        o_s = jnp.zeros((b, h, hd), jnp.float32)
+        for rnd in range(rounds):
+            sl = slice(rnd * budget, min((rnd + 1) * budget, rtot))
+            want_r = want[:, sl]
+            ten_r = tenants[:, sl] if tenants is not None else None
+            k_r = bridge.pull_pages(layer.k_pool, want_r, table,
+                                    tenant_ids=ten_r, **pull_kw)
+            v_r = bridge.pull_pages(layer.v_pool, want_r, table,
+                                    tenant_ids=ten_r, **pull_kw)
+            if collect_telemetry:
+                k_r, telem_k = k_r
+                v_r, telem_v = v_r
+                round_t = telemetry_counters.add(telem_k, telem_v)
+                telem = (round_t if telem is None
+                         else telemetry_counters.add(telem, round_t))
+            lanes = n * want_r.shape[-1]
+            wflat = want_r.reshape(-1)
+            live = wflat >= 0
+            # Logical page ids encode their sequence: id // max_pages.
+            seq = jnp.where(live, wflat // max_pages, -1)
+            m_s, l_s, o_s = stream_decode_accumulate(
+                q, k_r.reshape(lanes, page_tokens, kv, hd),
+                v_r.reshape(lanes, page_tokens, kv, hd), seq, live,
+                m_s, l_s, o_s)
+    else:
+        k_pages = bridge.pull_pages(layer.k_pool, want, table,
+                                    tenant_ids=tenants, **pull_kw)
+        v_pages = bridge.pull_pages(layer.v_pool, want, table,
+                                    tenant_ids=tenants, **pull_kw)
+        if collect_telemetry:
+            k_pages, telem_k = k_pages
+            v_pages, telem_v = v_pages
+            telem = telemetry_counters.add(telem_k, telem_v)
+        # [n, per_node*max_pages, T, kv, hd] -> [B(+pad), P, T, kv, hd]
+        k_pages = k_pages.reshape(n * per_node, max_pages, page_tokens,
+                                  kv, hd)[:b]
+        v_pages = v_pages.reshape(n * per_node, max_pages, page_tokens,
+                                  kv, hd)[:b]
 
-    flat_k = k_pages.reshape(b * max_pages, page_tokens, kv, hd)
-    flat_v = v_pages.reshape(b * max_pages, page_tokens, kv, hd)
-    seq_of_page = jnp.repeat(jnp.arange(b), max_pages)
-    page_of = jnp.tile(jnp.arange(max_pages), b)
-    pos = page_of[:, None] * page_tokens + jnp.arange(page_tokens)[None, :]
-    valid = (pos < (flushed[seq_of_page] * page_tokens)[:, None])
-    q_per_page = q[seq_of_page]
-    m_p, l_p, o_p = _page_partial(q_per_page, flat_k, flat_v, valid)
-    live = page_of < flushed[seq_of_page]
-    seg = jnp.where(live, seq_of_page, -1)
-    m_s, l_s, o_s = _segment_combine(m_p, l_p, o_p, seg, b)
+        flat_k = k_pages.reshape(b * max_pages, page_tokens, kv, hd)
+        flat_v = v_pages.reshape(b * max_pages, page_tokens, kv, hd)
+        seq_of_page = jnp.repeat(jnp.arange(b), max_pages)
+        page_of = jnp.tile(jnp.arange(max_pages), b)
+        pos = page_of[:, None] * page_tokens + jnp.arange(page_tokens)[None, :]
+        valid = (pos < (flushed[seq_of_page] * page_tokens)[:, None])
+        q_per_page = q[seq_of_page]
+        m_p, l_p, o_p = _page_partial(q_per_page, flat_k, flat_v, valid)
+        live = page_of < flushed[seq_of_page]
+        seg = jnp.where(live, seq_of_page, -1)
+        m_s, l_s, o_s = _segment_combine(m_p, l_p, o_p, seg, b)
 
     m_t, l_t, o_t = _tail_partial(q, layer.tail_k, layer.tail_v,
                                   lengths, page_tokens)

@@ -1,0 +1,135 @@
+"""Streaming decode attention over bridge-pulled KV page rounds.
+
+``kvbridge.decode_attention_pull`` historically pulled **every** KV page of
+every sequence through the bridge, materialized the full
+``[B, max_pages, T, kv, hd]`` buffers, and only then ran the per-page
+partial/segment-combine chain.  The fused datapath instead consumes each
+round of landed pages **inside the attention grid**: one
+:func:`stream_decode_accumulate` call folds a round's ``[W, T, kv, hd]``
+flits into the running flash-decode accumulators ``(m, l, acc)``, so the
+peak footprint is one round of pages (cut-through: a page is consumed the
+moment it lands, never stored).
+
+The kernel is the round-streamed sibling of
+:mod:`repro.kernels.paged_attention`: grid ``(B, W)``, per-sequence
+``(m, l, acc)`` carried in VMEM scratch across the round's lanes, with the
+lane->sequence routing (a scalar-prefetch operand, derived from the landed
+logical page ids) steering which grid steps update which sequence.  Only
+fully-flushed pages travel through the bridge, so a live lane contributes
+all ``T`` tokens — raggedness is handled by the caller's tail partial.
+
+Numerics: float32 online softmax, identical update algebra to the unfused
+``_page_partial`` + LSE-combine chain but applied in landing order, so
+outputs agree to float tolerance (the pulled pages and telemetry stay
+bit-exact — only the accumulation order differs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import resolve_interpret
+
+NEG_INF = -1e30
+
+
+def _stream_kernel(seq_ref, live_ref, q_ref, k_ref, v_ref,
+                   m_in_ref, l_in_ref, o_in_ref,
+                   m_out_ref, l_out_ref, o_out_ref,
+                   m_sc, l_sc, acc_sc, *, lanes: int, num_heads: int,
+                   kv_heads: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _load():
+        m_sc[...] = m_in_ref[0]
+        l_sc[...] = l_in_ref[0]
+        acc_sc[...] = o_in_ref[0]
+
+    @pl.when((seq_ref[i] == b) & (live_ref[i] > 0))
+    def _update():
+        g = num_heads // kv_heads
+        hd = q_ref.shape[-1]
+        t = k_ref.shape[1]
+        q = q_ref[0].astype(jnp.float32)                 # [H, hd]
+        k = k_ref[0].astype(jnp.float32)                 # [T, kv, hd]
+        v = v_ref[0].astype(jnp.float32)
+        qg = q.reshape(kv_heads, g, hd)
+        s = jnp.einsum("kgd,tkd->kgt", qg, k,
+                       preferred_element_type=jnp.float32) * (hd ** -0.5)
+        s = s.reshape(num_heads, t)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=1)
+        pv = jnp.einsum("kgt,tkd->kgd", p.reshape(kv_heads, g, t), v,
+                        preferred_element_type=jnp.float32)
+        acc_sc[...] = acc_sc[...] * alpha[:, None] \
+            + pv.reshape(num_heads, hd)
+        m_sc[...] = m_new
+
+    @pl.when(i == lanes - 1)
+    def _store():
+        m_out_ref[0] = m_sc[...]
+        l_out_ref[0] = l_sc[...]
+        o_out_ref[0] = acc_sc[...]
+
+
+def stream_decode_accumulate(q: jax.Array, k_pages: jax.Array,
+                             v_pages: jax.Array, seq_ids: jax.Array,
+                             live: jax.Array, m: jax.Array, l: jax.Array,
+                             o: jax.Array, *, interpret=None):
+    """Fold one landed page round into the flash-decode accumulators.
+
+    q: [B, H, hd] decode queries; k_pages/v_pages: [W, T, kv, hd] this
+    round's landed flits; seq_ids: i32[W] owning sequence per lane;
+    live: bool/i32[W] lane carries a real page; m, l: f32[B, H];
+    o: f32[B, H, hd] running (max, denom, weighted-sum) state.
+    Returns the updated ``(m, l, o)``.
+    """
+    b, h, hd = q.shape
+    w, t, kv, _ = k_pages.shape
+    if w == 0:
+        return m, l, o
+    kernel = functools.partial(_stream_kernel, lanes=w, num_heads=h,
+                               kv_heads=kv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, w),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda bi, i, sq, lv: (bi, 0, 0)),
+            pl.BlockSpec((1, t, kv, hd), lambda bi, i, sq, lv: (i, 0, 0, 0)),
+            pl.BlockSpec((1, t, kv, hd), lambda bi, i, sq, lv: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h), lambda bi, i, sq, lv: (bi, 0)),
+            pl.BlockSpec((1, h), lambda bi, i, sq, lv: (bi, 0)),
+            pl.BlockSpec((1, h, hd), lambda bi, i, sq, lv: (bi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h), lambda bi, i, sq, lv: (bi, 0)),
+            pl.BlockSpec((1, h), lambda bi, i, sq, lv: (bi, 0)),
+            pl.BlockSpec((1, h, hd), lambda bi, i, sq, lv: (bi, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, hd), jnp.float32),
+        ],
+    )
+    m2, l2, o2 = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(seq_ids.astype(jnp.int32), live.astype(jnp.int32),
+      q, k_pages, v_pages, m.astype(jnp.float32), l.astype(jnp.float32),
+      o.astype(jnp.float32))
+    return m2, l2, o2

@@ -1,0 +1,310 @@
+"""Fused bridge datapath kernels: serve/steer -> page gather -> commit.
+
+The unfused bridge engine runs every epoch as a chain of discrete XLA ops —
+per-slot serve masking, a ``dynamic-slice`` gather per circuit slot, and a
+``where``-merge (pull) or scatter (push) per slot — materializing an
+intermediate per step.  These Pallas kernels collapse each side of the wire
+into **one** ``pallas_call`` walking the pool block-by-block, exactly the
+paper's transceiver datapath where the request preparation & steering unit
+programs the DMA engine and the payload moves in a single steered
+transaction:
+
+* the serve condition (RouteProgram group/FREE masking, loopback vs circuit
+  steering) is evaluated into **scalar-prefetch** operands — the memport
+  lookup result that steers each grid step's pool DMA, as in
+  :mod:`repro.kernels.paged_attention`;
+* :func:`gather_pages` serves every landed request of an epoch in one grid
+  (FREE requests produce zero flits);
+* :func:`pull_commit` retires an epoch on the requester side: the epoch-0
+  loopback gather from the local shard and the returned circuit payloads
+  commit into the output in one grid — no per-slot ``where`` chain;
+* :func:`push_commit` / :func:`scatter_pages` retire the write path on the
+  serving side with the pool buffer **donated** (``input_output_aliases``):
+  the grid scatters payloads in the serial engine's commit order (sequential
+  grid => later writes win, matching the oracle), and FREE lanes are steered
+  into a sacrificial pad row — the kernel equivalent of the unfused path's
+  ``mode="drop"`` scatter.
+
+All kernels flatten page contents to one trailing dim (pages move as whole
+flits; their internal layout is irrelevant to the datapath) and run through
+the shared interpret-mode policy in :mod:`repro.kernels.pallas_compat` so
+tier-1 executes them off-TPU.  Off-TPU the wrappers do NOT run the generic
+Pallas interpreter: it re-materializes the full output (and every carried
+buffer) once per grid step, which at 256 KiB pages costs more than the wire
+traffic it steers.  Instead each wrapper executes the identical block
+program as vectorized ``lax`` ops — same steering, same masked fetches,
+same sequential-grid write order (scatter shadowing is resolved explicitly,
+so duplicate commits stay deterministic) — keeping tier-1 bit-faithful to
+the TPU kernels at datapath speed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import resolve_interpret
+
+
+def _flatten_pages(pool: jax.Array):
+    """[slots, *page_shape] -> ([slots, E], page_shape)."""
+    page_shape = pool.shape[1:]
+    e = int(np.prod(page_shape)) if page_shape else 1
+    return pool.reshape(pool.shape[0], e), page_shape, e
+
+
+# ---------------------------------------------------------------------------
+# Pull side
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(req_ref, pool_ref, out_ref):
+    w = pl.program_id(0)
+    valid = req_ref[w] >= 0
+    out_ref[0] = jnp.where(valid, pool_ref[0], jnp.zeros_like(pool_ref[0]))
+
+
+def _gather_pages_lax(pool2: jax.Array, flat: jax.Array) -> jax.Array:
+    """Off-TPU gather grid: one clamped row fetch + FREE zero-mask."""
+    page = pool2[jnp.maximum(flat, 0)]
+    return jnp.where((flat >= 0)[:, None], page, jnp.zeros((), pool2.dtype))
+
+
+def gather_pages(pool: jax.Array, reqs: jax.Array, *,
+                 interpret=None) -> jax.Array:
+    """Serve an epoch's landed requests in one kernel.
+
+    pool: [slots, *page_shape]; reqs: i32[...] pool rows (FREE < 0).
+    Returns reqs.shape + page_shape — ``pool[req]`` per lane, zeros for FREE
+    lanes.  The request ids are a scalar-prefetch operand steering each grid
+    step's pool DMA (FREE lanes are clamped to row 0 for the fetch and
+    zero-masked in the kernel body).
+    """
+    pool2, page_shape, e = _flatten_pages(pool)
+    shape = reqs.shape
+    flat = reqs.reshape(-1).astype(jnp.int32)
+    w = flat.shape[0]
+    if w == 0:
+        return jnp.zeros(shape + page_shape, pool.dtype)
+    if resolve_interpret(interpret):
+        return _gather_pages_lax(pool2, flat).reshape(shape + page_shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1, e), lambda i, rq: (jnp.maximum(rq[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, e), lambda i, rq: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((w, e), pool.dtype),
+        interpret=resolve_interpret(interpret),
+    )(flat, pool2)
+    return out.reshape(shape + page_shape)
+
+
+def _pull_commit_kernel(choice_ref, loop_ref, pool_ref, pay_ref, out_ref):
+    i = pl.program_id(0)
+    c = choice_ref[i]
+    loop_ok = loop_ref[i] >= 0
+    zero = jnp.zeros_like(pool_ref[0])
+    local = jnp.where(loop_ok, pool_ref[0], zero)
+    page = jnp.where(c >= 1, pay_ref[0, 0], local)
+    out_ref[0] = jnp.where(c >= 0, page, zero)
+
+
+def _pull_commit_lax(pool2, pay2, choice, loop_slot) -> jax.Array:
+    """Off-TPU commit grid: per-lane source select as three masked fetches."""
+    s = pay2.shape[0]
+    local = _gather_pages_lax(pool2, loop_slot)
+    sel = jnp.clip(choice - 1, 0, s - 1)
+    circ = jnp.take_along_axis(pay2, sel[None, :, None], axis=0)[0]
+    page = jnp.where((choice >= 1)[:, None], circ, local)
+    return jnp.where((choice >= 0)[:, None], page, jnp.zeros((), pool2.dtype))
+
+
+def pull_commit(pool: jax.Array, payloads: jax.Array, choice: jax.Array,
+                loop_slot: jax.Array, *, interpret=None) -> jax.Array:
+    """Retire a pull epoch: loopback gather + payload commit in one kernel.
+
+    pool: [slots, *page_shape] (local shard, read-only);
+    payloads: [S, L, *page_shape] returned circuit flits (slot-major);
+    choice: i32[L] per-lane serving source — ``-1`` dead (zeros), ``0``
+    epoch-0 loopback (gather ``pool[loop_slot]``), ``k+1`` circuit slot k;
+    loop_slot: i32[L] local pool row for loopback lanes (FREE elsewhere).
+    Returns [L, *page_shape].
+    """
+    pool2, page_shape, e = _flatten_pages(pool)
+    s = payloads.shape[0]
+    lanes = choice.shape[0]
+    pay2 = payloads.reshape(s, lanes, e)
+    if resolve_interpret(interpret):
+        out = _pull_commit_lax(pool2, pay2, choice.astype(jnp.int32),
+                               loop_slot.astype(jnp.int32))
+        return out.reshape((lanes,) + page_shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(lanes,),
+        in_specs=[
+            pl.BlockSpec((1, e),
+                         lambda i, ch, lp: (jnp.maximum(lp[i], 0), 0)),
+            pl.BlockSpec((1, 1, e),
+                         lambda i, ch, lp: (jnp.clip(ch[i] - 1, 0, s - 1),
+                                            i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, e), lambda i, ch, lp: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _pull_commit_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((lanes, e), pool.dtype),
+        interpret=resolve_interpret(interpret),
+    )(choice.astype(jnp.int32), loop_slot.astype(jnp.int32), pool2, pay2)
+    return out.reshape((lanes,) + page_shape)
+
+
+# ---------------------------------------------------------------------------
+# Push side (donated pool)
+# ---------------------------------------------------------------------------
+
+def pad_pool(pool: jax.Array) -> jax.Array:
+    """Append the sacrificial drop row FREE pushes are steered into."""
+    return jnp.concatenate([pool, jnp.zeros_like(pool[:1])], 0)
+
+
+def _push_commit_kernel(rows_ref, pool_ref, loop_ref, landed_ref, out_ref):
+    del rows_ref, pool_ref          # steering only / aliased output init
+    k = pl.program_id(1)
+    out_ref[0] = jnp.where(k == 0, loop_ref[0],
+                           landed_ref[0, 0]).astype(out_ref.dtype)
+
+
+def _shadow_to(rows: jax.Array, drop_row: int) -> jax.Array:
+    """Steer writes shadowed by a later grid step into the drop row.
+
+    The sequential grid's last-write-wins contract made explicit, so the
+    off-TPU scatter never leans on XLA's duplicate-index update order
+    (officially unspecified).  Quadratic in the round's write count — a few
+    dozen lanes — never in page bytes.
+    """
+    t = jnp.arange(rows.shape[0])
+    shadowed = ((rows[None, :] == rows[:, None])
+                & (t[None, :] > t[:, None])).any(1)
+    return jnp.where(shadowed, drop_row, rows)
+
+
+def _push_commit_lax(pool_pad: jax.Array, rows: jax.Array,
+                     loop_data: jax.Array, landed_data: jax.Array,
+                     channels: int, cb: int) -> jax.Array:
+    """Off-TPU push grid: shadow-resolve in (c, k, b) grid order, then
+    retire every commit row with one in-place scatter per source buffer —
+    the landed flits scatter straight from where they arrived, no
+    flattened grid-order staging of the payload bytes."""
+    s1, lanes = rows.shape
+    drop = pool_pad.shape[0] - 1
+    # grid step t = (c*s1 + k)*cb + b  ->  slot k, lane = c*cb + b
+    t = jnp.arange(channels * s1 * cb)
+    k_t = (t // cb) % s1
+    lane_t = (t // (s1 * cb)) * cb + t % cb
+    flat = _shadow_to(rows[k_t, lane_t], drop)
+    # back to [s1, lanes]: with shadowed writes steered to the drop row,
+    # every surviving write is the grid's final value, so the per-slot
+    # scatters below can run in any order.
+    kk, ll = jnp.meshgrid(jnp.arange(s1), jnp.arange(lanes), indexing="ij")
+    res = flat[((ll // cb) * s1 + kk) * cb + ll % cb]
+    out = pool_pad.at[res[0]].set(loop_data.astype(pool_pad.dtype))
+    for k in range(1, s1):
+        out = out.at[res[k]].set(landed_data[k - 1].astype(pool_pad.dtype))
+    return out
+
+
+def push_commit(pool_pad: jax.Array, slots_all: jax.Array,
+                loop_data: jax.Array, landed_data: jax.Array, *,
+                channels: int, cb: int, interpret=None) -> jax.Array:
+    """Retire one push round into the (donated) padded pool.
+
+    pool_pad: [slots + 1, E] local shard with the sacrificial drop row
+    appended (:func:`pad_pool`); returned updated, buffer aliased.
+    slots_all: i32[S + 1, L] commit rows — row 0 the epoch-0 loopback slots,
+    row k+1 circuit slot k's landed slots (FREE < 0 drops).
+    loop_data: [L, E] local payloads; landed_data: [S, L, E] landed flits.
+    L = channels * cb; the grid runs chunk-major, loopback first within each
+    chunk — the serial engine's commit order, so duplicate rows resolve
+    identically (sequential grid, later write wins).
+    """
+    slots = pool_pad.shape[0] - 1
+    e = pool_pad.shape[1]
+    s1 = slots_all.shape[0]
+    rows = jnp.where(slots_all >= 0, slots_all, slots).astype(jnp.int32)
+    if resolve_interpret(interpret):
+        return _push_commit_lax(pool_pad, rows, loop_data, landed_data,
+                                channels, cb)
+
+    def row_of(c, k, b, rw):
+        return (rw[k, c * cb + b], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(channels, s1, cb),
+        in_specs=[
+            pl.BlockSpec((1, e), row_of),
+            pl.BlockSpec((1, e), lambda c, k, b, rw: (c * cb + b, 0)),
+            pl.BlockSpec((1, 1, e),
+                         lambda c, k, b, rw: (jnp.maximum(k - 1, 0),
+                                              c * cb + b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, e), row_of),
+    )
+    return pl.pallas_call(
+        _push_commit_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool_pad.shape, pool_pad.dtype),
+        input_output_aliases={1: 0},
+        interpret=resolve_interpret(interpret),
+    )(rows, pool_pad, loop_data, landed_data)
+
+
+def _scatter_kernel(rows_ref, pool_ref, data_ref, out_ref):
+    del rows_ref, pool_ref
+    out_ref[0] = data_ref[0].astype(out_ref.dtype)
+
+
+def scatter_pages(pool: jax.Array, slots: jax.Array, data: jax.Array, *,
+                  interpret=None) -> jax.Array:
+    """One-kernel masked scatter: ``pool.at[slots].set(data, mode="drop")``.
+
+    pool: [slots, *page_shape]; slots: i32[W] (FREE < 0 drops);
+    data: [W, *page_shape].  The loopback (1-node) commit path: FREE lanes
+    steer into the sacrificial pad row and are trimmed, live duplicates
+    resolve last-write-wins (sequential grid).  The padded pool buffer is
+    donated to the kernel.
+    """
+    pool2, page_shape, e = _flatten_pages(pool)
+    w = slots.shape[0]
+    if w == 0:
+        return pool
+    nrows = pool2.shape[0]
+    rows = jnp.where(slots >= 0, slots, nrows).astype(jnp.int32)
+    data2 = data.reshape(w, e)
+    if resolve_interpret(interpret):
+        out = pad_pool(pool2).at[_shadow_to(rows, nrows)].set(
+            data2.astype(pool2.dtype))
+        return out[:nrows].reshape(pool.shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1, e), lambda i, rw: (rw[i], 0)),
+            pl.BlockSpec((1, e), lambda i, rw: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, e), lambda i, rw: (rw[i], 0)),
+    )
+    out = pl.pallas_call(
+        _scatter_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrows + 1, e), pool2.dtype),
+        input_output_aliases={1: 0},
+        interpret=resolve_interpret(interpret),
+    )(rows, pad_pool(pool2), data2)
+    return out[:nrows].reshape(pool.shape)

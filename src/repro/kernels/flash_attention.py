@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -78,7 +80,7 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0, q_offset: int = 0,
                     bq: int = 128, bk: int = 512,
-                    interpret: bool = False) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """q: [B, Sq, H, hd]; k, v: [B, Sk, kv, hd] -> [B, Sq, H, hd]."""
     b, sq, h, hd = q.shape
     sk, kv = k.shape[1], k.shape[2]
@@ -115,6 +117,6 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)
     return out[:, :sq]

@@ -1,23 +1,21 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernel bodies execute via the Pallas interpreter for correctness) and False
-on real TPU backends.
+``interpret=None`` resolves through the shared policy in
+:mod:`repro.kernels.pallas_compat`: interpret mode off-TPU (this container
+is CPU-only; the kernel bodies execute via the Pallas interpreter for
+correctness), native compilation on real TPU backends, overridable either
+way with ``REPRO_PALLAS_INTERPRET``.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _flash
 from repro.kernels import paged_attention as _paged
 from repro.kernels import stream as _stream
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.pallas_compat import default_interpret as _default_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -80,7 +82,8 @@ def _paged_kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     page_table: jax.Array, lengths: jax.Array, *,
-                    max_pages: int, interpret: bool = False) -> jax.Array:
+                    max_pages: int,
+                    interpret: bool | None = None) -> jax.Array:
     """Decode attention over pooled pages.
 
     q: [B, H, hd]; k_pool/v_pool: [slots, T, kv, hd];
@@ -115,6 +118,6 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(table, lengths.astype(jnp.int32), q, k_pool, v_pool)
     return out

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.pallas_compat import resolve_interpret
+
 LANES = 128
 SUBLANES = 8
 DEFAULT_BLOCK_ROWS = 256  # rows of 128 lanes per VMEM block (128 KiB fp32)
@@ -52,7 +54,7 @@ def _grid_1d(x: jax.Array, block_rows: int):
     return flat.reshape(rows_pad, LANES), grid, spec
 
 
-def _run(kernel, arrays, block_rows: int, interpret: bool):
+def _run(kernel, arrays, block_rows: int, interpret):
     n = arrays[0].shape[0]
     shaped = [_grid_1d(a, block_rows) for a in arrays]
     x0, grid, spec = shaped[0]
@@ -63,20 +65,20 @@ def _run(kernel, arrays, block_rows: int, interpret: bool):
         in_specs=[spec] * len(ins),
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(x0.shape, x0.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(*ins)
     return out.reshape(-1)[:n]
 
 
 def stream_copy(c: jax.Array, *, block_rows: int = DEFAULT_BLOCK_ROWS,
-                interpret: bool = False) -> jax.Array:
+                interpret: bool | None = None) -> jax.Array:
     """a[i] = c[i]   (16 B/iter fp32, 0 flops — paper's 'copy')."""
     return _run(_copy_kernel, [c], block_rows, interpret)
 
 
 def stream_scale(c: jax.Array, q: float, *,
                  block_rows: int = DEFAULT_BLOCK_ROWS,
-                 interpret: bool = False) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """b[i] = q * c[i]   (16 B/iter, 1 flop — 'scale')."""
     return _run(functools.partial(_scale_kernel, q=q), [c], block_rows,
                 interpret)
@@ -84,14 +86,14 @@ def stream_scale(c: jax.Array, q: float, *,
 
 def stream_add(a: jax.Array, b: jax.Array, *,
                block_rows: int = DEFAULT_BLOCK_ROWS,
-               interpret: bool = False) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
     """c[i] = a[i] + b[i]   (24 B/iter, 1 flop — 'add')."""
     return _run(_add_kernel, [a, b], block_rows, interpret)
 
 
 def stream_triad(b: jax.Array, c: jax.Array, q: float, *,
                  block_rows: int = DEFAULT_BLOCK_ROWS,
-                 interpret: bool = False) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """a[i] = b[i] + q * c[i]   (24 B/iter, 2 flops — 'triad')."""
     return _run(functools.partial(_triad_kernel, q=q), [b, c], block_rows,
                 interpret)

@@ -78,7 +78,7 @@ def default_kv_placement(arch: str) -> str:
 def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
                kv_placement: str | None = None,
                bridge_budget: int = 8, edge_buffer: bool = True,
-               bridge_channels: int = 1,
+               bridge_channels: int = 1, bridge_fused: bool = True,
                microbatch: int = 1, replicate_kv_inner: bool = False,
                scan_decode: bool = True):
     """Returns (lowered, meta) for one cell."""
@@ -90,7 +90,8 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
         model=cfg, shape=shape,
         bridge=BridgeConfig(epoch_budget=bridge_budget,
                             edge_buffer=edge_buffer,
-                            channels=bridge_channels),
+                            channels=bridge_channels,
+                            fused=bridge_fused),
         kv_placement=kv, microbatch=microbatch, scan_layers=scan_decode)
     rules = make_rules(run.sharding, mesh, seq_len=shape.seq_len,
                        global_batch=shape.global_batch,
@@ -197,7 +198,7 @@ def roofline_terms(stats: hlo_analysis.HloStats, num_chips: int,
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              kv_placement: str | None = None, tag: str = "",
              bridge_budget: int = 8, edge_buffer: bool = True,
-             bridge_channels: int = 1,
+             bridge_channels: int = 1, bridge_fused: bool = True,
              microbatch: int = 1, replicate_kv_inner: bool = False,
              scan_decode: bool = True, force: bool = False) -> dict:
     RESULTS.mkdir(parents=True, exist_ok=True)
@@ -225,6 +226,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                                    bridge_budget=bridge_budget,
                                    edge_buffer=edge_buffer,
                                    bridge_channels=bridge_channels,
+                                   bridge_fused=bridge_fused,
                                    microbatch=microbatch,
                                    replicate_kv_inner=replicate_kv_inner,
                                    scan_decode=scan_decode)
@@ -282,6 +284,9 @@ def main() -> None:
     ap.add_argument("--no-edge-buffer", action="store_true")
     ap.add_argument("--channels", type=int, default=1,
                     help="pipelined bridge round-engine depth (1=serial)")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="unfused ppermute-chain bridge engines (escape "
+                         "hatch; fused Pallas datapath is the default)")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
@@ -299,6 +304,7 @@ def main() -> None:
                                bridge_budget=args.budget,
                                edge_buffer=not args.no_edge_buffer,
                                bridge_channels=args.channels,
+                               bridge_fused=not args.no_fused,
                                microbatch=args.microbatch,
                                replicate_kv_inner=args.replicate_kv_inner,
                                scan_decode=not args.no_scan_decode,

@@ -32,6 +32,10 @@ def main() -> None:
                          "placements) and print the aggregate")
     ap.add_argument("--channels", type=int, default=1,
                     help="pipelined bridge round-engine depth (1=serial)")
+    ap.add_argument("--no-fused", action="store_true",
+                    help="escape hatch: run the unfused ppermute-chain "
+                         "bridge engines instead of the fused Pallas "
+                         "datapath (bit-exact either way)")
     ap.add_argument("--tenants", type=int, default=1,
                     help="serve the batch as K tenants (sequence b belongs "
                          "to tenant b %% K); with --telemetry the bridge "
@@ -43,7 +47,8 @@ def main() -> None:
     shape = ShapeConfig("cli", args.max_len, args.batch, "decode")
     from repro.config import BridgeConfig
     run = RunConfig(model=cfg, shape=shape, kv_placement=args.kv,
-                    bridge=BridgeConfig(channels=args.channels))
+                    bridge=BridgeConfig(channels=args.channels,
+                                        fused=not args.no_fused))
 
     from repro.models import transformer
     params = transformer.init_params(cfg, jax.random.key(0))

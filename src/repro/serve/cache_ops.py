@@ -86,7 +86,8 @@ class BridgeCacheOps:
     def __init__(self, *, mode: str, max_len: int, page_tokens: int,
                  mesh: Optional[Mesh], mem_axis: str = "data",
                  budget: int = 8, edge_buffer: bool = True,
-                 channels: int = 1, collect_telemetry: bool = False,
+                 channels: int = 1, fused: bool = True,
+                 collect_telemetry: bool = False,
                  tenant_of_seq=None, max_tenants: int = 0,
                  dtype=jnp.bfloat16):
         assert mode in ("pull", "push"), mode
@@ -99,6 +100,7 @@ class BridgeCacheOps:
         self.budget = budget
         self.edge_buffer = edge_buffer
         self.channels = channels
+        self.fused = fused
         self.collect_telemetry = collect_telemetry
         self.tenant_of_seq = (None if tenant_of_seq is None
                               else jnp.asarray(tenant_of_seq, jnp.int32))
@@ -154,7 +156,8 @@ class BridgeCacheOps:
             page_tokens=self.page_tokens, max_pages=self.max_pages,
             mesh=self.mesh, mem_axis=self.mem_axis, budget=self.budget,
             edge_buffer=self.edge_buffer, channels=self.channels,
-            collect_telemetry=collect, tenant_of_seq=self.tenant_of_seq,
+            fused=self.fused, collect_telemetry=collect,
+            tenant_of_seq=self.tenant_of_seq,
             max_tenants=self.max_tenants)
         telem = None
         if collect:
@@ -166,7 +169,7 @@ class BridgeCacheOps:
                 max_pages=self.max_pages, mesh=self.mesh,
                 mem_axis=self.mem_axis, budget=self.budget,
                 edge_buffer=self.edge_buffer, channels=self.channels,
-                collect_telemetry=collect,
+                fused=self.fused, collect_telemetry=collect,
                 tenant_of_seq=self.tenant_of_seq,
                 max_tenants=self.max_tenants)
             if collect:

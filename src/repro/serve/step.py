@@ -42,6 +42,7 @@ def make_cache_ops(run: RunConfig, mesh: Optional[Mesh],
             budget=run.bridge.epoch_budget,
             edge_buffer=run.bridge.edge_buffer,
             channels=run.bridge.channels,
+            fused=run.bridge.fused,
             collect_telemetry=collect_telemetry,
             tenant_of_seq=tenant_of_seq, max_tenants=max_tenants,
             dtype=dtype)

@@ -1,0 +1,253 @@
+"""Fused Pallas datapath: bit-exactness, retrace and streaming attention.
+
+The ``fused=`` knob (default ON) must be observationally invisible: the
+fused serve/gather/commit kernels and the epoch-batched wire rounds serve
+exactly what the unfused ppermute-chain engines serve — pages AND telemetry
+bit-exact against both the unfused path and the numpy oracle, for arbitrary
+programs, fabrics, budgets, throttles and tenant lanes.  The N-device
+engines get the same treatment in tests/distributed/run_bridge_8dev.py;
+here the loopback path (a 1-device mesh modelling ``table_nodes`` logical
+ring nodes) keeps the whole contract under tier-1.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal environments
+    from hypofallback import given, settings, st
+
+from topologies import assert_telem_equal, make_pool, random_fabric
+
+from repro.core import bridge, kvbridge, ref, steering
+from repro.core.memport import FREE, MemPortTable
+from repro.kernels import bridge_gather
+from repro.kernels.bridge_attention import stream_decode_accumulate
+
+
+def _random_program(rng, topo):
+    n = topo.num_nodes
+    choice = rng.random()
+    if n == 1 or choice < 0.2:
+        return None
+    if choice < 0.45:
+        return steering.hierarchical_program(topo)
+    if choice < 0.6:
+        base = steering.hierarchical_program(topo)
+        rank_live = rng.random(np.asarray(base.rank_epoch).shape) < 0.8
+        return steering.masked_ranks_program(base, rank_live)
+    if choice < 0.8:
+        keep = [d for d in range(1, n) if rng.random() < 0.7] or [1]
+        return steering.pruned_program(steering.bidirectional_program(n),
+                                       keep)
+    return steering.unidirectional_program(n)
+
+
+# ---------------------------------------------------------------------------
+# Datapath kernels against plain-jnp oracles
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), width=st.integers(1, 12))
+def test_gather_scatter_kernels_match_oracle(seed, width):
+    rng = np.random.default_rng(seed)
+    pool = make_pool(16, 4, seed)
+    reqs = jnp.asarray(rng.integers(-2, 16, size=(width,)), jnp.int32)
+    got = bridge_gather.gather_pages(pool, reqs)
+    exp = np.where((np.asarray(reqs) >= 0)[:, None],
+                   np.asarray(pool)[np.clip(np.asarray(reqs), 0, None)], 0.0)
+    np.testing.assert_array_equal(np.asarray(got), exp)
+    # scatter: FREE drops, live rows land (single-writer: distinct rows)
+    rows = rng.permutation(16)[:width].astype(np.int32)
+    slots = jnp.asarray(np.where(rng.random(width) < 0.3, FREE, rows),
+                        jnp.int32)
+    data = jnp.asarray(rng.normal(size=(width, 4)), jnp.float32)
+    got = bridge_gather.scatter_pages(pool, slots, data)
+    exp = np.asarray(pool).copy()
+    for w, s in enumerate(np.asarray(slots)):
+        if s >= 0:
+            exp[s] = np.asarray(data)[w]
+    np.testing.assert_array_equal(np.asarray(got), exp)
+
+
+# ---------------------------------------------------------------------------
+# fused == unfused == oracle (pages + telemetry), loopback ring model
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    budget=st.integers(1, 8),
+    active_budget=st.integers(1, 8),
+    channels=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 10_000),
+)
+def test_fused_pull_push_bit_exact_property(budget, active_budget, channels,
+                                            seed):
+    """Random ragged fabrics x programs x channels x tenants: the fused
+    datapath serves bit-exactly the unfused engine's pages and counters,
+    and the full-throttle transfer matches the numpy oracle."""
+    rng = np.random.default_rng(seed)
+    topo = random_fabric(rng)
+    n, ppn = topo.num_nodes, 8
+    pool = make_pool(n * ppn, 4, seed)
+    num_logical = int(rng.integers(1, n * ppn + 1))
+    table = MemPortTable.striped(num_logical, n, ppn)
+    r = int(rng.integers(1, 16))
+    want = jnp.asarray(rng.integers(-1, num_logical, size=(n, r)), jnp.int32)
+    program = _random_program(rng, topo)
+    tenants = jnp.asarray(rng.integers(0, 3, size=(n, r)), jnp.int32)
+    kw = dict(mesh=None, budget=budget, channels=channels, table_nodes=n,
+              program=program, topology=topo, tenant_ids=tenants,
+              max_tenants=4, collect_telemetry=True,
+              active_budget=jnp.int32(active_budget))
+
+    got_f, telem_f = bridge.pull_pages(pool, want, table, fused=True, **kw)
+    got_u, telem_u = bridge.pull_pages(pool, want, table, fused=False, **kw)
+    np.testing.assert_array_equal(np.asarray(got_f), np.asarray(got_u))
+    assert_telem_equal(telem_f, telem_u, msg="pull ")
+
+    # full throttle -> the classic oracle covers the fused transfer too
+    full = bridge.pull_pages(pool, want, table, fused=True,
+                             mesh=None, budget=budget, channels=channels,
+                             table_nodes=n, program=program)
+    exp = ref.pull_pages_ref(pool, want, table, pages_per_node=ppn,
+                             program=program)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(exp))
+
+    # push mirrors (single-writer: duplicate-free destinations)
+    dest_ids = rng.permutation(num_logical)[: min(r, num_logical)]
+    dest = np.full((n, r), FREE, np.int32)
+    dest[0, : len(dest_ids)] = dest_ids
+    dest = jnp.asarray(dest)
+    payload = jnp.asarray(rng.normal(size=(n, r, 4)), jnp.float32)
+    push_f, ptelem_f = bridge.push_pages(pool, dest, payload, table,
+                                         fused=True, **kw)
+    push_u, ptelem_u = bridge.push_pages(pool, dest, payload, table,
+                                         fused=False, **kw)
+    np.testing.assert_array_equal(np.asarray(push_f), np.asarray(push_u))
+    assert_telem_equal(ptelem_f, ptelem_u, msg="push ")
+    push_full = bridge.push_pages(pool, dest, payload, table, fused=True,
+                                  mesh=None, budget=budget,
+                                  channels=channels, table_nodes=n,
+                                  program=program)
+    pexp = ref.push_pages_ref(pool, dest, payload, table,
+                              pages_per_node=ppn, program=program)
+    np.testing.assert_array_equal(np.asarray(push_full), np.asarray(pexp))
+
+
+def test_fused_pull_push_never_retraces():
+    """Program / table / throttle swaps hit one trace under fused=True."""
+    n, ppn, budget = 4, 8, 4
+    pool = make_pool(n * ppn, 4)
+    table = MemPortTable.striped(12, n, ppn)
+    want = jnp.asarray(np.arange(12, dtype=np.int32)[None, :])
+    payload = jnp.asarray(
+        np.random.default_rng(0).normal(size=(1, 12, 4)), jnp.float32)
+    pull = jax.jit(functools.partial(
+        bridge.pull_pages, mesh=None, budget=budget, table_nodes=n,
+        fused=True, collect_telemetry=True))
+    push = jax.jit(functools.partial(
+        bridge.push_pages, mesh=None, budget=budget, table_nodes=n,
+        fused=True, collect_telemetry=True))
+    progs = [steering.bidirectional_program(n),
+             steering.unidirectional_program(n),
+             steering.pruned_program(steering.bidirectional_program(n), [2])]
+    t2 = MemPortTable.blocked(12, n, ppn)
+    for prog in progs:
+        for tab in (table, t2):
+            for ab in (4, 2):
+                pull(pool, want, tab, program=prog,
+                     active_budget=jnp.int32(ab))
+                push(pool, want, payload, tab, program=prog,
+                     active_budget=jnp.int32(ab))
+    assert pull._cache_size() == 1, pull._cache_size()
+    assert push._cache_size() == 1, push._cache_size()
+
+
+# ---------------------------------------------------------------------------
+# Streaming decode attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_stream_decode_accumulate_matches_dense(seed):
+    """The round-streamed kernel == dense softmax over each seq's pages."""
+    rng = np.random.default_rng(seed)
+    b, h, kv, hd, t = 3, 8, 2, 16, 4
+    w = int(rng.integers(1, 9))
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(w, t, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(w, t, kv, hd)), jnp.float32)
+    seq = jnp.asarray(rng.integers(0, b + 1, size=(w,)), jnp.int32)  # b=none
+    live = jnp.asarray(rng.random(w) < 0.8, jnp.int32)
+    m = jnp.full((b, h), -1e30, jnp.float32)
+    l = jnp.zeros((b, h), jnp.float32)
+    o = jnp.zeros((b, h, hd), jnp.float32)
+    # stream the lanes in two arbitrary rounds
+    cut = w // 2
+    m, l, o = stream_decode_accumulate(q, k[:cut], v[:cut], seq[:cut],
+                                       live[:cut], m, l, o)
+    m, l, o = stream_decode_accumulate(q, k[cut:], v[cut:], seq[cut:],
+                                       live[cut:], m, l, o)
+    got = np.asarray(o) / np.maximum(np.asarray(l), 1e-30)[:, :, None]
+    g = h // kv
+    for bi in range(b):
+        sel = (np.asarray(seq) == bi) & (np.asarray(live) > 0)
+        if not sel.any():
+            assert np.asarray(l)[bi].max() == 0.0
+            continue
+        kk = np.asarray(k)[sel].reshape(-1, kv, hd)
+        vv = np.asarray(v)[sel].reshape(-1, kv, hd)
+        qg = np.asarray(q)[bi].reshape(kv, g, hd)
+        s = np.einsum("kgd,tkd->kgt", qg, kk).reshape(h, -1) * hd ** -0.5
+        p = np.exp(s - s.max(1, keepdims=True))
+        exp = (np.einsum("kgt,tkd->kgd", p.reshape(kv, g, -1), vv)
+               .reshape(h, hd) / p.sum(1)[:, None])
+        np.testing.assert_allclose(got[bi], exp, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_streaming_decode_attention_matches_unfused_and_ref(seed):
+    """fused decode_attention_pull: pages consumed per-round inside the
+    attention grid == the materialized unfused chain (float tolerance) ==
+    the dense oracle; telemetry stays bit-exact."""
+    rng = np.random.default_rng(seed)
+    b, h, kv, hd = int(rng.integers(1, 5)), 8, 2, 8
+    t, max_pages = 4, int(rng.integers(1, 5))
+    budget = int(rng.integers(1, 5))
+    max_len = t * max_pages
+    cache = kvbridge.init_cache(1, b, max_len, t, kv, hd, mesh=None,
+                                dtype=jnp.float32)
+    layer = jax.tree.map(lambda x: x[0], cache.layers)
+    lengths = jnp.zeros((b,), jnp.int32)
+    steps = int(rng.integers(1, max_len + 1))
+    dense_k = np.zeros((b, steps, kv, hd), np.float32)
+    dense_v = np.zeros((b, steps, kv, hd), np.float32)
+    for step in range(steps):
+        kn = rng.normal(size=(b, kv, hd)).astype(np.float32)
+        vn = rng.normal(size=(b, kv, hd)).astype(np.float32)
+        dense_k[:, step], dense_v[:, step] = kn, vn
+        layer = kvbridge.append(layer, cache.table, lengths, jnp.asarray(kn),
+                                jnp.asarray(vn), page_tokens=t,
+                                max_pages=max_pages, mesh=None,
+                                budget=budget)
+        lengths = lengths + 1
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    tenant = jnp.asarray(rng.integers(0, 2, size=(b,)), jnp.int32)
+    kwargs = dict(page_tokens=t, max_pages=max_pages, mesh=None,
+                  budget=budget, collect_telemetry=True,
+                  tenant_of_seq=tenant, max_tenants=3)
+    out_f, telem_f = kvbridge.decode_attention_pull(
+        q, layer, cache.table, lengths, fused=True, **kwargs)
+    out_u, telem_u = kvbridge.decode_attention_pull(
+        q, layer, cache.table, lengths, fused=False, **kwargs)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_u),
+                               atol=2e-5)
+    assert_telem_equal(telem_f, telem_u)
+    exp = kvbridge.decode_attention_ref(q, jnp.asarray(dense_k),
+                                        jnp.asarray(dense_v), lengths)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(exp), atol=2e-5)
