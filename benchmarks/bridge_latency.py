@@ -35,6 +35,17 @@ weighted-fair QoS windows — the acceptance bar keeps the interactive
 tenant's completion latency within 1.5x of its solo run while naive
 sharing degrades with the backlog depth.
 
+The ``calibration`` section closes the observability loop (``repro.obs``):
+every measured scenario runs inside a fenced trace span (the whole run's
+span tree is written to ``BENCH_trace.json``, openable in Perfetto), each
+timed pull contributes a ``(route-feature, measured us)`` sample, and a
+``repro.core.perfmodel.Calibrator`` RLS fit of the analytic model's
+constants is compared against the static datasheet prior per scenario —
+``validate_bench.py`` gates fitted <= static.  ``pipeline`` additionally
+records a per-depth ``phase_breakdown`` from ``obs:<phase>`` named-scope
+op counts in the compiled HLO, attributing the unfused depth>1 wall-clock
+regression to steering-collective dispatch.
+
 Emits CSV rows: name,us_per_call,derived — and writes the same data
 machine-readably to ``BENCH_bridge.json`` at the repo root so the perf
 trajectory is tracked across PRs (schema checked by
@@ -60,6 +71,7 @@ from repro.core import bridge, perfmodel, ref, steering
 from repro.core.control_plane import ControlPlane
 from repro.core.memport import MemPortTable
 from repro.core.topology import Topology
+from repro.obs import TraceRecorder, phase_op_counts
 from repro.orchestrator import Orchestrator, TenantSpec
 from repro.telemetry import TelemetryAggregator
 
@@ -67,6 +79,14 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json
 # Standalone fused-vs-unfused comparison record (CI uploads it next to
 # BENCH_bridge.json so the fused-datapath claim is a first-class artifact).
 FUSED_JSON = BENCH_JSON.with_name("BENCH_fused_compare.json")
+# Chrome-trace/Perfetto span record of every measured scenario in this run
+# (CI uploads it; open at https://ui.perfetto.dev).
+TRACE_JSON = BENCH_JSON.with_name("BENCH_trace.json")
+
+# Online-calibration fit: RLS passes over the measured-scenario samples
+# (deterministic order, so the fitted constants are reproducible given the
+# same wall-clock samples).
+CAL_EPOCHS = 4
 
 # Route-program comparison geometry: an 8-node mem ring moving 256 KiB pages
 # in rounds of 8; "pruned" keeps the three distances a blocked/affinity
@@ -130,7 +150,9 @@ def measure_sw_pull_us(reps: int = 50) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def skewed_traffic_scenario() -> tuple:
+def skewed_traffic_scenario(recorder: TraceRecorder | None = None,
+                            samples: list | None = None,
+                            quick: bool = False) -> tuple:
     """Measure a skewed matrix, recompile, compare predicted latencies.
 
     Returns ``(measured, program, aggregator, control_plane)``: the
@@ -140,6 +162,12 @@ def skewed_traffic_scenario() -> tuple:
     8-device ring or oracle counters) — plus the telemetry-compiled
     load-balanced program and the aggregator / control plane that compiled
     it (``pipeline_sweep`` reuses them for the measured channels pick).
+
+    When running on the real ring the pull is also wall-clock timed inside
+    a fenced trace span (annotated with the exact bridge counters) and a
+    ``(features, measured_us)`` calibration sample is appended to
+    ``samples`` — the feature vector prices the *actual* moved bytes, not
+    the scenario's nominal 256 KiB page, so the fit sees what ran.
     """
     n, ppn = ROUTE_NODES, 16
     cp = ControlPlane(num_nodes=n, pages_per_node=ppn, num_logical=n * ppn)
@@ -157,14 +185,37 @@ def skewed_traffic_scenario() -> tuple:
     rounds = steering.num_rounds(want.shape[1], ROUTE_BUDGET)
 
     source = "oracle"
+    measured_pull_us = None
     if jax.device_count() >= n:
         source = f"{n}-device ring"
         mesh = jax.make_mesh((n,), ("data",))
         pool = jnp.zeros((n * ppn, 4), jnp.float32)
+        rec = recorder if recorder is not None else TraceRecorder()
+        reps = 2 if quick else 5
         with bridge.use_mesh(mesh):
-            _, telem = bridge.pull_pages(
-                pool, jnp.asarray(want), table, mesh=mesh,
-                budget=ROUTE_BUDGET, collect_telemetry=True)
+            pull = jax.jit(lambda p, w, t: bridge.pull_pages(
+                p, w, t, mesh=mesh, budget=ROUTE_BUDGET,
+                collect_telemetry=True))
+            wj = jnp.asarray(want)
+            jax.block_until_ready(pull(pool, wj, table))   # compile
+            t0 = time.perf_counter()
+            with rec.span("transfer:skewed", scenario="skewed",
+                          rounds=rounds, reps=reps) as sp:
+                for _ in range(reps):
+                    r = pull(pool, wj, table)
+                rec.fence(r)
+            measured_pull_us = (time.perf_counter() - t0) / reps * 1e6
+        _, telem = r
+        rec.annotate_telemetry(sp, telem, page_bytes=pool.shape[1] * 4)
+        if samples is not None:
+            samples.append({
+                "scenario": "skewed", "name": "skewed_pull",
+                "features": [round(float(x), 6) for x in
+                             perfmodel.route_features(
+                                 steering.bidirectional_program(n),
+                                 pool.shape[1] * 4, ROUTE_BUDGET,
+                                 rounds=rounds)],
+                "measured_us": round(measured_pull_us, 1)})
     else:
         telem = ref.expected_transfer_telemetry(
             want, table, steering.bidirectional_program(n), num_nodes=n,
@@ -182,7 +233,7 @@ def skewed_traffic_scenario() -> tuple:
         bi, ROUTE_PAGE_BYTES, ROUTE_BUDGET, slot_pages=slot_pages)
     lat_lb = perfmodel.predict_round_latency_us(
         lb, ROUTE_PAGE_BYTES, ROUTE_BUDGET, slot_pages=slot_pages)
-    return {
+    out = {
         "source": source,
         "skew_pages": {str(d): c for d, c in SKEW_PAGES.items()},
         "distance_pages_per_round": [round(float(x), 3) for x in slot_pages],
@@ -190,11 +241,70 @@ def skewed_traffic_scenario() -> tuple:
         "pruned": int(np.asarray(telem.pruned).sum()),
         "static_bidirectional_us": round(lat_bi, 2),
         "load_balanced_us": round(lat_lb, 2),
-    }, lb, agg, cp
+    }
+    if measured_pull_us is not None:
+        out["measured_pull_us"] = round(measured_pull_us, 1)
+    return out, lb, agg, cp
+
+
+def _phase_breakdown(phase_ops: dict, measured: dict,
+                     measured_unfused: dict) -> dict:
+    """Attribute the pipeline-depth wall-clock to datapath phases.
+
+    The unfused engine's op count inside the ``obs:`` scopes scales with
+    ``2*(N-1)*channels`` (every extra channel re-runs the whole
+    request/data ppermute ladder per chunk), while the fused engine keeps
+    one request all_gather and a fixed payload exchange at any depth.  A
+    linear fit of measured wall-clock against scoped op count across the
+    unfused sweep yields the per-op dispatch cost on this backend; each
+    phase's attributed share is ``us_per_op * its op count``.  This is the
+    measured explanation of the depth>1 slowdown first recorded in the
+    pipelined-engine PR: dispatch grows with depth, and on an emulated
+    synchronous ring no overlap exists to pay for it.
+    """
+    depths = sorted(phase_ops["unfused"], key=int)
+    totals = {c: sum(phase_ops["unfused"][c].values()) for c in depths}
+    xs = np.array([totals[c] for c in depths], float)
+    ys = np.array([measured_unfused[c] for c in depths], float)
+    if len(depths) > 1 and float(np.ptp(xs)) > 0:
+        us_per_op, base_us = (float(v) for v in np.polyfit(xs, ys, 1))
+    else:
+        us_per_op, base_us = 0.0, float(ys.mean()) if len(depths) else 0.0
+    out: dict = {"unfused": {}, "fused": {}}
+    for c in depths:
+        ops = phase_ops["unfused"][c]
+        out["unfused"][c] = {
+            "total_us": measured_unfused[c],
+            "phase_ops": ops,
+            "total_ops": totals[c],
+            "attributed_us": {ph: round(us_per_op * k, 1)
+                              for ph, k in sorted(ops.items())},
+        }
+    for c in sorted(phase_ops["fused"], key=int):
+        ops = phase_ops["fused"][c]
+        out["fused"][c] = {
+            "total_us": measured[c],
+            "phase_ops": ops,
+            "total_ops": sum(ops.values()),
+        }
+    out["dispatch_us_per_op"] = round(us_per_op, 2)
+    out["dispatch_base_us"] = round(base_us, 1)
+    out["finding"] = (
+        "unfused wall-clock grows with depth because every extra channel "
+        "adds another 2*(N-1) steering collectives per round (the "
+        "wire_req/wire_data op counts scale with channels) and the "
+        "emulated host ring pays per-op dispatch with nothing "
+        "overlapping; the fused engine's phase op counts stay flat, so "
+        "does its wall-clock. The modeled overlap win needs a real wire; "
+        "here the calibrated per-chunk overhead keeps select_channels "
+        "serial.")
+    return out
 
 
 def pipeline_sweep(agg: TelemetryAggregator, cp: ControlPlane,
-                   quick: bool = False) -> dict:
+                   quick: bool = False,
+                   recorder: TraceRecorder | None = None,
+                   samples: list | None = None) -> dict:
     """Pipeline-depth sweep: the pipelined multi-channel round engine.
 
     Models one bridge round at every depth in PIPELINE_CHANNELS (worst-case
@@ -208,6 +318,15 @@ def pipeline_sweep(agg: TelemetryAggregator, cp: ControlPlane,
     ppermute synchronously (nothing can overlap) and pays per-op dispatch
     for the smaller chunked gathers, so the overlap win exists only where
     the wire is real (the model's regime).
+
+    The ``phase_breakdown`` record makes that attribution evidence, not
+    narrative: every depth's compiled program is counted per
+    ``obs:<phase>`` named scope (``repro.obs.phase_op_counts``), and a
+    linear dispatch fit ``measured_us ~ base + us_per_op * phase_ops``
+    over the unfused sweep prices each phase's share of the measured
+    wall-clock.  Each timed loop also runs inside a fenced trace span and
+    appends a calibration sample (features x measured wall-clock) to
+    ``samples``.
     """
     bi = steering.bidirectional_program(ROUTE_NODES)
     model = {str(c): round(perfmodel.predict_round_latency_us(
@@ -233,25 +352,47 @@ def pipeline_sweep(agg: TelemetryAggregator, cp: ControlPlane,
         want = jnp.asarray(
             rng.integers(0, n * ppn, size=(n, 16)).astype(np.int32))
         reps = 3 if quick else 30
+        rounds = steering.num_rounds(want.shape[1], ROUTE_BUDGET)
+        page_bytes = pool.shape[1] * 4
+        rec = recorder if recorder is not None else TraceRecorder()
         measured: dict = {}
         measured_unfused: dict = {}
+        phase_ops: dict = {"fused": {}, "unfused": {}}
         with bridge.use_mesh(mesh):
             for c in PIPELINE_CHANNELS:
                 for fused, acc in ((True, measured),
                                    (False, measured_unfused)):
+                    key = "fused" if fused else "unfused"
                     pull = jax.jit(
                         lambda p, w, t, _c=c, _f=fused: bridge.pull_pages(
                             p, w, t, mesh=mesh, budget=ROUTE_BUDGET,
                             channels=_c, fused=_f))
-                    jax.block_until_ready(pull(pool, want, table))
+                    compiled = pull.lower(pool, want, table).compile()
+                    phase_ops[key][str(c)] = phase_op_counts(
+                        compiled.as_text())
+                    jax.block_until_ready(compiled(pool, want, table))
                     t0 = time.perf_counter()
-                    for _ in range(reps):
-                        r = pull(pool, want, table)
-                    jax.block_until_ready(r)
+                    with rec.span(f"transfer:pipeline_{key}_c{c}",
+                                  scenario="pipeline", engine=key,
+                                  channels=c, reps=reps):
+                        for _ in range(reps):
+                            r = compiled(pool, want, table)
+                        rec.fence(r)
                     acc[str(c)] = round(
                         (time.perf_counter() - t0) / reps * 1e6, 1)
+                    if samples is not None:
+                        samples.append({
+                            "scenario": "pipeline",
+                            "name": f"pipeline_{key}_c{c}",
+                            "features": [round(float(x), 6) for x in
+                                         perfmodel.route_features(
+                                             bi, page_bytes, ROUTE_BUDGET,
+                                             rounds=rounds, channels=c)],
+                            "measured_us": acc[str(c)]})
         out["measured_us_per_call"] = measured
         out["measured_unfused_us_per_call"] = measured_unfused
+        out["phase_breakdown"] = _phase_breakdown(
+            phase_ops, measured, measured_unfused)
         # Model-vs-measured shape error: both sweeps normalized to their
         # serial (channels=1) point, so the record tracks whether deeper
         # pipelines *scale* the way the model says they should — the PR 4
@@ -266,7 +407,9 @@ def pipeline_sweep(agg: TelemetryAggregator, cp: ControlPlane,
     return out
 
 
-def fused_section(quick: bool = False) -> dict:
+def fused_section(quick: bool = False,
+                  recorder: TraceRecorder | None = None,
+                  samples: list | None = None) -> dict:
     """Fused vs unfused epoch wall-clock + lowered-datapath op counts.
 
     Times one jitted ``pull_pages`` epoch (2 rounds of budget 8) on the
@@ -302,31 +445,50 @@ def fused_section(quick: bool = False) -> dict:
     want = jnp.asarray(
         rng.integers(0, n * ppn, size=(n, 16)).astype(np.int32))
     reps = 10 if quick else 24
+    rec = recorder if recorder is not None else TraceRecorder()
+    rounds = steering.num_rounds(want.shape[1], ROUTE_BUDGET)
+    bi = steering.bidirectional_program(n)
     with bridge.use_mesh(mesh):
         for label, page_bytes in FUSED_PAGE_SIZES.items():
             pool = jnp.asarray(rng.normal(
                 size=(n * ppn, page_bytes // 4)).astype(np.float32))
             entry: dict = {"page_bytes": page_bytes}
-            pulls, samples = {}, {}
+            pulls, times = {}, {}
             for fused in (True, False):
                 pulls[fused] = jax.jit(
                     lambda p, w, t, _f=fused: bridge.pull_pages(
                         p, w, t, mesh=mesh, budget=ROUTE_BUDGET, fused=_f))
                 jax.block_until_ready(pulls[fused](pool, want, table))
-                samples[fused] = []
-            for rep in range(reps):
-                order = (True, False) if rep % 2 == 0 else (False, True)
-                for fused in order:
-                    t0 = time.perf_counter()
-                    jax.block_until_ready(pulls[fused](pool, want, table))
-                    samples[fused].append(time.perf_counter() - t0)
+                times[fused] = []
+            with rec.span(f"transfer:fused_{label}", scenario="fused",
+                          page_bytes=page_bytes, reps=reps) as sp:
+                for rep in range(reps):
+                    order = (True, False) if rep % 2 == 0 else (False, True)
+                    for fused in order:
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(
+                            pulls[fused](pool, want, table))
+                        times[fused].append(time.perf_counter() - t0)
             entry["fused_us"] = round(
-                float(np.median(samples[True])) * 1e6, 1)
+                float(np.median(times[True])) * 1e6, 1)
             entry["unfused_us"] = round(
-                float(np.median(samples[False])) * 1e6, 1)
+                float(np.median(times[False])) * 1e6, 1)
             entry["speedup"] = round(entry["unfused_us"]
                                      / max(entry["fused_us"], 1e-9), 2)
+            rec.annotate(sp, fused_us=entry["fused_us"],
+                         unfused_us=entry["unfused_us"])
             out["page_sweep"][label] = entry
+            if samples is not None:
+                # The only samples with non-trivial wire bytes: they make
+                # the calibrator's us/MiB payload term identifiable.
+                feats = [round(float(x), 6) for x in perfmodel.route_features(
+                    bi, page_bytes, ROUTE_BUDGET, rounds=rounds)]
+                for engine in ("fused", "unfused"):
+                    samples.append({
+                        "scenario": "fused",
+                        "name": f"fused_{label}_{engine}",
+                        "features": feats,
+                        "measured_us": entry[f"{engine}_us"]})
         # Lowered-HLO structure at the latency-bound size (where dispatch
         # and copy overhead, not wire bytes, decide the epoch time).
         pool = jnp.asarray(rng.normal(
@@ -345,18 +507,49 @@ def fused_section(quick: bool = False) -> dict:
 
 
 def _measure_composition(want, lane, table, program, n: int,
-                         active_budget) -> object:
-    """Telemetry for one composed request matrix (real ring or oracle)."""
+                         active_budget, recorder=None, label: str = "",
+                         samples: list | None = None,
+                         reps: int = 3) -> object:
+    """Telemetry for one composed request matrix (real ring or oracle).
+
+    On the real ring the composition is jitted, wall-clock timed inside a
+    fenced trace span annotated with the per-tenant bridge counters, and
+    (when ``samples`` is given) appended as a calibration sample.
+    """
     if jax.device_count() >= n:
         ppn = 16
         mesh = jax.make_mesh((n,), ("data",))
         pool = jnp.zeros((n * ppn, 4), jnp.float32)
+        rec = recorder if recorder is not None else TraceRecorder()
         with bridge.use_mesh(mesh):
-            _, telem = bridge.pull_pages(
-                pool, jnp.asarray(want), table, mesh=mesh,
-                budget=ROUTE_BUDGET, program=program,
-                active_budget=jnp.asarray(active_budget),
-                collect_telemetry=True, tenant_ids=jnp.asarray(lane))
+            pull = jax.jit(lambda p, w, t, ab, tid: bridge.pull_pages(
+                p, w, t, mesh=mesh, budget=ROUTE_BUDGET, program=program,
+                active_budget=ab, collect_telemetry=True, tenant_ids=tid))
+            args = (pool, jnp.asarray(want), table,
+                    jnp.asarray(active_budget), jnp.asarray(lane))
+            jax.block_until_ready(pull(*args))   # compile
+            t0 = time.perf_counter()
+            with rec.span(f"transfer:tenancy_{label or 'composition'}",
+                          scenario="tenancy", composition=label,
+                          reps=reps) as sp:
+                for _ in range(reps):
+                    r = pull(*args)
+                rec.fence(r)
+            dt_us = (time.perf_counter() - t0) / reps * 1e6
+        _, telem = r
+        rec.annotate_telemetry(
+            sp, telem, page_bytes=pool.shape[1] * 4,
+            tenant_names={0: "interactive", 1: "batch"})
+        if samples is not None:
+            rounds = steering.num_rounds(want.shape[1], ROUTE_BUDGET)
+            samples.append({
+                "scenario": "tenancy",
+                "name": f"tenancy_{label or 'composition'}",
+                "features": [round(float(x), 6) for x in
+                             perfmodel.route_features(
+                                 program, pool.shape[1] * 4, ROUTE_BUDGET,
+                                 rounds=rounds)],
+                "measured_us": round(dt_us, 1)})
         return telem
     return ref.expected_transfer_telemetry(
         want, table, program, num_nodes=n, budget=ROUTE_BUDGET,
@@ -382,7 +575,8 @@ def _interactive_completion_us(telem, program, n: int, last_idx: int,
     return steering.num_rounds(last_idx + 1, ROUTE_BUDGET) * round_us
 
 
-def tenancy_scenario() -> dict:
+def tenancy_scenario(recorder: TraceRecorder | None = None,
+                     samples: list | None = None) -> dict:
     """Interactive decode tenant vs a batch-pull noisy neighbour.
 
     Three compositions of the same offered load, measured (real 8-ring or
@@ -451,7 +645,9 @@ def tenancy_scenario() -> dict:
     lane_solo = np.zeros_like(want_solo)
     telem_solo = _measure_composition(want_solo, lane_solo, table, program,
                                       n, np.full((n,), ROUTE_BUDGET,
-                                                 np.int32))
+                                                 np.int32),
+                                      recorder=recorder, label="solo",
+                                      samples=samples)
     solo_us = _interactive_completion_us(telem_solo, program, n,
                                          inter_pages - 1, inter_pages)
 
@@ -465,7 +661,9 @@ def tenancy_scenario() -> dict:
         want_naive[i, TENANCY_BATCH_BACKLOG:] = inter_rows[i]
     telem_naive = _measure_composition(want_naive, lane_naive, table,
                                        program, n,
-                                       np.full((n,), ROUTE_BUDGET, np.int32))
+                                       np.full((n,), ROUTE_BUDGET, np.int32),
+                                       recorder=recorder, label="naive_fifo",
+                                       samples=samples)
     naive_us = _interactive_completion_us(telem_naive, program, n,
                                           naive_len - 1, naive_len)
 
@@ -473,7 +671,9 @@ def tenancy_scenario() -> dict:
     backlogs = {0: inter_rows, 1: batch_rows}
     want_qos, lane_qos, _ = orc.compose_requests(backlogs)
     telem_qos = _measure_composition(want_qos, lane_qos, table, program, n,
-                                     orc.active_budget())
+                                     orc.active_budget(),
+                                     recorder=recorder, label="qos",
+                                     samples=samples)
     windows = dict(orc.schedule.windows)
     qos_us = _interactive_completion_us(telem_qos, program, n,
                                         windows[0] - 1,
@@ -501,7 +701,8 @@ def tenancy_scenario() -> dict:
     }
 
 
-def hierarchical_scenario(num_boards: int, board_size: int) -> dict:
+def hierarchical_scenario(num_boards: int, board_size: int,
+                          recorder: TraceRecorder | None = None) -> dict:
     """Flat-vs-hierarchical round latency under intra-board-heavy traffic.
 
     Builds the fabric, drives an intra-heavy request matrix (each endpoint
@@ -537,10 +738,17 @@ def hierarchical_scenario(num_boards: int, board_size: int) -> dict:
         source = f"{n}-device ring"
         mesh = jax.make_mesh((n,), ("data",))
         pool = jnp.zeros((n * ppn, 4), jnp.float32)
+        rec = recorder if recorder is not None else TraceRecorder()
         with bridge.use_mesh(mesh):
-            _, telem = bridge.pull_pages(
-                pool, jnp.asarray(want), table, mesh=mesh,
-                budget=ROUTE_BUDGET, topology=topo, collect_telemetry=True)
+            with rec.span(f"transfer:hierarchical_{num_boards}x{board_size}",
+                          scenario="hierarchical", boards=num_boards,
+                          board_size=board_size) as sp:
+                _, telem = bridge.pull_pages(
+                    pool, jnp.asarray(want), table, mesh=mesh,
+                    budget=ROUTE_BUDGET, topology=topo,
+                    collect_telemetry=True)
+                rec.fence(telem)
+        rec.annotate_telemetry(sp, telem, page_bytes=pool.shape[1] * 4)
     else:
         telem = ref.expected_transfer_telemetry(
             want, table, bi, num_nodes=n, budget=ROUTE_BUDGET, topology=topo)
@@ -575,6 +783,73 @@ def hierarchical_scenario(num_boards: int, board_size: int) -> dict:
     }
 
 
+def calibration_section(samples: list, cp: ControlPlane,
+                        agg: TelemetryAggregator) -> dict:
+    """Fit the online perfmodel calibrator on the measured-scenario samples.
+
+    Every wall-clock sample collected by the skewed / pipeline / tenancy
+    scenarios is a ``(route-feature vector, measured us)`` pair; CAL_EPOCHS
+    deterministic RLS passes fit the linearized analytic model's constants
+    (per-tier hop RTTs, payload us/MiB, per-chunk and per-transfer
+    overhead) to what this backend actually ran.  The record compares the
+    static-prior prediction against the fitted one per sample and per
+    scenario — ``validate_bench.py`` gates fitted <= static, i.e. the
+    measure->fit->steer loop must beat the datasheet constants on its own
+    training regime before anyone trusts it to steer.  The fitted
+    calibrator then re-runs the control plane's pipeline-depth pick so the
+    steering consequence (dispatch-dominated backend -> stay serial) is
+    recorded next to the constants that caused it.
+    """
+    out: dict = {"source": "model-only",
+                 "feature_names": list(perfmodel.FEATURE_NAMES),
+                 "epochs": CAL_EPOCHS}
+    if not samples:
+        return out
+    out["source"] = f"{ROUTE_NODES}-device ring"
+    cal = perfmodel.Calibrator()
+    for _ in range(CAL_EPOCHS):
+        for s in samples:
+            cal.observe(s["features"], s["measured_us"])
+    rows_out = []
+    per_scen: dict[str, list[tuple[float, float]]] = {}
+    for s in samples:
+        m = float(s["measured_us"])
+        static_us = cal.static_predict_us(s["features"])
+        fitted_us = cal.predict_us(s["features"])
+        se = abs(static_us - m) / max(m, 1e-9)
+        fe = abs(fitted_us - m) / max(m, 1e-9)
+        rows_out.append({**s, "static_us": round(static_us, 1),
+                         "fitted_us": round(fitted_us, 1),
+                         "static_err": round(se, 4),
+                         "fitted_err": round(fe, 4)})
+        per_scen.setdefault(s["scenario"], []).append((se, fe))
+    err = {scen: {"static": round(sum(e[0] for e in v) / len(v), 4),
+                  "fitted": round(sum(e[1] for e in v) / len(v), 4)}
+           for scen, v in sorted(per_scen.items())}
+    flat = [e for v in per_scen.values() for e in v]
+    err["overall"] = {
+        "static": round(sum(e[0] for e in flat) / len(flat), 4),
+        "fitted": round(sum(e[1] for e in flat) / len(flat), 4)}
+    out["constants"] = cal.constants()
+    out["samples"] = rows_out
+    out["model_vs_measured_error"] = err
+    out["selected_channels"] = {
+        "static": {
+            "wire_bound_256KiB": cp.select_channels(
+                ROUTE_BUDGET, ROUTE_PAGE_BYTES, telemetry=agg),
+            "latency_bound_4KiB": cp.select_channels(
+                ROUTE_BUDGET, SMALL_PAGE_BYTES, telemetry=agg)},
+        "calibrated": {
+            "wire_bound_256KiB": cp.select_channels(
+                ROUTE_BUDGET, ROUTE_PAGE_BYTES, telemetry=agg,
+                calibrator=cal),
+            "latency_bound_4KiB": cp.select_channels(
+                ROUTE_BUDGET, SMALL_PAGE_BYTES, telemetry=agg,
+                calibrator=cal)},
+    }
+    return out
+
+
 def rows(quick: bool = False) -> list[str]:
     out = []
     total = sum(perfmodel.RTT_PIPELINE_CYCLES.values())
@@ -600,8 +875,14 @@ def rows(quick: bool = False) -> list[str]:
                               "num_nodes": ROUTE_NODES,
                               "page_bytes": ROUTE_PAGE_BYTES,
                               "budget": ROUTE_BUDGET, "variants": {}}
+    # Every measured scenario below runs inside this recorder's fenced
+    # spans (written to BENCH_trace.json) and feeds the calibration
+    # samples the online perfmodel fit consumes at the end.
+    recorder = TraceRecorder(process_name="bench:bridge_latency")
+    cal_samples: list[dict] = []
     # the measured closed loop: skew -> telemetry -> load-balanced program
-    measured, lb_prog, skew_agg, skew_cp = skewed_traffic_scenario()
+    measured, lb_prog, skew_agg, skew_cp = skewed_traffic_scenario(
+        recorder=recorder, samples=cal_samples, quick=quick)
     variants = dict(route_variants())
     variants["load_balanced"] = lb_prog
     for name, prog in variants.items():
@@ -629,7 +910,8 @@ def rows(quick: bool = False) -> list[str]:
         f" static_bi={measured['static_bidirectional_us']}us"
         f" load_balanced={measured['load_balanced_us']}us")
     # pipelined multi-channel round engine: depth sweep + control-plane pick
-    pipe = pipeline_sweep(skew_agg, skew_cp, quick=quick)
+    pipe = pipeline_sweep(skew_agg, skew_cp, quick=quick,
+                          recorder=recorder, samples=cal_samples)
     bench["pipeline"] = pipe
     sweep = " ".join(f"c{c}={pipe['model_round_us'][str(c)]}us"
                      for c in PIPELINE_CHANNELS)
@@ -637,7 +919,8 @@ def rows(quick: bool = False) -> list[str]:
         f"bridge_pipeline_sweep,0,source={pipe['source']} {sweep}"
         f" picks={pipe['selected_channels']}")
     # fused vs unfused epoch wall-clock (the Pallas datapath claim)
-    fus = fused_section(quick=quick)
+    fus = fused_section(quick=quick, recorder=recorder,
+                        samples=cal_samples)
     bench["fused"] = fus
     FUSED_JSON.write_text(json.dumps(fus, indent=2) + "\n")
     if fus["page_sweep"]:
@@ -650,14 +933,14 @@ def rows(quick: bool = False) -> list[str]:
     # flat ring vs board + rack fabric (8 real endpoints, 16/32 simulated)
     bench["hierarchical"] = {}
     for label, (boards, size) in HIER_FABRICS.items():
-        h = hierarchical_scenario(boards, size)
+        h = hierarchical_scenario(boards, size, recorder=recorder)
         bench["hierarchical"][label] = h
         out.append(
             f"bridge_hier_{label},0,{boards}x{size} source={h['source']}"
             f" flat_bi={h['flat_bidirectional_us']}us"
             f" hier={h['hierarchical_us']}us")
     # multi-tenant co-location: QoS windows vs naive FIFO sharing
-    ten = tenancy_scenario()
+    ten = tenancy_scenario(recorder=recorder, samples=cal_samples)
     bench["tenancy"] = ten
     out.append(
         f"bridge_tenancy,0,source={ten['source']}"
@@ -666,8 +949,23 @@ def rows(quick: bool = False) -> list[str]:
         f" (x{ten['qos_isolation_ratio']})"
         f" naive={ten['interactive_naive_us']}us"
         f" (x{ten['naive_degradation_ratio']})")
+    # online calibration: fit the perfmodel constants to what actually ran
+    cal = calibration_section(cal_samples, skew_cp, skew_agg)
+    bench["calibration"] = cal
+    if "model_vs_measured_error" in cal:
+        e = cal["model_vs_measured_error"]["overall"]
+        out.append(
+            f"bridge_calibration,0,source={cal['source']}"
+            f" samples={len(cal['samples'])}"
+            f" err_static={e['static']} err_fitted={e['fitted']}"
+            f" picks={cal['selected_channels']['calibrated']}")
+    else:
+        out.append(f"bridge_calibration,0,source={cal['source']}")
     BENCH_JSON.write_text(json.dumps(bench, indent=2) + "\n")
     out.append(f"bridge_route_json,0,{BENCH_JSON.name}")
+    recorder.write(str(TRACE_JSON))
+    out.append(f"bridge_trace,0,{TRACE_JSON.name}"
+               f" spans={len(recorder.spans)} (https://ui.perfetto.dev)")
     return out
 
 

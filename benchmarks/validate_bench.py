@@ -10,6 +10,12 @@ topology-blind flat bidirectional one under intra-board-heavy traffic,
 and the orchestrator's QoS windows keep the interactive tenant's
 co-located completion latency within 1.5x of its solo run (the isolation
 bound) while naive FIFO sharing is strictly worse.
+
+The observability loop adds two more gates: the ``calibration`` section's
+RLS-fitted perfmodel constants must predict the measured scenarios with
+lower error than the static datasheet prior (per scenario and overall),
+and ``BENCH_trace.json`` must be a well-formed Chrome-trace/Perfetto
+record of the run's fenced spans.
 """
 from __future__ import annotations
 
@@ -18,10 +24,11 @@ import pathlib
 import sys
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
+TRACE_JSON = BENCH_JSON.with_name("BENCH_trace.json")
 
 TOP_KEYS = {"sw_pull_1page_us", "num_nodes", "page_bytes", "budget",
             "variants", "measured", "hierarchical", "pipeline", "tenancy",
-            "fused"}
+            "fused", "calibration"}
 VARIANTS = {"unidirectional", "bidirectional", "pruned", "load_balanced"}
 VARIANT_KEYS = {"epochs", "live_slots", "total_hops", "bytes_per_round",
                 "model_round_us", "model_round_us_bufferless"}
@@ -51,11 +58,115 @@ TENANCY_ISOLATION_BOUND = 1.5
 # jitter allowance) — the PR 4 regression was a 3.3x monotonic blow-up.
 MEASURED_SWEEP_BAND = 1.35
 FUSED_PAGE_SIZES = {"256KiB", "4KiB"}
+CAL_FEATURES = ["board_hop_rtts", "rack_hop_rtts", "wire_mib", "chunks",
+                "transfers"]
+CAL_SAMPLE_KEYS = {"scenario", "name", "features", "measured_us",
+                   "static_us", "fitted_us", "static_err", "fitted_err"}
+PHASES = {"wire_req", "gather", "wire_data", "commit"}
+TRACE_X_KEYS = {"name", "cat", "ph", "ts", "dur", "pid", "tid", "args"}
 
 
 def fail(msg: str) -> None:
     print(f"BENCH_bridge.json invalid: {msg}", file=sys.stderr)
     sys.exit(1)
+
+
+def check_calibration(cal: dict) -> str:
+    """The measure->fit->steer gate: fitted constants must beat the static
+    datasheet prior on every measured scenario they were fitted from."""
+    if cal.get("feature_names") != CAL_FEATURES:
+        fail(f"calibration feature_names != {CAL_FEATURES}")
+    if "samples" not in cal:
+        return f"calibration {cal.get('source', '?')} (model-only)"
+    if not cal["samples"]:
+        fail("calibration ran on a ring but collected no samples")
+    for s in cal["samples"]:
+        gone = CAL_SAMPLE_KEYS - s.keys()
+        if gone:
+            fail(f"calibration sample {s.get('name')!r} missing {sorted(gone)}")
+        if len(s["features"]) != len(CAL_FEATURES):
+            fail(f"calibration sample {s['name']!r} feature length "
+                 f"{len(s['features'])} != {len(CAL_FEATURES)}")
+    consts = cal.get("constants", {})
+    gone = (set(CAL_FEATURES) | {"link_payload_gbps", "samples"}) - consts.keys()
+    if gone:
+        fail(f"calibration constants missing {sorted(gone)}")
+    err = cal.get("model_vs_measured_error", {})
+    scens = {s["scenario"] for s in cal["samples"]} | {"overall"}
+    gone = scens - err.keys()
+    if gone:
+        fail(f"calibration error record missing scenarios {sorted(gone)}")
+    for scen in sorted(scens):
+        e = err[scen]
+        if not isinstance(e.get("static"), (int, float)) or \
+                not isinstance(e.get("fitted"), (int, float)):
+            fail(f"calibration error for {scen!r} non-numeric: {e}")
+        # The acceptance bar: online-fitted constants beat the static prior.
+        if not e["fitted"] <= e["static"]:
+            fail(f"calibration: fitted error {e['fitted']} above static "
+                 f"{e['static']} on {scen!r} — the measure->fit loop is "
+                 f"making the model worse")
+    picks = cal.get("selected_channels", {})
+    for mode in ("static", "calibrated"):
+        if mode not in picks:
+            fail(f"calibration selected_channels missing {mode!r}")
+    o = err["overall"]
+    return (f"calibration {cal['source']}: {len(cal['samples'])} samples, "
+            f"err {o['static']} -> {o['fitted']}, picks "
+            f"{picks['calibrated']}")
+
+
+def check_phase_breakdown(pb: dict) -> None:
+    """Per-depth phase attribution of the measured pipeline sweep."""
+    for key in ("unfused", "fused", "dispatch_us_per_op",
+                "dispatch_base_us", "finding"):
+        if key not in pb:
+            fail(f"phase_breakdown missing {key!r}")
+    if not isinstance(pb["dispatch_us_per_op"], (int, float)):
+        fail("phase_breakdown dispatch_us_per_op non-numeric")
+    for engine in ("unfused", "fused"):
+        gone = PIPELINE_CHANNELS - pb[engine].keys()
+        if gone:
+            fail(f"phase_breakdown[{engine}] missing depths {sorted(gone)}")
+        for c, e in pb[engine].items():
+            if not PHASES <= e.get("phase_ops", {}).keys():
+                fail(f"phase_breakdown[{engine}][{c}] missing phases "
+                     f"{sorted(PHASES - e.get('phase_ops', {}).keys())}")
+            if e.get("total_ops") != sum(e["phase_ops"].values()):
+                fail(f"phase_breakdown[{engine}][{c}] total_ops does not "
+                     f"sum its phase_ops")
+    # The attribution evidence itself: the unfused engine's scoped op count
+    # must grow with depth while the fused engine's stays flat — that
+    # structural difference is the measured regression's cause.
+    if not pb["unfused"]["8"]["total_ops"] > pb["unfused"]["1"]["total_ops"]:
+        fail("phase_breakdown: unfused op count not growing with depth")
+    if pb["fused"]["8"]["phase_ops"]["wire_req"] != \
+            pb["fused"]["1"]["phase_ops"]["wire_req"]:
+        fail("phase_breakdown: fused wire_req op count scales with depth "
+             "(the fused engine should issue one request all_gather)")
+
+
+def check_trace() -> str:
+    """BENCH_trace.json must be a loadable Chrome-trace span record."""
+    if not TRACE_JSON.exists():
+        fail(f"{TRACE_JSON.name} missing (bridge_latency.py writes it)")
+    trace = json.loads(TRACE_JSON.read_text())
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{TRACE_JSON.name}: traceEvents missing or empty")
+    if not any(e.get("ph") == "M" for e in events):
+        fail(f"{TRACE_JSON.name}: no process_name metadata event")
+    xs = [e for e in events if e.get("ph") == "X"]
+    if not xs:
+        fail(f"{TRACE_JSON.name}: no complete ('X') span events")
+    for e in xs:
+        gone = TRACE_X_KEYS - e.keys()
+        if gone:
+            fail(f"{TRACE_JSON.name}: span {e.get('name')!r} missing "
+                 f"{sorted(gone)}")
+        if e["dur"] < 0:
+            fail(f"{TRACE_JSON.name}: span {e['name']!r} negative duration")
+    return f"trace {len(xs)} spans"
 
 
 def main() -> None:
@@ -157,6 +268,9 @@ def main() -> None:
                if not isinstance(err.get(k), (int, float))]
         if bad:
             fail(f"model_vs_measured_error non-numeric keys {sorted(bad)}")
+        if "phase_breakdown" not in pipe:
+            fail("pipeline measured sweep missing phase_breakdown")
+        check_phase_breakdown(pipe["phase_breakdown"])
     # Fused-vs-unfused epoch comparison: when measured on a real ring, the
     # fused Pallas datapath must beat the unfused chain at both the
     # wire-bound and the latency-bound page size.
@@ -203,6 +317,8 @@ def main() -> None:
              f"scheduler is not isolating anything")
     if ten["tenant_served"]["interactive"] <= 0:
         fail("tenancy: interactive tenant served no pages")
+    cal_str = check_calibration(bench["calibration"])
+    trace_str = check_trace()
     h8 = hier["8"]
     if fus["page_sweep"]:
         fstr = ", fused " + " ".join(
@@ -218,7 +334,8 @@ def main() -> None:
           f"(picks: {pipe['selected_channels']}); tenancy "
           f"{ten['source']}: solo {ten['interactive_solo_us']}us -> qos "
           f"{ten['interactive_qos_us']}us (x{ten['qos_isolation_ratio']}) "
-          f"vs naive x{ten['naive_degradation_ratio']}")
+          f"vs naive x{ten['naive_degradation_ratio']}; {cal_str}; "
+          f"{trace_str}")
 
 
 if __name__ == "__main__":

@@ -195,11 +195,18 @@ def _round_pull(pool_local: jax.Array, sub_ids: jax.Array, table: MemPortTable,
             req, prev = jax.lax.optimization_barrier((req, prev))
         fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
         bwd = [(j, (j - d) % num_nodes) for j in range(num_nodes)]
-        req_at_home = jax.lax.ppermute(req, axis, perm=fwd)        # request flits
-        payload = _gather_local(pool_local, req_at_home)           # remote read
-        payload = jax.lax.ppermute(payload, axis, perm=bwd)        # data flits
-        mask = serve.reshape((-1,) + (1,) * (payload.ndim - 1))
-        out = jnp.where(mask, payload, out)
+        # obs:* scopes tag each phase's HLO ops (metadata op_name) so
+        # compiled-program attribution (obs.trace.phase_op_counts) can
+        # apportion a round's dispatch cost per phase.
+        with jax.named_scope("obs:wire_req"):
+            req_at_home = jax.lax.ppermute(req, axis, perm=fwd)    # request flits
+        with jax.named_scope("obs:gather"):
+            payload = _gather_local(pool_local, req_at_home)       # remote read
+        with jax.named_scope("obs:wire_data"):
+            payload = jax.lax.ppermute(payload, axis, perm=bwd)    # data flits
+        with jax.named_scope("obs:commit"):
+            mask = serve.reshape((-1,) + (1,) * (payload.ndim - 1))
+            out = jnp.where(mask, payload, out)
         prev = payload
     return out
 
@@ -235,7 +242,8 @@ def _pull_wire(pool_local: jax.Array, sub_ids: jax.Array, table: MemPortTable,
                  & (program.rank_epoch[k, my] >= 0))
         req = jnp.where(serve, slot, FREE)
         fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
-        reqs.append(jax.lax.ppermute(req, axis, perm=fwd))
+        with jax.named_scope("obs:wire_req"):
+            reqs.append(jax.lax.ppermute(req, axis, perm=fwd))
         serves.append(serve)
     return jnp.stack(reqs), jnp.stack(serves), out0
 
@@ -251,10 +259,13 @@ def _pull_drain(pool_local: jax.Array, pending, axis: str,
     reqs, serves, out = pending
     for k, d in enumerate(steering.default_route_schedule(num_nodes)):
         bwd = [(j, (j - d) % num_nodes) for j in range(num_nodes)]
-        payload = _gather_local(pool_local, reqs[k])               # remote read
-        payload = jax.lax.ppermute(payload, axis, perm=bwd)        # data flits
-        mask = serves[k].reshape((-1,) + (1,) * (payload.ndim - 1))
-        out = jnp.where(mask, payload, out)
+        with jax.named_scope("obs:gather"):
+            payload = _gather_local(pool_local, reqs[k])           # remote read
+        with jax.named_scope("obs:wire_data"):
+            payload = jax.lax.ppermute(payload, axis, perm=bwd)    # data flits
+        with jax.named_scope("obs:commit"):
+            mask = serves[k].reshape((-1,) + (1,) * (payload.ndim - 1))
+            out = jnp.where(mask, payload, out)
     return out
 
 
@@ -267,16 +278,17 @@ def _reassemble(chunks: jax.Array, want_len: int, lanes_per_round: int,
     (k < active_budget); lanes beyond the live budget (and the pipelined
     engine's chunk padding) carried FREE requests and are dropped.
     """
-    idx = jnp.arange(chunks.shape[0])
-    r = idx // lanes_per_round
-    k = idx % lanes_per_round
-    dest = r * active_budget + k
-    live = (k < active_budget) & (dest < want_len)
-    dest = jnp.where(live, dest, 0)
-    mask = live.reshape((-1,) + (1,) * len(page_shape))
-    upd = jnp.where(mask, chunks, jnp.zeros_like(chunks))
-    out = jnp.zeros((want_len,) + page_shape, dtype)
-    return out.at[dest].add(upd)
+    with jax.named_scope("obs:commit"):
+        idx = jnp.arange(chunks.shape[0])
+        r = idx // lanes_per_round
+        k = idx % lanes_per_round
+        dest = r * active_budget + k
+        live = (k < active_budget) & (dest < want_len)
+        dest = jnp.where(live, dest, 0)
+        mask = live.reshape((-1,) + (1,) * len(page_shape))
+        upd = jnp.where(mask, chunks, jnp.zeros_like(chunks))
+        out = jnp.zeros((want_len,) + page_shape, dtype)
+        return out.at[dest].add(upd)
 
 
 def _pull_local(pool_local: jax.Array, want: jax.Array, table: MemPortTable,
@@ -489,7 +501,8 @@ def _pull_local_fused(pool_local: jax.Array, want: jax.Array,
 
     def body(ptr, _):
         window = _fused_window(want, ptr, budget, lanes, lane, active_budget)
-        allwin = jax.lax.all_gather(window, axis)              # request flits
+        with jax.named_scope("obs:wire_req"):
+            allwin = jax.lax.all_gather(window, axis)          # request flits
         src_rows, reqs = _fused_steering(allwin, table, program, my,
                                          num_nodes)
         home, slot = table.translate(window)
@@ -506,15 +519,18 @@ def _pull_local_fused(pool_local: jax.Array, want: jax.Array,
             # per-lane choice indexes ``recv`` rows directly.
             reqs_by_row = jnp.full((num_nodes, lanes), FREE, jnp.int32)
             reqs_by_row = reqs_by_row.at[src_rows].set(reqs)
-            send = _bg.gather_pages(pool2, reqs_by_row)        # [n, lanes, e]
-            recv = jax.lax.all_to_all(send, axis, 0, 0)
+            with jax.named_scope("obs:gather"):
+                send = _bg.gather_pages(pool2, reqs_by_row)    # [n, lanes, e]
+            with jax.named_scope("obs:wire_data"):
+                recv = jax.lax.all_to_all(send, axis, 0, 0)
             choice = jnp.where(dist == 0, 0, -1)
             for k, d in enumerate(sched):
                 serve = ((dist == d) & program.live[k]
                          & (program.rank_epoch[k, my] >= 0))
                 choice = jnp.where(serve, jnp.mod(my + d, num_nodes) + 1,
                                    choice)
-            out = _bg.pull_commit(pool2, recv, choice, loop_slot)
+            with jax.named_scope("obs:commit"):
+                out = _bg.pull_commit(pool2, recv, choice, loop_slot)
         else:
             # Rotation ladder: slot k's send lanes are ``reqs[k]`` verbatim
             # (what we serve for the requester d_k behind us), so each
@@ -525,13 +541,18 @@ def _pull_local_fused(pool_local: jax.Array, want: jax.Array,
             # epoch-0 loopback gather — no staged exchange buffer, no
             # per-slot select chain, and XLA fuses the whole tree into a
             # single output pass.
-            out = _bg.gather_pages(pool2, loop_slot)
+            with jax.named_scope("obs:gather"):
+                out = _bg.gather_pages(pool2, loop_slot)
             for k, d in enumerate(sched):
-                flit = _bg.gather_pages(pool2, reqs[k])
-                out = out + jax.lax.ppermute(
-                    flit, axis,
-                    perm=[(j, (j - d) % num_nodes)
-                          for j in range(num_nodes)])
+                with jax.named_scope("obs:gather"):
+                    flit = _bg.gather_pages(pool2, reqs[k])
+                with jax.named_scope("obs:wire_data"):
+                    flit = jax.lax.ppermute(
+                        flit, axis,
+                        perm=[(j, (j - d) % num_nodes)
+                              for j in range(num_nodes)])
+                with jax.named_scope("obs:commit"):
+                    out = out + flit
         return ptr + active_budget, out
 
     ptr0 = _pvary(jnp.int32(0), axis)
@@ -572,29 +593,33 @@ def _push_local_fused(pool_local: jax.Array, ids: jax.Array, pay: jax.Array,
         if lanes > budget:
             dwin = jnp.concatenate(
                 [dwin, jnp.zeros((lanes - budget, e), pay2.dtype)])
-        allwin = jax.lax.all_gather(window, axis)              # request flits
+        with jax.named_scope("obs:wire_req"):
+            allwin = jax.lax.all_gather(window, axis)          # request flits
         src_rows, slots = _fused_steering(allwin, table, program, my,
                                           num_nodes)
         if exchange == "a2a":
-            alldata = jax.lax.all_gather(dwin, axis)           # data flits
+            with jax.named_scope("obs:wire_data"):
+                alldata = jax.lax.all_gather(dwin, axis)       # data flits
             landed = alldata[src_rows]                         # [S, lanes, e]
         else:
             # Rotation ladder: requester j's flits for distance d land at
             # home (j + d) in one forward hop — slot k's landed data is
             # the window of the requester d_k behind us, no full-fabric
             # broadcast or landed-row re-gather.
-            landed = jnp.stack([
-                jax.lax.ppermute(
-                    dwin, axis,
-                    perm=[(j, (j + d) % num_nodes)
-                          for j in range(num_nodes)])
-                for d in sched])
+            with jax.named_scope("obs:wire_data"):
+                landed = jnp.stack([
+                    jax.lax.ppermute(
+                        dwin, axis,
+                        perm=[(j, (j + d) % num_nodes)
+                              for j in range(num_nodes)])
+                    for d in sched])
         home, slot = table.translate(window)
         dist = steering.ring_distance(home, my, num_nodes)
         loop_slots = jnp.where(dist == 0, slot, FREE)
         slots_all = jnp.concatenate([loop_slots[None], slots])  # [S+1, lanes]
-        pool_pad = _bg.push_commit(pool_pad, slots_all, dwin, landed,
-                                   channels=channels, cb=cb)
+        with jax.named_scope("obs:commit"):
+            pool_pad = _bg.push_commit(pool_pad, slots_all, dwin, landed,
+                                       channels=channels, cb=cb)
         return (pool_pad, ptr + active_budget), None
 
     ptr0 = _pvary(jnp.int32(0), axis)
@@ -619,8 +644,10 @@ def _push_wire(sub_ids: jax.Array, data: jax.Array, table: MemPortTable,
                  & (program.rank_epoch[k, my] >= 0))
         req = jnp.where(serve, slot, FREE)
         fwd = [(j, (j + d) % num_nodes) for j in range(num_nodes)]
-        slots_h.append(jax.lax.ppermute(req, axis, perm=fwd))
-        datas_h.append(jax.lax.ppermute(data, axis, perm=fwd))
+        with jax.named_scope("obs:wire_req"):
+            slots_h.append(jax.lax.ppermute(req, axis, perm=fwd))
+        with jax.named_scope("obs:wire_data"):
+            datas_h.append(jax.lax.ppermute(data, axis, perm=fwd))
     return (jnp.stack(slots_h), jnp.stack(datas_h),
             jnp.where(dist == 0, slot, FREE), data)
 
@@ -633,10 +660,11 @@ def _push_commit(pool: jax.Array, pending) -> jax.Array:
     contract.  FREE slots (pipeline prologue, dead pairings) drop.
     """
     slots_h, datas_h, loop_slots, loop_data = pending
-    pool = _scatter_local(pool, loop_slots, loop_data)
-    for k in range(slots_h.shape[0]):
-        pool = _scatter_local(pool, slots_h[k], datas_h[k])
-    return pool
+    with jax.named_scope("obs:commit"):
+        pool = _scatter_local(pool, loop_slots, loop_data)
+        for k in range(slots_h.shape[0]):
+            pool = _scatter_local(pool, slots_h[k], datas_h[k])
+        return pool
 
 
 def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
@@ -697,9 +725,12 @@ def _push_local(pool_local: jax.Array, dest_ids: jax.Array, payload: jax.Array,
                     # (and the epoch-0 loopback commit) — see _round_pull.
                     req, data_k, prev = jax.lax.optimization_barrier(
                         (req, data_k, prev))
-                slot_at_home = jax.lax.ppermute(req, axis, perm=fwd)
-                data_at_home = jax.lax.ppermute(data_k, axis, perm=fwd)
-                pool = _scatter_local(pool, slot_at_home, data_at_home)
+                with jax.named_scope("obs:wire_req"):
+                    slot_at_home = jax.lax.ppermute(req, axis, perm=fwd)
+                with jax.named_scope("obs:wire_data"):
+                    data_at_home = jax.lax.ppermute(data_k, axis, perm=fwd)
+                with jax.named_scope("obs:commit"):
+                    pool = _scatter_local(pool, slot_at_home, data_at_home)
                 prev = data_at_home
             return (pool, ptr + active_budget), None
 

@@ -437,7 +437,8 @@ class ControlPlane:
         return steering.pruned_program(base, self.live_distances(requesters))
 
     def select_channels(self, budget: int, page_bytes: int, telemetry=None,
-                        max_channels: int = 8, program=None) -> int:
+                        max_channels: int = 8, program=None,
+                        calibrator=None) -> int:
         """Pick the bridge's pipeline depth from measured wire occupancy.
 
         The pipelined round engine (``pull_pages``/``push_pages``
@@ -462,9 +463,21 @@ class ControlPlane:
         — the serial engine (1) is kept: overlap is pure win only once the
         wire is demonstrably busy, and an idle bridge should not pay the
         deeper engine's compiled datapath.
+
+        ``calibrator`` is a fitted :class:`~repro.core.perfmodel.Calibrator`
+        (ignored until it has enough samples): the wire/RTT terms are then
+        priced with the **fitted** hop latency and payload bandwidth, and
+        doubling the depth must also beat the fitted per-chunk dispatch
+        overhead — the software cost that made deep pipelines a measured
+        loss on fabrics where dispatch dominates flight time (the PR 4
+        regression the static model could not see).
         """
         from repro.core import perfmodel
         hw = perfmodel.TPU_HW
+        chunk_us = 0.0
+        if calibrator is not None and calibrator.fitted:
+            hw = calibrator.hw()
+            chunk_us = calibrator.chunk_overhead_us
         if telemetry is None or budget < 2:
             return 1
         if hasattr(telemetry, "link_pages"):          # TelemetryAggregator
@@ -503,8 +516,13 @@ class ControlPlane:
         if hidden <= 0:
             return 1
         depth = 1
-        while (depth < min(max_channels, budget)
-               and hidden / depth > 0.1 * exposed):
+        while depth < min(max_channels, budget):
+            # Doubling the depth recovers half the remaining exposure but
+            # dispatches ``depth`` more chunks per round; with a fitted
+            # calibrator that software cost is known and must be beaten.
+            saved = hidden / depth - hidden / (2 * depth)
+            if hidden / depth <= 0.1 * exposed or saved <= chunk_us * depth:
+                break
             depth *= 2
         return min(depth, budget, max_channels)
 

@@ -406,6 +406,206 @@ def predict_transfer_latency_us(program, page_bytes: int, budget: int,
         slot_intra_pages=slot_intra_pages, channels=channels)
 
 
+# ---------------------------------------------------------------------------
+# Online calibration (measured spans -> fitted constants)
+# ---------------------------------------------------------------------------
+
+#: Feature order of :func:`route_features` / :class:`Calibrator.theta`:
+#: each coefficient is a physical constant in microseconds (per hop RTT,
+#: per wire MiB, per channel chunk, per transfer call).
+FEATURE_NAMES = ("board_hop_rtts", "rack_hop_rtts", "wire_mib", "chunks",
+                 "transfers")
+
+
+def route_features(program, page_bytes: int, budget: int, *,
+                   rounds: int = 1, channels: int = 1, slot_pages=None,
+                   topology=None, slot_intra_pages=None):
+    """Linearized route-stats feature vector for one whole transfer.
+
+    The serial analytic model is linear in its hardware constants:
+    ``t = hop_latency * (2 * deepest_hops) + (us/MiB) * busier_wire_MiB``.
+    This extracts exactly those multiplicities — per tier — plus the two
+    software terms the analytic model omits and measurement exposes
+    (per channel-chunk dispatch cost, per-call fixed cost):
+
+        x = [ rounds * 2 * deepest board hops,
+              rounds * 2 * deepest rack hops,
+              rounds * busier-direction wire MiB (board/groups + rack),
+              rounds * channels,
+              1 ]
+
+    so ``theta . x`` with ``theta = [board_hop_us, rack_hop_us, us_per_mib,
+    chunk_us, base_us]`` prices the transfer.  With the static-constant
+    prior (:meth:`Calibrator.static_theta`) and ``channels=1`` on a flat
+    topology this reproduces ``rounds * predict_round_latency_us`` bit for
+    bit — the calibrator *starts* at the static model and RLS walks it to
+    the measured one.
+    """
+    import numpy as np
+    live = np.asarray(program.live)
+    off = np.asarray(program.offsets)
+    x = np.zeros(len(FEATURE_NAMES))
+    x[3] = float(rounds * max(channels, 1))
+    x[4] = 1.0
+    if not live.any() or rounds == 0:
+        x[3] = x[4] = 0.0
+        return x
+    pages = _slot_loads(program, budget, slot_pages)
+    if topology is None or topology.num_groups == 1:
+        hops = np.abs(off)
+        x[0] = rounds * 2.0 * float(hops[live].max())
+        cw = float(pages[live & (off > 0)].sum())
+        ccw = float(pages[live & (off < 0)].sum())
+        x[2] = rounds * max(cw, ccw) * page_bytes / MIB
+        return x
+    n = program.num_nodes
+    served = program.rank_served()
+    s = n - 1
+    if slot_intra_pages is None:
+        frac = np.zeros((s,))
+        for k in range(s):
+            ranks = np.nonzero(served[k])[0]
+            if ranks.size:
+                frac[k] = topology.pair_intra(
+                    ranks, (ranks + k + 1) % n).mean()
+        intra_pages = pages * frac
+    else:
+        intra_pages = np.minimum(
+            _slot_loads(program, budget, slot_intra_pages), pages)
+    inter_pages = pages - intra_pages
+    board_deep = rack_deep = 0.0
+    for k in np.nonzero(live)[0]:
+        ranks = np.nonzero(served[k])[0]
+        if ranks.size == 0 or pages[k] == 0:
+            continue
+        homes = (ranks + k + 1) % n
+        sign = 1 if off[k] > 0 else -1
+        bh, rh = topology.pair_hops(ranks, homes, sign)
+        board_deep = max(board_deep, float(bh.max()))
+        rack_deep = max(rack_deep, float(rh.max()))
+    x[0] = rounds * 2.0 * board_deep
+    x[1] = rounds * 2.0 * rack_deep
+    bw = intra_pages / topology.num_groups * page_bytes / MIB
+    cw = float(bw[live & (off > 0)].sum())
+    ccw = float(bw[live & (off < 0)].sum())
+    x[2] = rounds * (max(cw, ccw)
+                     + float(inter_pages[live].sum()) * page_bytes / MIB)
+    return x
+
+
+class Calibrator:
+    """Recursive-least-squares fit of the bridge's latency constants.
+
+    Observes ``(route_features, measured span latency)`` pairs — the
+    tracing plane's fenced wall-clock spans — and maintains
+    ``theta = [board_hop_us, rack_hop_us, us_per_wire_MiB, chunk_us,
+    base_us]`` with a standard RLS update (optional forgetting factor for
+    drift).  ``theta`` starts at the **static** constants of ``hw`` (zero
+    software overhead), so an unfitted calibrator degenerates to the
+    static model; each observation moves it toward what the fabric
+    actually does.
+
+    ``hw()`` repackages the fitted hop latency / payload bandwidth as a
+    :class:`TpuHW`, so the *full* analytic model (tier pricing, overlap
+    term) runs with fitted constants — that is what
+    ``ControlPlane.select_channels`` and the orchestrator's window refits
+    consume each control period, alongside ``chunk_overhead_us`` for the
+    dispatch cost the static model never knew about.
+    """
+
+    def __init__(self, hw: TpuHW = TPU_HW, *, forgetting: float = 1.0,
+                 p0: float = 1e8, min_samples: int = 3):
+        import numpy as np
+        self.base_hw = hw
+        self.forgetting = float(forgetting)
+        self.min_samples = int(min_samples)
+        self.theta = self.static_theta(hw)
+        self._P = np.eye(len(FEATURE_NAMES)) * float(p0)
+        self.samples = 0
+        self.last_error_us = 0.0
+
+    @staticmethod
+    def static_theta(hw: TpuHW = TPU_HW):
+        import numpy as np
+        us_per_mib = MIB / (hw.ici_link_gbps * 1e9) * 1e6
+        return np.array([hw.ici_hop_latency_us, hw.ici_hop_latency_us,
+                         us_per_mib, 0.0, 0.0])
+
+    # ------------------------------------------------------------------ fit
+    def observe(self, features, measured_us: float) -> float:
+        """One RLS step; returns the pre-update prediction error (us)."""
+        import numpy as np
+        x = np.asarray(features, float).reshape(-1)
+        if x.shape[0] != len(FEATURE_NAMES):
+            raise ValueError(f"expected {len(FEATURE_NAMES)} features, "
+                             f"got {x.shape[0]}")
+        lam = self.forgetting
+        Px = self._P @ x
+        k = Px / (lam + float(x @ Px))
+        err = float(measured_us) - float(self.theta @ x)
+        self.theta = self.theta + k * err
+        self._P = (self._P - np.outer(k, Px)) / lam
+        self.samples += 1
+        self.last_error_us = err
+        return err
+
+    @property
+    def fitted(self) -> bool:
+        return self.samples >= self.min_samples
+
+    # -------------------------------------------------------------- predict
+    def predict_us(self, features) -> float:
+        import numpy as np
+        return max(float(self.theta @ np.asarray(features, float)), 0.0)
+
+    def static_predict_us(self, features) -> float:
+        """Same linear basis priced with the static prior constants."""
+        import numpy as np
+        return max(float(self.static_theta(self.base_hw)
+                         @ np.asarray(features, float)), 0.0)
+
+    def predict_round_latency_us(self, program, page_bytes: int,
+                                 budget: int, **kw) -> float:
+        return self.predict_us(route_features(
+            program, page_bytes, budget, rounds=1, **kw))
+
+    def predict_transfer_latency_us(self, program, page_bytes: int,
+                                    budget: int, num_requests: int,
+                                    overprovision: int = 1, **kw) -> float:
+        from repro.core import steering
+        rounds = steering.num_rounds(num_requests, budget, overprovision)
+        return self.predict_us(route_features(
+            program, page_bytes, budget, rounds=rounds, **kw))
+
+    # ------------------------------------------------------------ constants
+    @property
+    def chunk_overhead_us(self) -> float:
+        return max(float(self.theta[3]), 0.0)
+
+    @property
+    def base_overhead_us(self) -> float:
+        return max(float(self.theta[4]), 0.0)
+
+    def link_payload_gbps(self) -> float:
+        us_per_mib = max(float(self.theta[2]), 1e-9)
+        return MIB / (us_per_mib * 1e-6) / 1e9
+
+    def hw(self) -> TpuHW:
+        """Fitted constants as a TpuHW for the full analytic model."""
+        from dataclasses import replace
+        return replace(
+            self.base_hw,
+            ici_hop_latency_us=max(float(self.theta[0]), 1e-6),
+            ici_link_gbps=max(self.link_payload_gbps(), 1e-6))
+
+    def constants(self) -> Dict[str, float]:
+        vals = {n: round(float(v), 6)
+                for n, v in zip(FEATURE_NAMES, self.theta)}
+        vals["link_payload_gbps"] = round(self.link_payload_gbps(), 6)
+        vals["samples"] = self.samples
+        return vals
+
+
 def tpu_stream_penalty(kernel: str, page_bytes: int = 1 << 18,
                        hw: TpuHW = TPU_HW) -> float:
     """Paper Fig. 3 analogue on TPU: HBM-local vs bridge-remote STREAM."""

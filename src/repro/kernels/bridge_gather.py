@@ -57,6 +57,23 @@ def _flatten_pages(pool: jax.Array):
     return pool.reshape(pool.shape[0], e), page_shape, e
 
 
+def _obs_scope(name: str):
+    """Tag a kernel entry point's ops with an ``obs:<phase>`` named scope.
+
+    The scope lands in HLO metadata ``op_name``, so
+    :func:`repro.obs.trace.phase_op_counts` attributes a compiled
+    program's instructions (and their dispatch cost) to datapath phases
+    even when the caller forgot its own scope.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with jax.named_scope(name):
+                return fn(*args, **kwargs)
+        return wrapped
+    return deco
+
+
 # ---------------------------------------------------------------------------
 # Pull side
 # ---------------------------------------------------------------------------
@@ -73,6 +90,7 @@ def _gather_pages_lax(pool2: jax.Array, flat: jax.Array) -> jax.Array:
     return jnp.where((flat >= 0)[:, None], page, jnp.zeros((), pool2.dtype))
 
 
+@_obs_scope("obs:gather")
 def gather_pages(pool: jax.Array, reqs: jax.Array, *,
                  interpret=None) -> jax.Array:
     """Serve an epoch's landed requests in one kernel.
@@ -127,6 +145,7 @@ def _pull_commit_lax(pool2, pay2, choice, loop_slot) -> jax.Array:
     return jnp.where((choice >= 0)[:, None], page, jnp.zeros((), pool2.dtype))
 
 
+@_obs_scope("obs:commit")
 def pull_commit(pool: jax.Array, payloads: jax.Array, choice: jax.Array,
                 loop_slot: jax.Array, *, interpret=None) -> jax.Array:
     """Retire a pull epoch: loopback gather + payload commit in one kernel.
@@ -221,6 +240,7 @@ def _push_commit_lax(pool_pad: jax.Array, rows: jax.Array,
     return out
 
 
+@_obs_scope("obs:commit")
 def push_commit(pool_pad: jax.Array, slots_all: jax.Array,
                 loop_data: jax.Array, landed_data: jax.Array, *,
                 channels: int, cb: int, interpret=None) -> jax.Array:
@@ -271,6 +291,7 @@ def _scatter_kernel(rows_ref, pool_ref, data_ref, out_ref):
     out_ref[0] = data_ref[0].astype(out_ref.dtype)
 
 
+@_obs_scope("obs:commit")
 def scatter_pages(pool: jax.Array, slots: jax.Array, data: jax.Array, *,
                   interpret=None) -> jax.Array:
     """One-kernel masked scatter: ``pool.at[slots].set(data, mode="drop")``.

@@ -25,7 +25,6 @@ import dataclasses  # noqa: E402
 import json  # noqa: E402
 import pathlib  # noqa: E402
 import sys  # noqa: E402
-import time  # noqa: E402
 import traceback  # noqa: E402
 
 import jax  # noqa: E402
@@ -38,6 +37,7 @@ from repro.config import (SHAPES, BridgeConfig, RunConfig,  # noqa: E402
                           ShardingConfig)
 from repro.data.pipeline import make_batch_specs  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.obs.trace import CAT_COMPILE, TraceRecorder  # noqa: E402
 from repro.models import transformer  # noqa: E402
 from repro.parallel.sharding import make_rules  # noqa: E402
 from repro.serve import step as serve_step_mod  # noqa: E402
@@ -200,7 +200,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              bridge_budget: int = 8, edge_buffer: bool = True,
              bridge_channels: int = 1, bridge_fused: bool = True,
              microbatch: int = 1, replicate_kv_inner: bool = False,
-             scan_decode: bool = True, force: bool = False) -> dict:
+             scan_decode: bool = True, force: bool = False,
+             recorder: TraceRecorder | None = None) -> dict:
     RESULTS.mkdir(parents=True, exist_ok=True)
     mesh_tag = "2pod" if multi_pod else "1pod"
     kv_tag = f"_{kv_placement}" if kv_placement else ""
@@ -219,20 +220,29 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     cfg = configs.get_config(arch)
     shape = SHAPES[shape_name]
     num_chips = 512 if multi_pod else 256
-    t0 = time.time()
+    # Phase timing rides the shared observability clock (monotonic
+    # perf_counter, injectable for tests) as proper spans instead of ad-hoc
+    # ``time.time()`` deltas; lower_s/compile_s stay in the record for
+    # compatibility and the spans land in the cell's trace.
+    rec = recorder if recorder is not None else TraceRecorder(
+        process_name=f"dryrun:{name}")
     try:
-        lowered, meta = build_cell(arch, shape_name, multi_pod=multi_pod,
-                                   kv_placement=kv_placement,
-                                   bridge_budget=bridge_budget,
-                                   edge_buffer=edge_buffer,
-                                   bridge_channels=bridge_channels,
-                                   bridge_fused=bridge_fused,
-                                   microbatch=microbatch,
-                                   replicate_kv_inner=replicate_kv_inner,
-                                   scan_decode=scan_decode)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        with rec.span(f"cell:{name}", CAT_COMPILE, cell=name):
+            with rec.span("lower", CAT_COMPILE, cell=name) as sp_lower:
+                lowered, meta = build_cell(
+                    arch, shape_name, multi_pod=multi_pod,
+                    kv_placement=kv_placement,
+                    bridge_budget=bridge_budget,
+                    edge_buffer=edge_buffer,
+                    bridge_channels=bridge_channels,
+                    bridge_fused=bridge_fused,
+                    microbatch=microbatch,
+                    replicate_kv_inner=replicate_kv_inner,
+                    scan_decode=scan_decode)
+            with rec.span("compile", CAT_COMPILE, cell=name) as sp_compile:
+                compiled = lowered.compile()
+        t_lower = sp_lower.duration_us / 1e6
+        t_compile = sp_compile.duration_us / 1e6
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         stats = hlo_analysis.analyze_compiled(compiled)

@@ -40,6 +40,14 @@ def main() -> None:
                     help="serve the batch as K tenants (sequence b belongs "
                          "to tenant b %% K); with --telemetry the bridge "
                          "counters attribute traffic per tenant")
+    ap.add_argument("--metrics", action="store_true",
+                    help="trace every decode step as a fenced span, print "
+                         "the metrics registry snapshot (per-step latency "
+                         "p50/p99, bridge counter families) and, with "
+                         "--trace-out, write the Perfetto trace JSON")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="with --metrics: write the Chrome-trace/Perfetto "
+                         "JSON of the decode loop to PATH")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -71,11 +79,26 @@ def main() -> None:
     step = jax.jit(serve_step_mod.build_serve_step(run, cache_ops),
                    donate_argnums=(1,))
 
+    # --metrics wraps every decode step in a fenced span: the per-step
+    # fence changes the loop's async-dispatch overlap, so it is opt-in —
+    # the untraced path stays exactly as before.
+    recorder = registry = None
+    if args.metrics:
+        from repro.obs import MetricsRegistry, TraceRecorder
+        recorder = TraceRecorder(process_name=f"serve:{args.arch}")
+        registry = MetricsRegistry()
+
     tokens = jnp.ones((args.batch,), jnp.int32)
     t0 = time.monotonic()
     emitted = []
     for i in range(args.steps):
-        tokens, state = step(params, state, tokens)
+        if recorder is not None:
+            with recorder.span("decode_step", "round", step=i) as sp:
+                tokens, state = step(params, state, tokens)
+                recorder.fence(tokens)
+            registry.observe_span(sp)
+        else:
+            tokens, state = step(params, state, tokens)
         emitted.append(np.asarray(tokens))
     dt = time.monotonic() - t0
     print(f"arch={cfg.name} kv={args.kv} batch={args.batch} "
@@ -107,6 +130,18 @@ def main() -> None:
                                       telemetry=agg)
             print(f"control plane channels pick: {pick} "
                   f"(running with {args.channels})")
+            if registry is not None:
+                registry.observe_telemetry(telem)
+                registry.observe_aggregator(agg)
+    if registry is not None:
+        print("metrics:")
+        for line in registry.to_text().splitlines():
+            print(" ", line)
+        if args.trace_out:
+            recorder.write(args.trace_out)
+            print(f"trace: {args.trace_out} "
+                  f"({len(recorder.spans)} spans; open at "
+                  f"https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,41 @@
+"""repro.obs — tracing and metrics plane over the in-band telemetry.
+
+Three layers, host-side only (nothing here runs under jit):
+
+- ``clock``: injectable monotonic clocks (wall for production, manual for
+  deterministic tests).
+- ``trace``: ``TraceRecorder`` wraps jitted datapath calls in fenced
+  wall-clock spans (transaction -> round -> chunk -> phase), decorates
+  them with the matching ``BridgeTelemetry`` counters, and exports
+  Chrome-trace/Perfetto JSON.
+- ``metrics``: counter/gauge/log-bucketed-histogram registry with
+  per-tenant / per-QoS / per-tier families fed by ``TelemetryAggregator``
+  and spans, plus an SLO burn-rate monitor.
+
+The measured span latencies feed ``repro.core.perfmodel.Calibrator`` so
+control-plane decisions run on fitted, not guessed, constants.
+"""
+
+from repro.obs.clock import Clock, ManualClock, MonotonicClock
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    SLOMonitor,
+)
+from repro.obs.trace import Span, TraceRecorder, phase_op_counts
+
+__all__ = [
+    "Clock",
+    "ManualClock",
+    "MonotonicClock",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "SLOMonitor",
+    "Span",
+    "TraceRecorder",
+    "phase_op_counts",
+]

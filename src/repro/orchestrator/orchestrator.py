@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import perfmodel
 from repro.core.control_plane import ControlPlane, MigrationStep
+from repro.obs.metrics import MetricsRegistry, SLOMonitor
 from repro.orchestrator.admission import (ADMITTED, REJECTED,
                                           AdmissionController,
                                           AdmissionDecision, PendingRequest,
@@ -79,6 +80,13 @@ class Orchestrator:
         self.schedule: Schedule = Schedule(windows={}, order=(),
                                            budget=budget)
         self.channels = channels
+        # Observability plane: exact counters + EWMA gauges + span latency
+        # histograms (metrics), per-tenant SLO burn rates (slo), and the
+        # online perfmodel calibration (measured round latencies -> fitted
+        # constants driving select_channels and the admission pricing).
+        self.metrics = MetricsRegistry()
+        self.slo = SLOMonitor(registry=self.metrics)
+        self.calibrator = perfmodel.Calibrator()
         self._program = control_plane.route_program()
         self._program_stale = False
         self._next_lease = 0
@@ -130,7 +138,22 @@ class Orchestrator:
         if self.page_bytes <= 0:
             return None
         window = self.schedule.windows.get(tenant_id, 0) or self.budget
-        slot_pages = None
+        slot_pages = self._measured_slot_pages()
+        topo = (None if self.cp.topology.is_flat else self.cp.topology)
+        if self.calibrator.fitted:
+            # Price with the fitted constants (including the chunk/base
+            # software overheads the static model omits).
+            return self.calibrator.predict_transfer_latency_us(
+                self.route_program(), self.page_bytes, self.budget, window,
+                slot_pages=slot_pages, topology=topo,
+                channels=self.channels)
+        return perfmodel.predict_transfer_latency_us(
+            self.route_program(), self.page_bytes, self.budget, window,
+            slot_pages=slot_pages, topology=topo, channels=self.channels)
+
+    def _measured_slot_pages(self):
+        """Per-slot pages of one requester-round under the measured load
+        (None with no telemetry yet)."""
         if self.telemetry.steps > 0:
             # distance_pages is a per-STEP histogram; one round carries
             # 1/rounds of it (rounds estimated from the busiest requester's
@@ -142,11 +165,38 @@ class Orchestrator:
             per_round = np.maximum(
                 self.telemetry.distance_pages(), 0.0) / (
                     max(self.cp.num_nodes, 1) * rounds)
-            slot_pages = np.minimum(per_round, self.budget)
+            return np.minimum(per_round, self.budget)
+        return None
+
+    def observe_round_latency(self, measured_us: float, *,
+                              rounds: int = 1) -> float:
+        """Feed one fenced span latency (us, ``rounds`` bridge rounds)
+        into the calibrator under the currently-measured load.
+
+        This is the measure half of the measure->fit->steer loop: the
+        serving layer times its pull/push with a ``TraceRecorder`` span
+        and hands the duration here; the next control period's
+        ``select_channels`` / window pricing then runs on fitted
+        constants.  Returns the calibrator's pre-fit prediction error.
+        """
+        if self.page_bytes <= 0:
+            return 0.0
         topo = (None if self.cp.topology.is_flat else self.cp.topology)
-        return perfmodel.predict_transfer_latency_us(
-            self.route_program(), self.page_bytes, self.budget, window,
-            slot_pages=slot_pages, topology=topo, channels=self.channels)
+        feats = perfmodel.route_features(
+            self.route_program(), self.page_bytes, self.budget,
+            rounds=max(rounds, 1), channels=self.channels,
+            slot_pages=self._measured_slot_pages(), topology=topo)
+        err = self.calibrator.observe(feats, measured_us)
+        self.metrics.histogram("obs_round_latency_us").record(
+            measured_us / max(rounds, 1))
+        self.metrics.gauge("calibrator_samples").set(
+            self.calibrator.samples)
+        self.metrics.gauge("calibrator_abs_error_us").set(abs(err))
+        for tid, spec in self.specs.items():
+            if spec.slo_round_us > 0:
+                self.slo.record(tid, measured_us / max(rounds, 1),
+                                spec.slo_round_us)
+        return err
 
     def request_lease(self, tenant_id: int, num_pages: int, *,
                       policy: str = "affinity", term: Optional[int] = None,
@@ -211,7 +261,9 @@ class Orchestrator:
         self._program_stale = True               # placement changed
 
     # -- the step lifecycle ----------------------------------------------------
-    def step(self, telemetry=None) -> Dict[str, object]:
+    def step(self, telemetry=None,
+             measured_round_us: Optional[float] = None,
+             rounds: int = 1) -> Dict[str, object]:
         """Advance the orchestration clock one serving step.
 
         Folds the step's measured telemetry, ages leases (expiry reclaims
@@ -220,12 +272,22 @@ class Orchestrator:
         from measured per-tenant demand and refreshes the datapath's route
         program / pipeline depth / placement (affinity migration).
 
+        ``measured_round_us`` is the step's fenced datapath span latency
+        (``rounds`` bridge rounds' worth): it feeds the perfmodel
+        calibrator and the per-tenant SLO burn rates, so the refit half
+        of this method steers with fitted constants.
+
         Returns a report of the actions taken (expired/renewed lease ids,
         granted queued requests, new windows, migration plan).
         """
         self.step_count += 1
         if telemetry is not None:
             self.telemetry.update(telemetry)
+            self.metrics.observe_telemetry(
+                telemetry, page_bytes=self.page_bytes, specs=self.specs)
+            self.metrics.observe_aggregator(self.telemetry)
+        if measured_round_us is not None:
+            self.observe_round_latency(measured_round_us, rounds=rounds)
 
         expired, renewed = [], []
         for lease in list(self.leases.values()):
@@ -274,7 +336,10 @@ class Orchestrator:
                 if self.page_bytes > 0:
                     self.channels = self.cp.select_channels(
                         self.budget, self.page_bytes,
-                        telemetry=self.telemetry, program=self._program)
+                        telemetry=self.telemetry, program=self._program,
+                        calibrator=self.calibrator)
+                    self.metrics.gauge("bridge_selected_channels").set(
+                        self.channels)
                 if self.migrate:
                     plan = self.cp.affinity_migration(
                         self.telemetry, limit=self.migration_limit)
@@ -364,5 +429,23 @@ class Orchestrator:
             lines.append(f"  lease {lid}: tenant {l.tenant_id} "
                          f"{l.num_pages} pages, expires {exp}")
         lines.append("  " + self.admission.describe())
+        if self.calibrator.samples:
+            c = self.calibrator.constants()
+            lines.append(
+                f"  calibrator: {c['samples']} samples, "
+                f"hop {c['board_hop_rtts']:.3g}us, "
+                f"link {c['link_payload_gbps']:.3g}GB/s, "
+                f"chunk {self.calibrator.chunk_overhead_us:.3g}us, "
+                f"base {self.calibrator.base_overhead_us:.3g}us"
+                + ("" if self.calibrator.fitted else " (warming up)"))
+        for tid, slo in self.slo.describe().items():
+            lines.append(f"  slo tenant {tid}: burn {slo['burn_rate']:g} "
+                         f"({slo['violations']}/{slo['samples']} over "
+                         f"{slo['slo_us']:g}us)")
+        snap = self.metrics.snapshot()
+        if any(snap.values()):
+            lines.append("  metrics:")
+            lines.extend("    " + ln
+                         for ln in self.metrics.to_text().splitlines())
         lines.append(self.cp.describe())
         return "\n".join(lines)

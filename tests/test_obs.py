@@ -1,0 +1,388 @@
+"""Observability plane: tracing, metrics, SLOs, and the calibrated model.
+
+Covers the contracts the rest of the repo leans on:
+
+* deterministic tracing — with a ``ManualClock`` the same sequence of
+  spans serializes to byte-identical Chrome-trace JSON across runs, and
+  the span tree (parents/children, categories, args) round-trips through
+  the export schema Perfetto expects,
+* span <-> counter reconciliation — ``annotate_telemetry`` on a span and
+  ``observe_telemetry`` into a registry must agree bit-exactly with the
+  telemetry oracle's counts (same telemetry, three independent readers),
+* log-bucketed histograms — bounded relative quantile error by
+  construction, exact count/sum,
+* the online-calibrated perfmodel — an *unfitted* calibrator reproduces
+  the static analytic model exactly (the prior is the datasheet), RLS
+  converges to known constants from synthetic latencies, and the fitted
+  model beats the static prior on data the static constants cannot
+  explain,
+* the orchestrator's measure->fit->steer loop end to end in-process.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import perfmodel, ref, steering
+from repro.core.memport import MemPortTable
+from repro.obs import (Counter, Gauge, Histogram, ManualClock,
+                       MetricsRegistry, MonotonicClock, SLOMonitor,
+                       TraceRecorder, phase_op_counts)
+
+# ---------------------------------------------------------------- tracing
+
+
+def _record_sample_trace(rec: TraceRecorder) -> None:
+    with rec.span("transfer:demo", scenario="demo", pages=16) as t:
+        for r in range(2):
+            with rec.span(f"round:{r}", "round", index=r):
+                with rec.span("phase:gather", "phase"):
+                    pass
+        rec.annotate(t, rounds=2)
+
+
+def test_manual_clock_trace_is_byte_reproducible():
+    blobs = []
+    for _ in range(2):
+        rec = TraceRecorder(ManualClock(start_us=100.0, tick_us=2.5),
+                            process_name="determinism")
+        _record_sample_trace(rec)
+        blobs.append(rec.to_json(indent=1))
+    assert blobs[0] == blobs[1]
+    # and the timestamps are the deterministic tick sequence, not wall time
+    assert '"ts": 100.0' in blobs[0]
+
+
+def test_monotonic_clock_advances():
+    c = MonotonicClock()
+    a, b = c.now_us(), c.now_us()
+    assert b >= a >= 0.0
+
+
+def test_span_tree_nesting_and_queries():
+    rec = TraceRecorder(ManualClock())
+    _record_sample_trace(rec)
+    t = rec.find("transfer:demo")
+    assert t is not None and t.parent_id is None
+    rounds = rec.find_all(cat="round")
+    assert [s.name for s in rounds] == ["round:0", "round:1"]
+    assert all(s.parent_id == t.span_id for s in rounds)
+    assert [s.name for s in rec.children(rounds[0])] == ["phase:gather"]
+    assert t.args["rounds"] == 2 and t.args["pages"] == 16
+    assert all(s.duration_us >= 0 for s in rec.spans)
+
+
+def test_chrome_trace_schema():
+    rec = TraceRecorder(ManualClock(), process_name="schema")
+    _record_sample_trace(rec)
+    trace = rec.to_chrome_trace()
+    events = trace["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    assert meta and meta[0]["args"]["name"] == "schema"
+    xs = [e for e in events if e["ph"] == "X"]
+    assert len(xs) == len(rec.spans)
+    for e in xs:
+        assert {"name", "cat", "ph", "ts", "dur", "pid", "tid",
+                "args"} <= e.keys()
+        assert e["dur"] >= 0
+    # open spans must not serialize as complete events
+    rec2 = TraceRecorder(ManualClock())
+    with rec2.span("open"):
+        n_open = len([e for e in rec2.to_chrome_trace()["traceEvents"]
+                      if e["ph"] == "X"])
+    assert n_open == 0
+
+
+def test_phase_op_counts_parses_both_scope_spellings():
+    hlo = '\n'.join([
+        'p0 = f32[8] parameter(0), metadata={op_name="jit(f)/obs:wire_req/x"}',
+        'p1 = f32[8] add(p0, p0), metadata={op_name="jit(f)/obs:gather/add"}',
+        'p2 = f32[8] add(p1, p1), metadata={op_name="jit(f)/obs_gather/add"}',
+        'p3 = f32[8] copy(p2), metadata={op_name="no_scope_here"}',
+    ])
+    assert phase_op_counts(hlo) == {"wire_req": 1, "gather": 2}
+
+
+# ------------------------------------------------ span <-> counter parity
+
+
+def _oracle_telemetry():
+    n, budget = 8, 3
+    rng = np.random.default_rng(7)
+    table = MemPortTable.striped(48, n, 8)
+    want = rng.integers(-1, 48, size=(n, 7)).astype(np.int32)
+    lane = rng.integers(0, 4, size=(n, 7)).astype(np.int32)
+    prog = steering.bidirectional_program(n)
+    return ref.expected_transfer_telemetry(
+        want, table, prog, num_nodes=n, budget=budget, tenant_ids=lane)
+
+
+def test_span_and_registry_reconcile_with_oracle():
+    telem = _oracle_telemetry()
+    page_bytes = 64
+
+    rec = TraceRecorder(ManualClock())
+    with rec.span("transfer:oracle") as sp:
+        pass
+    rec.annotate_telemetry(sp, telem, page_bytes=page_bytes)
+
+    reg = MetricsRegistry()
+    reg.observe_telemetry(telem, page_bytes=page_bytes)
+    counters = reg.snapshot()["counters"]
+
+    served = int(np.asarray(telem.served_total()).sum())
+    cw, ccw = telem.wire_pages()
+    cw, ccw = int(np.asarray(cw).sum()), int(np.asarray(ccw).sum())
+    assert served > 0 and cw + ccw > 0
+
+    # all three readers of the same telemetry agree bit-exactly
+    assert sp.args["pages_served"] == served
+    assert counters["bridge_pages_served_total"] == served
+    assert sp.args["wire_pages_cw"] == cw
+    assert counters['bridge_wire_pages_total{direction="cw"}'] == cw
+    assert sp.args["wire_pages_ccw"] == ccw
+    assert counters['bridge_wire_pages_total{direction="ccw"}'] == ccw
+    assert sp.args["pages_spilled"] == int(np.asarray(telem.spilled).sum())
+    assert counters["bridge_pages_spilled_total"] == sp.args["pages_spilled"]
+    assert sp.args["bytes_served"] == served * page_bytes
+    assert counters["bridge_bytes_served_total"] == served * page_bytes
+    assert sp.args["wire_bytes"] == (cw + ccw) * page_bytes
+
+    # per-tenant lanes reconcile too (and carry names when given)
+    tser = np.asarray(telem.tenant_served).sum(0)
+    for t, pages in enumerate(tser.tolist()):
+        if pages:
+            assert sp.args["tenant_pages"][str(t)] == int(pages)
+            key = f'bridge_tenant_pages_total{{qos="unknown",tenant="{t}"}}'
+            assert counters[key] == int(pages)
+    total_tenant = sum(sp.args["tenant_pages"].values())
+    assert total_tenant == int(tser.sum())
+
+
+# ---------------------------------------------------------------- metrics
+
+
+def test_counter_gauge_basics():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = Gauge()
+    g.set(2.5)
+    assert g.value == 2.5
+
+
+def test_registry_rejects_kind_conflicts():
+    reg = MetricsRegistry()
+    reg.counter("x", a="1")
+    with pytest.raises(TypeError):
+        reg.gauge("x", a="1")
+    # different labels are a different family member, no conflict
+    reg.gauge("x", a="2")
+
+
+def test_histogram_counts_and_quantiles():
+    h = Histogram(lo=1.0, growth=1.1, num_buckets=128)
+    vals = np.linspace(10.0, 1000.0, 500)
+    for v in vals:
+        h.record(float(v))
+    assert h.count == 500
+    assert h.total == pytest.approx(float(vals.sum()))
+    # log-bucketed quantiles carry at most one bucket of relative error
+    for q in (0.5, 0.9, 0.99):
+        exact = float(np.quantile(vals, q))
+        assert h.quantile(q) == pytest.approx(exact, rel=0.12)
+    assert h.p50() <= h.p99()
+    # underflow bin: values below lo quantile-interpolate inside [0, lo)
+    h2 = Histogram(lo=10.0)
+    h2.record(0.5)
+    assert 0.0 <= h2.p50() <= 10.0
+
+
+def test_registry_text_exposition_is_deterministic():
+    reg = MetricsRegistry()
+    reg.counter("bridge_pages_served_total").inc(3)
+    reg.gauge("bridge_link_utilization", direction="cw").set(0.75)
+    reg.histogram("obs_span_latency_us", cat="round",
+                  name="pull").record(12.0)
+    text = reg.to_text()
+    assert "bridge_pages_served_total 3" in text
+    assert 'bridge_link_utilization{direction="cw"} 0.75' in text
+    assert ('obs_span_latency_us_count{cat="round",name="pull"} 1'
+            in text)
+    assert text == reg.to_text()
+
+
+def test_slo_monitor_burn_rates():
+    reg = MetricsRegistry()
+    mon = SLOMonitor(window=10, budget_fraction=0.1, registry=reg)
+    for _ in range(8):
+        mon.record(0, latency_us=50.0, slo_us=100.0)
+    for _ in range(2):
+        mon.record(0, latency_us=150.0, slo_us=100.0)
+    assert mon.violation_fraction(0) == pytest.approx(0.2)
+    assert mon.burn_rate(0) == pytest.approx(2.0)
+    assert reg.snapshot()["gauges"]['slo_burn_rate{tenant="0"}'] == \
+        pytest.approx(2.0)
+    d = mon.describe()["0"]
+    assert d["violations"] == 2 and d["samples"] == 10
+    # slo_us == 0 disables violation accounting entirely
+    mon.record(1, latency_us=1e9, slo_us=0.0)
+    assert mon.burn_rate(1) == 0.0
+
+
+# ---------------------------------------------------- calibrated perfmodel
+
+
+def test_unfitted_calibrator_is_the_static_model():
+    """The RLS prior *is* the datasheet: before any observation the
+    linearized calibrator reproduces the serial analytic model exactly."""
+    cal = perfmodel.Calibrator()
+    assert not cal.fitted
+    for prog in (steering.bidirectional_program(8),
+                 steering.unidirectional_program(8)):
+        for page_bytes in (1 << 12, 1 << 18):
+            want = perfmodel.predict_round_latency_us(prog, page_bytes, 8)
+            got = cal.predict_round_latency_us(prog, page_bytes, 8)
+            assert got == pytest.approx(want, rel=1e-12), (
+                prog, page_bytes)
+            feats = perfmodel.route_features(prog, page_bytes, 8)
+            assert cal.static_predict_us(feats) == pytest.approx(
+                want, rel=1e-12)
+
+
+def test_route_features_shape_and_scaling():
+    bi = steering.bidirectional_program(8)
+    f1 = np.asarray(perfmodel.route_features(bi, 1 << 18, 8))
+    assert f1.shape == (len(perfmodel.FEATURE_NAMES),)
+    assert f1[4] == 1.0                      # one transfer
+    assert f1[3] == 1.0                      # rounds * channels
+    assert f1[1] == 0.0                      # flat fabric: no rack tier
+    f3 = np.asarray(perfmodel.route_features(bi, 1 << 18, 8, rounds=3,
+                                             channels=2))
+    # hop RTTs, wire and chunk terms all scale linearly with rounds
+    assert f3[0] == pytest.approx(3 * f1[0])
+    assert f3[2] == pytest.approx(3 * f1[2])
+    assert f3[3] == 6.0
+    assert f3[4] == 1.0
+
+
+def test_calibrator_converges_on_synthetic_latencies():
+    rng = np.random.default_rng(5)
+    theta_true = np.array([3.0, 7.0, 40.0, 250.0, 1200.0])
+    cal = perfmodel.Calibrator()
+    for _ in range(200):
+        x = rng.uniform(0.5, 8.0, size=5)
+        x[4] = 1.0
+        y = float(x @ theta_true) + rng.normal(0, 0.5)
+        cal.observe(x, y)
+    assert cal.fitted and cal.samples == 200
+    np.testing.assert_allclose(cal.theta, theta_true, atol=0.5)
+    assert cal.chunk_overhead_us == pytest.approx(250.0, abs=0.5)
+    assert cal.base_overhead_us == pytest.approx(1200.0, abs=2.0)
+    # the repackaged TpuHW carries the fitted hop latency
+    assert cal.hw().ici_hop_latency_us == pytest.approx(3.0, abs=0.1)
+    consts = cal.constants()
+    assert set(perfmodel.FEATURE_NAMES) <= consts.keys()
+
+
+def test_fitted_beats_static_on_software_dominated_latencies():
+    """Synthetic fabric whose cost is dispatch, not wire: the static
+    datasheet prior cannot explain it, the fitted constants must."""
+    rng = np.random.default_rng(9)
+    bi = steering.bidirectional_program(8)
+    cal = perfmodel.Calibrator()
+    samples = []
+    for _ in range(60):
+        rounds = int(rng.integers(1, 4))
+        channels = int(rng.choice([1, 2, 4]))
+        feats = perfmodel.route_features(bi, 256, 8, rounds=rounds,
+                                         channels=channels)
+        measured = 500.0 + 90.0 * rounds * channels + rng.normal(0, 5.0)
+        samples.append((feats, measured))
+        cal.observe(feats, measured)
+    static_err = np.mean([abs(cal.static_predict_us(f) - m) / m
+                          for f, m in samples])
+    fitted_err = np.mean([abs(cal.predict_us(f) - m) / m
+                          for f, m in samples])
+    assert fitted_err < static_err
+    assert fitted_err < 0.05 < static_err
+
+
+def test_calibrator_rejects_bad_feature_length():
+    cal = perfmodel.Calibrator()
+    with pytest.raises(ValueError):
+        cal.observe([1.0, 2.0], 10.0)
+
+
+def test_select_channels_with_calibrated_chunk_overhead():
+    """A large fitted per-chunk overhead must keep the pick serial where
+    the static model would pipeline deep."""
+    from repro.core.control_plane import ControlPlane
+    from repro.telemetry import TelemetryAggregator
+
+    n = 8
+    cp = ControlPlane(num_nodes=n, pages_per_node=16, num_logical=n * 16)
+    agg = TelemetryAggregator(n, page_bytes=1 << 12)
+    telem = _oracle_telemetry()
+    agg.update(telem)
+    static_pick = cp.select_channels(8, 4096, telemetry=agg)
+
+    cal = perfmodel.Calibrator(min_samples=1)
+    bi = steering.bidirectional_program(n)
+    # dispatch-dominated backend: latency grows with rounds*channels
+    for channels in (1, 2, 4, 8):
+        for rounds in (1, 2):
+            feats = perfmodel.route_features(bi, 4096, 8, rounds=rounds,
+                                             channels=channels)
+            cal.observe(feats, 800.0 * rounds * channels + 400.0)
+    assert cal.chunk_overhead_us > 0
+    cal_pick = cp.select_channels(8, 4096, telemetry=agg, calibrator=cal)
+    assert cal_pick <= static_pick
+    assert cal_pick == 1
+
+    # an unfitted calibrator must leave the static pick untouched
+    assert cp.select_channels(
+        8, 4096, telemetry=agg,
+        calibrator=perfmodel.Calibrator()) == static_pick
+
+
+# ------------------------------------------- orchestrator integration loop
+
+
+def test_orchestrator_measure_fit_steer_loop():
+    from repro.core.control_plane import ControlPlane
+    from repro.orchestrator import Orchestrator, TenantSpec
+
+    n = 8
+    cp = ControlPlane(num_nodes=n, pages_per_node=16, num_logical=n * 16)
+    orc = Orchestrator(cp, budget=8, page_bytes=4096, control_period=1)
+    orc.register(TenantSpec(0, "svc", qos="interactive", share=2.0,
+                            slo_round_us=50.0))
+    _, lease = orc.request_lease(0, 32)
+    assert lease is not None
+
+    telem = _oracle_telemetry()
+    # measured spans: a dispatch-heavy fabric violating the 50us SLO
+    for _ in range(6):
+        orc.step(telemetry=telem, measured_round_us=900.0, rounds=1)
+    assert orc.calibrator.samples == 6
+
+    snap = orc.metrics.snapshot()
+    assert snap["counters"]["bridge_pages_served_total"] > 0
+    assert snap["gauges"]['slo_burn_rate{tenant="0"}'] > 1.0
+    lat = snap["histograms"]["obs_round_latency_us"]
+    # log-bucketed (growth=2): the quantile is exact to within one bucket
+    assert lat["count"] == 6 and 450.0 <= lat["p50"] <= 1800.0
+    assert lat["mean"] == pytest.approx(900.0)
+    desc = orc.describe()
+    assert "calibrator:" in desc and "metrics:" in desc
+    assert "slo tenant 0:" in desc
+
+    # once fitted, window pricing runs on the fitted constants: the
+    # predicted window latency must reflect the measured ~900us rounds,
+    # not the static microsecond-scale wire model.
+    pred = orc.predicted_window_us(0)
+    assert pred is not None and pred > 100.0
