@@ -1,0 +1,235 @@
+"""Request-level serving benchmark -> BENCH_serve.json.
+
+Three closed-loop runs of the continuous batcher
+(:mod:`repro.serve.batcher`) over seeded synthetic traffic
+(:mod:`repro.serve.traffic`), plus a real-model fidelity check:
+
+* **fidelity** — a reduced granite decode serves a mixed request stream
+  through the continuous batcher; every retired sequence's tokens are
+  compared bit-for-bit against :func:`~repro.serve.batcher.solo_reference`
+  running the same request alone in a fixed batch.  Continuous batching
+  must be a pure scheduling change — zero numerical drift.
+* **scale** — the QoS batcher under a batch-tenant *flood*: a steady
+  interactive stream plus a burst of ~1.5k batch requests into a 64-slot
+  decode batch, driving peak in-flight concurrency past 1,000 sequences
+  while KV pages lease and retire through the orchestrated pool.
+  Reports per-QoS-class p50/p99 round latencies and goodput.
+* **isolation** — the same interactive stream (identical per-tenant rng
+  streams, so byte-identical arrivals) measured three ways: solo,
+  co-located with the flood under QoS slot admission, and co-located
+  under naive global-FIFO admission.  The acceptance bars (enforced by
+  ``validate_bench.py``): QoS keeps the interactive p99 within
+  ``SERVE_ISOLATION_BOUND``x of solo; naive FIFO is strictly worse.
+
+Run:  PYTHONPATH=src:. python benchmarks/serve_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.control_plane import ControlPlane
+from repro.obs.metrics import MetricsRegistry
+from repro.orchestrator.orchestrator import Orchestrator
+from repro.orchestrator.tenants import TenantSpec
+from repro.serve.batcher import (ContinuousBatcher, ModelDecodeEngine,
+                                 SimulatedDecodeEngine, serve_loop,
+                                 solo_reference)
+from repro.serve.traffic import TenantTraffic, TrafficGenerator, make_request
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+SEED = 0
+STEP_US = 100.0            # modeled decode-step latency for the sim clock
+PAGE_TOKENS = 16
+
+INTERACTIVE, BATCH = 1, 2
+
+
+def _mk_orchestrator(num_slots: int) -> Orchestrator:
+    # Pool with headroom: slot admission, not raw page capacity, governs.
+    pages_per_seq = (128 + 64) // PAGE_TOKENS          # worst-case request
+    cp = ControlPlane(8, num_slots * pages_per_seq,
+                      num_logical=8 * num_slots * pages_per_seq, seed=SEED)
+    orc = Orchestrator(cp, budget=8, control_period=4, migrate=False)
+    orc.register(TenantSpec(INTERACTIVE, "chat", qos="interactive",
+                            share=4.0))
+    orc.register(TenantSpec(BATCH, "crawl", qos="batch", share=1.0))
+    return orc
+
+
+def _interactive_traffic(steps: int) -> TenantTraffic:
+    return TenantTraffic(INTERACTIVE, rate=1.5, prompt_mean=12,
+                         output_mean=8, prompt_max=64, output_max=48,
+                         stop_step=steps)
+
+
+def _flood_traffic(rate: float, start: int, stop: int) -> TenantTraffic:
+    return TenantTraffic(BATCH, rate=rate, prompt_mean=24, output_mean=12,
+                         prompt_max=128, output_max=64,
+                         start_step=start, stop_step=stop)
+
+
+def _sim_run(policy: str, num_slots: int, steps: int,
+             mix) -> tuple[dict, ContinuousBatcher]:
+    orc = _mk_orchestrator(num_slots)
+    registry = MetricsRegistry()
+    batcher = ContinuousBatcher(orc, num_slots=num_slots,
+                                page_tokens=PAGE_TOKENS, policy=policy,
+                                registry=registry)
+    engine = SimulatedDecodeEngine(num_slots)
+    traffic = TrafficGenerator(mix, seed=SEED)
+    result = serve_loop(batcher, engine, traffic, steps=steps,
+                        step_us=STEP_US)
+    return result, batcher
+
+
+def _qclean(fam: dict) -> dict:
+    return {qos: {k: (int(v) if k == "count" else round(float(v), 3))
+                  for k, v in q.items()} for qos, q in fam.items()}
+
+
+def run_fidelity(quick: bool) -> dict:
+    """Real-model continuous batching vs solo decode, bit-for-bit."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.config import RunConfig, ShapeConfig
+    from repro.models import transformer
+
+    batch, max_len, pt = 4, 32, 8
+    cfg = dataclasses.replace(configs.get_reduced("granite-3-8b"),
+                              dtype="float32")
+    shape = ShapeConfig("serve_bench", max_len, batch, "decode")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    placements = ["local"] if quick else ["local", "bridge_pull"]
+    n_reqs = 6 if quick else 8
+    reqs = [make_request(i, INTERACTIVE + (i % 2), prompt_len=3 + i % 5,
+                         output_len=4 + i % 6, seed=3, vocab=cfg.vocab_size)
+            for i in range(n_reqs)]
+    out: dict = {"requests": n_reqs, "placements": {},
+                 "bit_identical": True}
+    for kv in placements:
+        run = RunConfig(model=cfg, shape=shape, kv_placement=kv)
+        orc = _mk_orchestrator(batch)
+        bat = ContinuousBatcher(orc, num_slots=batch, page_tokens=pt)
+        eng = ModelDecodeEngine(run, params, batch=batch, max_len=max_len,
+                                page_tokens=pt, dtype=jnp.float32)
+        for r in reqs:
+            bat.submit(r)
+        guard = 0
+        while bat.in_flight() and guard < 500:
+            bat.control()
+            if bat.active_count():
+                tokens, resets = bat.step_inputs()
+                bat.observe(eng.step(tokens, resets))
+            guard += 1
+        matched = 0
+        for seq in bat.retired:
+            ref_eng = ModelDecodeEngine(run, params, batch=batch,
+                                        max_len=max_len, page_tokens=pt,
+                                        dtype=jnp.float32)
+            ref = solo_reference(ref_eng, seq.req, slot=seq.slot)
+            if ref == seq.out:
+                matched += 1
+        ok = matched == len(bat.retired) == n_reqs
+        out["placements"][kv] = {"completed": len(bat.retired),
+                                 "matched": matched, "bit_identical": ok}
+        out["bit_identical"] = out["bit_identical"] and ok
+        print(f"  fidelity {kv}: {matched}/{len(bat.retired)} sequences "
+              f"bit-identical to solo")
+    return out
+
+
+def run_scale(num_slots: int, steps: int, flood_rate: float,
+              flood: tuple) -> tuple[dict, dict]:
+    """The flood run: scale numbers + the QoS half of the isolation story."""
+    mix = [_interactive_traffic(steps),
+           _flood_traffic(flood_rate, *flood)]
+    result, batcher = _sim_run("qos", num_slots, steps, mix)
+    acc = batcher.accounting()
+    scale = {
+        "num_slots": num_slots,
+        "arrival_steps": steps,
+        "decode_steps": result["steps"],
+        "submitted": result["submitted"],
+        "completed": result["completed"],
+        "shed": result["shed"],
+        "peak_in_flight": result["peak_in_flight"],
+        "tokens": result["tokens"],
+        "goodput_tokens_per_s": round(result["goodput_tokens_per_s"], 1),
+        "latency_us": _qclean(result["latency_us"]),
+        "ttft_us": _qclean(result["ttft_us"]),
+        "per_tenant": {
+            "submitted": {str(t): v for t, v in acc["submitted"].items()},
+            "completed": {str(t): v for t, v in acc["completed"].items()},
+        },
+    }
+    print(f"  scale[qos]: peak in-flight {scale['peak_in_flight']}, "
+          f"{scale['completed']}/{scale['submitted']} completed, "
+          f"goodput {scale['goodput_tokens_per_s']:.0f} tokens/s")
+    return scale, result["latency_us"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale (same gates, smaller fidelity "
+                         "sweep and flood)")
+    args = ap.parse_args()
+    t0 = time.monotonic()
+
+    num_slots = 32 if args.quick else 64
+    steps = 50 if args.quick else 60
+    flood = (5, 30)
+    flood_rate = 60.0 if args.quick else 70.0
+
+    print("fidelity: real-model continuous batching vs solo")
+    fidelity = run_fidelity(args.quick)
+
+    print("scale: QoS batcher under batch flood")
+    scale, qos_lat = run_scale(num_slots, steps, flood_rate, flood)
+
+    print("isolation: solo vs qos vs naive")
+    solo_res, _ = _sim_run("qos", num_slots, steps,
+                           [_interactive_traffic(steps)])
+    naive_res, _ = _sim_run("naive", num_slots, steps,
+                            [_interactive_traffic(steps),
+                             _flood_traffic(flood_rate, *flood)])
+    solo_p99 = solo_res["latency_us"]["interactive"]["p99"]
+    qos_p99 = qos_lat["interactive"]["p99"]
+    naive_p99 = naive_res["latency_us"]["interactive"]["p99"]
+    isolation = {
+        "interactive_requests": solo_res["latency_us"]["interactive"][
+            "count"],
+        "interactive_solo_p99_us": round(float(solo_p99), 3),
+        "interactive_qos_p99_us": round(float(qos_p99), 3),
+        "interactive_naive_p99_us": round(float(naive_p99), 3),
+        "qos_isolation_ratio": round(float(qos_p99 / solo_p99), 3),
+        "naive_degradation_ratio": round(float(naive_p99 / solo_p99), 3),
+    }
+    print(f"  interactive p99: solo {solo_p99:.0f}us, qos {qos_p99:.0f}us "
+          f"(x{isolation['qos_isolation_ratio']}), naive {naive_p99:.0f}us "
+          f"(x{isolation['naive_degradation_ratio']})")
+
+    bench = {
+        "source": ("serve_bench --quick" if args.quick else "serve_bench"),
+        "config": {"seed": SEED, "step_us": STEP_US,
+                   "page_tokens": PAGE_TOKENS, "num_slots": num_slots,
+                   "flood_rate": flood_rate, "flood_window": list(flood)},
+        "fidelity": fidelity,
+        "scale": scale,
+        "isolation": isolation,
+    }
+    OUT.write_text(json.dumps(bench, indent=1, sort_keys=True) + "\n")
+    print(f"wrote {OUT} ({time.monotonic() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,16 @@ RLS-fitted perfmodel constants must predict the measured scenarios with
 lower error than the static datasheet prior (per scenario and overall),
 and ``BENCH_trace.json`` must be a well-formed Chrome-trace/Perfetto
 record of the run's fenced spans.
+
+``BENCH_serve.json`` (from ``benchmarks/serve_bench.py``) gates the
+request-level serving front end: continuous batching must be bit-identical
+to solo decode on every checked placement, the flood run must simulate at
+least ``SERVE_MIN_CONCURRENT`` concurrent sequences with full request
+conservation (every non-shed submission completes), per-QoS p50/p99 round
+latencies must be present and sane, and under the batch flood the QoS
+slot admission must keep the interactive p99 within
+``SERVE_ISOLATION_BOUND``x of its solo run while naive FIFO is strictly
+worse.
 """
 from __future__ import annotations
 
@@ -25,6 +35,7 @@ import sys
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
 TRACE_JSON = BENCH_JSON.with_name("BENCH_trace.json")
+SERVE_JSON = BENCH_JSON.with_name("BENCH_serve.json")
 
 TOP_KEYS = {"sw_pull_1page_us", "num_nodes", "page_bytes", "budget",
             "variants", "measured", "hierarchical", "pipeline", "tenancy",
@@ -64,6 +75,22 @@ CAL_SAMPLE_KEYS = {"scenario", "name", "features", "measured_us",
                    "static_us", "fitted_us", "static_err", "fitted_err"}
 PHASES = {"wire_req", "gather", "wire_data", "commit"}
 TRACE_X_KEYS = {"name", "cat", "ph", "ts", "dur", "pid", "tid", "args"}
+SERVE_TOP_KEYS = {"source", "config", "fidelity", "scale", "isolation"}
+SERVE_SCALE_KEYS = {"num_slots", "arrival_steps", "decode_steps",
+                    "submitted", "completed", "shed", "peak_in_flight",
+                    "tokens", "goodput_tokens_per_s", "latency_us",
+                    "ttft_us", "per_tenant"}
+SERVE_ISO_KEYS = {"interactive_requests", "interactive_solo_p99_us",
+                  "interactive_qos_p99_us", "interactive_naive_p99_us",
+                  "qos_isolation_ratio", "naive_degradation_ratio"}
+SERVE_QOS_CLASSES = {"interactive", "batch"}
+SERVE_Q_KEYS = {"count", "mean", "p50", "p99"}
+# The serve acceptance bars: the flood run must reach real fleet-scale
+# concurrency, and QoS slot admission must bound the interactive tenant's
+# request p99 under the batch flood (naive FIFO has no bound and must be
+# strictly worse — otherwise the policy is isolating nothing).
+SERVE_MIN_CONCURRENT = 1000
+SERVE_ISOLATION_BOUND = 3.0
 
 
 def fail(msg: str) -> None:
@@ -167,6 +194,76 @@ def check_trace() -> str:
         if e["dur"] < 0:
             fail(f"{TRACE_JSON.name}: span {e['name']!r} negative duration")
     return f"trace {len(xs)} spans"
+
+
+def check_serve() -> str:
+    """BENCH_serve.json: fidelity, fleet-scale concurrency, QoS isolation."""
+    if not SERVE_JSON.exists():
+        fail(f"{SERVE_JSON.name} missing (run benchmarks/serve_bench.py)")
+    serve = json.loads(SERVE_JSON.read_text())
+    gone = SERVE_TOP_KEYS - serve.keys()
+    if gone:
+        fail(f"{SERVE_JSON.name}: missing top-level keys {sorted(gone)}")
+    fid = serve["fidelity"]
+    if not fid.get("placements"):
+        fail(f"{SERVE_JSON.name}: fidelity checked no placements")
+    for kv, p in fid["placements"].items():
+        if p.get("completed", 0) <= 0 or p.get("matched") != p["completed"]:
+            fail(f"{SERVE_JSON.name}: fidelity[{kv}] "
+                 f"{p.get('matched')}/{p.get('completed')} matched")
+    if fid.get("bit_identical") is not True:
+        fail(f"{SERVE_JSON.name}: continuous batching is not bit-identical "
+             f"to solo decode")
+    sc = serve["scale"]
+    gone = SERVE_SCALE_KEYS - sc.keys()
+    if gone:
+        fail(f"{SERVE_JSON.name}: scale missing keys {sorted(gone)}")
+    if sc["peak_in_flight"] < SERVE_MIN_CONCURRENT:
+        fail(f"{SERVE_JSON.name}: peak in-flight {sc['peak_in_flight']} "
+             f"below the {SERVE_MIN_CONCURRENT}-sequence scale bar")
+    if sc["completed"] + sc["shed"] != sc["submitted"]:
+        fail(f"{SERVE_JSON.name}: request conservation broken — "
+             f"{sc['completed']} completed + {sc['shed']} shed != "
+             f"{sc['submitted']} submitted")
+    if sc["completed"] <= 0 or not sc["goodput_tokens_per_s"] > 0:
+        fail(f"{SERVE_JSON.name}: flood run completed nothing")
+    for fam in ("latency_us", "ttft_us"):
+        gone = SERVE_QOS_CLASSES - sc[fam].keys()
+        if gone:
+            fail(f"{SERVE_JSON.name}: {fam} missing QoS classes "
+                 f"{sorted(gone)}")
+        for qos, q in sc[fam].items():
+            gone = SERVE_Q_KEYS - q.keys()
+            if gone:
+                fail(f"{SERVE_JSON.name}: {fam}[{qos}] missing "
+                     f"{sorted(gone)}")
+            bad = [k for k in SERVE_Q_KEYS
+                   if not isinstance(q[k], (int, float))]
+            if bad:
+                fail(f"{SERVE_JSON.name}: {fam}[{qos}] non-numeric {bad}")
+            if q["count"] <= 0 or q["p50"] > q["p99"]:
+                fail(f"{SERVE_JSON.name}: {fam}[{qos}] degenerate "
+                     f"quantiles {q}")
+    iso = serve["isolation"]
+    gone = SERVE_ISO_KEYS - iso.keys()
+    if gone:
+        fail(f"{SERVE_JSON.name}: isolation missing keys {sorted(gone)}")
+    bad = [k for k in SERVE_ISO_KEYS if not isinstance(iso[k], (int, float))]
+    if bad:
+        fail(f"{SERVE_JSON.name}: isolation non-numeric keys {sorted(bad)}")
+    if not iso["qos_isolation_ratio"] <= SERVE_ISOLATION_BOUND:
+        fail(f"{SERVE_JSON.name}: interactive p99 under flood is "
+             f"{iso['qos_isolation_ratio']}x solo, above the "
+             f"{SERVE_ISOLATION_BOUND}x bound")
+    if not iso["naive_degradation_ratio"] > iso["qos_isolation_ratio"]:
+        fail(f"{SERVE_JSON.name}: naive FIFO "
+             f"({iso['naive_degradation_ratio']}x) not worse than QoS "
+             f"({iso['qos_isolation_ratio']}x) — slot admission is "
+             f"isolating nothing")
+    return (f"serve {sc['peak_in_flight']} peak in-flight, "
+            f"{sc['completed']}/{sc['submitted']} completed, qos "
+            f"x{iso['qos_isolation_ratio']} vs naive "
+            f"x{iso['naive_degradation_ratio']}")
 
 
 def main() -> None:
@@ -319,6 +416,7 @@ def main() -> None:
         fail("tenancy: interactive tenant served no pages")
     cal_str = check_calibration(bench["calibration"])
     trace_str = check_trace()
+    serve_str = check_serve()
     h8 = hier["8"]
     if fus["page_sweep"]:
         fstr = ", fused " + " ".join(
@@ -335,7 +433,7 @@ def main() -> None:
           f"{ten['source']}: solo {ten['interactive_solo_us']}us -> qos "
           f"{ten['interactive_qos_us']}us (x{ten['qos_isolation_ratio']}) "
           f"vs naive x{ten['naive_degradation_ratio']}; {cal_str}; "
-          f"{trace_str}")
+          f"{trace_str}; {serve_str}")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b --reduced \
       --kv bridge_pull --batch 4 --steps 32
+
+``--traffic`` switches from one fixed batch to request-level serving: a
+seeded Poisson arrival stream (two tenants, interactive + batch QoS)
+drives the continuous batcher over the same jitted decode step — slots
+admit from per-tenant queues as sequences retire, KV pages lease from an
+orchestrated pool, and the run reports per-QoS p50/p99 round latencies:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
+      --reduced --traffic --batch 8 --traffic-steps 24
 """
 from __future__ import annotations
 
@@ -48,6 +57,20 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="with --metrics: write the Chrome-trace/Perfetto "
                          "JSON of the decode loop to PATH")
+    ap.add_argument("--traffic", action="store_true",
+                    help="request-level serving: continuous batching over "
+                         "a seeded two-tenant Poisson arrival stream "
+                         "(--batch sets the decode slot count)")
+    ap.add_argument("--traffic-steps", type=int, default=32,
+                    help="arrival steps to offer load for (the loop then "
+                         "drains in-flight sequences)")
+    ap.add_argument("--traffic-rate", type=float, default=0.5,
+                    help="expected arrivals per step per tenant")
+    ap.add_argument("--traffic-seed", type=int, default=0)
+    ap.add_argument("--policy", default="qos", choices=["qos", "naive"],
+                    help="slot admission: QoS-aware weighted-fair windows "
+                         "or a single global FIFO (the noisy-neighbour "
+                         "baseline)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -60,6 +83,9 @@ def main() -> None:
 
     from repro.models import transformer
     params = transformer.init_params(cfg, jax.random.key(0))
+    if args.traffic:
+        _traffic_mode(run, cfg, params, args)
+        return
     collect = args.telemetry and args.kv in ("bridge_pull", "bridge_push")
     if args.tenants < 1:
         ap.error("--tenants must be >= 1")
@@ -142,6 +168,61 @@ def main() -> None:
             print(f"trace: {args.trace_out} "
                   f"({len(recorder.spans)} spans; open at "
                   f"https://ui.perfetto.dev)")
+
+
+def _traffic_mode(run, cfg, params, args) -> None:
+    """Request-level serving over the real jitted decode step."""
+    from repro.core.control_plane import ControlPlane
+    from repro.orchestrator import Orchestrator, TenantSpec
+    from repro.serve.batcher import (ContinuousBatcher, ModelDecodeEngine,
+                                     serve_loop)
+    from repro.serve.traffic import TenantTraffic, TrafficGenerator
+
+    slots = args.batch
+    pages_per_seq = -(-args.max_len // args.page_tokens)
+    # Pool sized for the slot count (plus headroom so admission, not raw
+    # capacity, is the governing control).
+    cp = ControlPlane(4, slots * pages_per_seq,
+                      num_logical=4 * slots * pages_per_seq,
+                      seed=args.traffic_seed)
+    orc = Orchestrator(cp, budget=run.bridge.epoch_budget,
+                       control_period=4, migrate=False)
+    orc.register(TenantSpec(1, "chat", qos="interactive", share=3.0))
+    orc.register(TenantSpec(2, "crawl", qos="batch", share=1.0))
+    batcher = ContinuousBatcher(orc, num_slots=slots,
+                                page_tokens=args.page_tokens,
+                                policy=args.policy)
+    engine = ModelDecodeEngine(run, params, batch=slots,
+                               max_len=args.max_len, mesh=None,
+                               page_tokens=args.page_tokens,
+                               dtype=jnp.dtype(cfg.dtype))
+    # Lengths cap: a sequence's prompt + output must fit max_len.
+    pmax = max(args.max_len // 2, 2)
+    omax = max(args.max_len - pmax, 1)
+    traffic = TrafficGenerator([
+        TenantTraffic(1, rate=args.traffic_rate, prompt_mean=pmax // 4 or 1,
+                      output_mean=omax // 4 or 1, prompt_max=pmax,
+                      output_max=omax, vocab=cfg.vocab_size),
+        TenantTraffic(2, rate=args.traffic_rate,
+                      prompt_mean=pmax // 2 or 1, output_mean=omax // 2 or 1,
+                      prompt_max=pmax, output_max=omax,
+                      vocab=cfg.vocab_size),
+    ], seed=args.traffic_seed)
+
+    t0 = time.monotonic()
+    result = serve_loop(batcher, engine, traffic, steps=args.traffic_steps)
+    dt = time.monotonic() - t0
+    print(f"arch={cfg.name} kv={args.kv} slots={slots} "
+          f"policy={args.policy}")
+    print(batcher.describe())
+    print(f"{result['completed']}/{result['submitted']} requests, "
+          f"{result['tokens']} tokens in {result['steps']} decode steps "
+          f"({dt:.1f}s wall, {result['tokens']/dt:.1f} tokens/s)")
+    for qos, lat in batcher.registry.family_quantiles(
+            "serve_request_steps").items():
+        print(f"  {qos}: {lat['count']} requests, round latency p50="
+              f"{lat['p50']:.0f} p99={lat['p99']:.0f} steps")
+    print(orc.admission.describe())
 
 
 if __name__ == "__main__":

@@ -225,6 +225,24 @@ class MetricsRegistry:
                        name=span.name).record(span.duration_us)
 
     # -------------------------------------------------------------- export
+    def family_quantiles(self, name: str, /, label: str = "qos"
+                         ) -> Dict[str, Dict[str, float]]:
+        """Quantile summary of one histogram family, keyed by a label.
+
+        Returns ``{label_value: {count, mean, p50, p99}}`` — e.g. the
+        per-QoS-class p50/p99 round latencies the serve bench reports
+        (``family_quantiles("serve_request_latency_us")``).  Series
+        missing the label key under an empty string.
+        """
+        out: Dict[str, Dict[str, float]] = {}
+        for (n, key), m in sorted(self._metrics.items()):
+            if n != name or not isinstance(m, Histogram):
+                continue
+            out[dict(key).get(label, "")] = {
+                "count": m.count, "mean": m.mean,
+                "p50": m.p50(), "p99": m.p99()}
+        return out
+
     def snapshot(self) -> Dict[str, Any]:
         out: Dict[str, Any] = {"counters": {}, "gauges": {},
                                "histograms": {}}

@@ -43,6 +43,7 @@ CAT_CHUNK = "chunk"         # one channel chunk within a round
 CAT_PHASE = "phase"         # wire_req / gather / wire_data / commit
 CAT_COMPILE = "compile"     # trace/lower/compile of a jitted cell
 CAT_CONTROL = "control"     # orchestrator control period / refit
+CAT_REQUEST = "request"     # one serving request (queue -> retire)
 
 
 @dataclass
@@ -104,6 +105,22 @@ class TraceRecorder:
                 self.fence(fence)
             self._stack.pop()
             s.end_us = self.clock.now_us()
+
+    def record_span(self, name: str, cat: str = CAT_REQUEST, *,
+                    start_us: float, end_us: float, **attrs) -> Span:
+        """Append a closed span with explicit timestamps.
+
+        For lifecycle spans whose start predates the call — e.g. a serving
+        request recorded at retirement, whose arrival timestamp was taken
+        steps ago — where the context-manager protocol cannot apply.  The
+        span is top-level (no parent inferred from the open stack).
+        """
+        s = Span(span_id=self._next_id, parent_id=None, name=name, cat=cat,
+                 start_us=float(start_us), end_us=float(end_us),
+                 args={k: _jsonable(v) for k, v in attrs.items()})
+        self._next_id += 1
+        self.spans.append(s)
+        return s
 
     @staticmethod
     def fence(tree) -> None:

@@ -58,20 +58,38 @@ class PendingRequest:
 
 
 class AdmissionController:
-    """Stateless decision rules + a FIFO retry queue for deferred requests."""
+    """Stateless decision rules + a FIFO retry queue for deferred requests.
 
-    def __init__(self, queue_limit: int = 64):
+    ``max_attempts`` / ``ttl_steps`` bound how long a queued request may
+    keep retrying (0 = unbounded): a request that outlives either bound is
+    *evicted* from the FIFO on the next :meth:`drain` and counted as a
+    rejection.  Without the bound, a request the pool can satisfy in
+    principle but never does in practice (e.g. held capacity that never
+    frees) parks in the FIFO forever and the serving layer's admission
+    loop livelocks on it.
+    """
+
+    def __init__(self, queue_limit: int = 64, max_attempts: int = 0,
+                 ttl_steps: int = 0):
         if queue_limit < 0:
             raise ValueError("queue_limit must be >= 0")
+        if max_attempts < 0 or ttl_steps < 0:
+            raise ValueError("max_attempts/ttl_steps must be >= 0")
         self.queue_limit = queue_limit
+        self.max_attempts = max_attempts
+        self.ttl_steps = ttl_steps
         self.pending: deque[PendingRequest] = deque()
         self.admitted_total = 0
         self.rejected_total = 0
+        self.evicted_total = 0
+        self.last_evicted: list[PendingRequest] = []
 
     # -- decision rules --------------------------------------------------------
     def evaluate(self, spec: TenantSpec, num_pages: int, *,
                  free_slots: int, free_logical: int, held_pages: int,
-                 predicted_us: Optional[float] = None) -> AdmissionDecision:
+                 predicted_us: Optional[float] = None,
+                 total_slots: Optional[int] = None,
+                 total_logical: Optional[int] = None) -> AdmissionDecision:
         """Decide one request against the current pool state.
 
         Args:
@@ -81,6 +99,11 @@ class AdmissionController:
           held_pages: pages the tenant already holds across its leases.
           predicted_us: perfmodel-predicted completion latency of the
             tenant's per-step window if admitted (None = not modeled).
+          total_slots: physical slots across *alive* nodes, free or held
+            (None = unknown).  A request larger than the whole alive pool
+            can never heal by waiting — it REJECTS instead of queueing,
+            where it would retry in the FIFO forever.
+          total_logical: the pool's whole logical id space (same rule).
         """
         if num_pages <= 0:
             return AdmissionDecision(REJECTED, "empty request")
@@ -89,6 +112,14 @@ class AdmissionController:
             return AdmissionDecision(
                 REJECTED, f"quota: holds {held_pages} + {num_pages} > "
                           f"{spec.page_quota}")
+        if total_slots is not None and num_pages > total_slots:
+            return AdmissionDecision(
+                REJECTED, f"capacity: {num_pages} pages exceeds the whole "
+                          f"alive pool ({total_slots} slots)")
+        if total_logical is not None and num_pages > total_logical:
+            return AdmissionDecision(
+                REJECTED, f"capacity: {num_pages} pages exceeds the "
+                          f"logical id space ({total_logical})")
         if num_pages > free_slots:
             return AdmissionDecision(
                 QUEUED, f"capacity: {num_pages} > {free_slots} free slots")
@@ -112,17 +143,30 @@ class AdmissionController:
         self.pending.append(req)
         return AdmissionDecision(QUEUED, "waiting for capacity")
 
-    def drain(self, try_admit) -> list[PendingRequest]:
+    def drain(self, try_admit,
+              step: Optional[int] = None) -> list[PendingRequest]:
         """Retry every queued request once, FIFO; return the admitted ones.
 
         ``try_admit(req) -> bool`` is the orchestrator's executor (evaluate
         against fresh state, allocate on admit).  Requests that still fail
         re-queue in order, so a starved head-of-line request keeps its
-        place.
+        place — unless it has exhausted ``max_attempts`` retries or (with
+        ``step`` given) outlived ``ttl_steps`` since it was queued, in
+        which case it is evicted and counted as rejected
+        (``last_evicted`` holds this drain's evictions).
         """
         granted: list[PendingRequest] = []
+        self.last_evicted = []
         for _ in range(len(self.pending)):
             req = self.pending.popleft()
+            if (self.max_attempts > 0
+                    and req.attempts >= self.max_attempts) or \
+                    (self.ttl_steps > 0 and step is not None
+                     and step - req.queued_step > self.ttl_steps):
+                self.rejected_total += 1
+                self.evicted_total += 1
+                self.last_evicted.append(req)
+                continue
             req.attempts += 1
             if try_admit(req):
                 granted.append(req)
@@ -132,5 +176,6 @@ class AdmissionController:
 
     def describe(self) -> str:
         return (f"admission: {self.admitted_total} admitted, "
-                f"{self.rejected_total} rejected, "
+                f"{self.rejected_total} rejected "
+                f"({self.evicted_total} evicted), "
                 f"{len(self.pending)} queued")

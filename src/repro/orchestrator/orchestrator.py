@@ -59,6 +59,7 @@ class Orchestrator:
                  control_period: int = 4,
                  max_tenants: int = DEFAULT_MAX_TENANTS,
                  default_term: int = 32, queue_limit: int = 64,
+                 queue_max_attempts: int = 0, queue_ttl_steps: int = 0,
                  migrate: bool = True, migration_limit: int = 8,
                  alpha: float = 0.25):
         self.cp = control_plane
@@ -70,7 +71,9 @@ class Orchestrator:
         self.migrate = migrate
         self.migration_limit = migration_limit
         self.scheduler = WeightedFairScheduler(budget)
-        self.admission = AdmissionController(queue_limit)
+        self.admission = AdmissionController(
+            queue_limit, max_attempts=queue_max_attempts,
+            ttl_steps=queue_ttl_steps)
         self.telemetry = TelemetryAggregator(
             control_plane.num_nodes, page_bytes=page_bytes, alpha=alpha,
             max_tenants=max_tenants)
@@ -127,6 +130,31 @@ class Orchestrator:
     def _free_capacity(self) -> Tuple[int, int]:
         slots = sum(self.cp.free_slots(n) for n in self.cp.alive_nodes)
         return slots, self.cp.free_logical()
+
+    def _total_capacity(self) -> Tuple[int, int]:
+        """Whole-pool capacity over alive nodes (free or held).
+
+        The REJECT side of admission: a request bigger than this can
+        never heal by waiting and must not park in the retry queue.
+        """
+        slots = len(self.cp.alive_nodes) * self.cp.pages_per_node
+        return slots, self.cp.num_logical
+
+    def can_ever_admit(self, tenant_id: int, num_pages: int) -> bool:
+        """Whether ``num_pages`` could *ever* be admitted for the tenant.
+
+        Checks only the terminal conditions — tenant quota and whole-pool
+        capacity — ignoring current occupancy.  A serving layer uses this
+        to shed impossible requests immediately instead of retrying them
+        until a TTL fires.
+        """
+        spec = self.specs[tenant_id]
+        if num_pages <= 0:
+            return False
+        if spec.page_quota > 0 and num_pages > spec.page_quota:
+            return False
+        total_slots, total_logical = self._total_capacity()
+        return num_pages <= min(total_slots, total_logical)
 
     def predicted_window_us(self, tenant_id: int) -> Optional[float]:
         """perfmodel completion latency of the tenant's per-step window.
@@ -213,10 +241,12 @@ class Orchestrator:
             raise KeyError(f"tenant {tenant_id} not registered")
         spec = self.specs[tenant_id]
         free_slots, free_logical = self._free_capacity()
+        total_slots, total_logical = self._total_capacity()
         decision = self.admission.evaluate(
             spec, num_pages, free_slots=free_slots,
             free_logical=free_logical, held_pages=self.held_pages(tenant_id),
-            predicted_us=self.predicted_window_us(tenant_id))
+            predicted_us=self.predicted_window_us(tenant_id),
+            total_slots=total_slots, total_logical=total_logical)
         if decision.status == ADMITTED:
             lease = self._grant(spec, num_pages, policy, term, auto_renew)
             return decision, lease
@@ -303,11 +333,12 @@ class Orchestrator:
         # now-rejected, deregistered tenant); only grants created a lease,
         # so the report derives from the actual lease diff.
         before = set(self.leases)
-        self.admission.drain(self._try_admit)
+        self.admission.drain(self._try_admit, step=self.step_count)
         report: Dict[str, object] = {
             "step": self.step_count, "expired": expired, "renewed": renewed,
             "granted": [l.tenant_id for lid, l in self.leases.items()
                         if lid not in before],
+            "evicted": [r.tenant_id for r in self.admission.last_evicted],
             "refit": False, "migrations": [],
         }
         if self.step_count % self.control_period == 0 and self.specs:
@@ -353,6 +384,21 @@ class Orchestrator:
             report["windows"] = dict(self.schedule.windows)
         return report
 
+    def refit_windows(self, demand: Dict[int, float]) -> Schedule:
+        """Re-fit the QoS schedule from serving-layer queue depths.
+
+        The periodic ``step()`` re-fit steers from *datapath* telemetry —
+        pages actually moved — which lags the request queues: a tenant
+        whose backlog just arrived has moved nothing yet and would bid
+        zero.  A request-level front end (the continuous batcher) instead
+        hands its live per-tenant queue depths here as the demand signal,
+        so the bridge windows track offered load a control period early.
+        """
+        self.schedule = self.scheduler.compile(
+            list(self.specs.values()),
+            {tid: max(float(d), 0.0) for tid, d in demand.items()})
+        return self.schedule
+
     def _try_admit(self, req: PendingRequest) -> bool:
         """Queue-drain executor: True removes the request from the queue.
 
@@ -364,11 +410,13 @@ class Orchestrator:
         if spec is None:
             return True  # tenant deregistered: drop the request
         free_slots, free_logical = self._free_capacity()
+        total_slots, total_logical = self._total_capacity()
         decision = self.admission.evaluate(
             spec, req.num_pages, free_slots=free_slots,
             free_logical=free_logical,
             held_pages=self.held_pages(req.tenant_id),
-            predicted_us=self.predicted_window_us(req.tenant_id))
+            predicted_us=self.predicted_window_us(req.tenant_id),
+            total_slots=total_slots, total_logical=total_logical)
         if decision.status == QUEUED:
             return False                 # still waiting: keep queued
         if decision.status == REJECTED:

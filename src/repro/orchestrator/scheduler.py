@@ -84,7 +84,11 @@ class Schedule:
             for node in range(min(num_nodes, len(rows))):
                 head = list(rows[node])[:win]
                 want[node, at: at + len(head)] = head
-                lane[node, at: at + win] = tid
+                # Tag only the filled prefix: lanes past len(head) stay FREE
+                # and must keep tenant lane 0 (the docstring contract) so
+                # composed lanes reconcile with per-tenant telemetry
+                # attribution without phantom tenant tags on dead lanes.
+                lane[node, at: at + len(head)] = tid
                 got = max(got, len(head))
             taken[tid] = got
             at += win
@@ -99,13 +103,23 @@ def water_fill(shares: np.ndarray, demand: np.ndarray,
     proportion to their shares; a tenant capped by its demand frees its
     surplus for the next pass.  Terminates when every tenant is satisfied
     or the budget is exhausted.  Returns real-valued allocations.
+
+    A zero *effective* weight vector (every still-hungry tenant has share
+    0 — e.g. shares zeroed by an operator override) falls back to an even
+    split among the hungry tenants instead of dividing by zero: NaN
+    allocations would otherwise propagate straight into compiled windows.
+    Negative shares are clipped to zero.
     """
     n = shares.shape[0]
+    shares = np.maximum(np.asarray(shares, float), 0.0)
     alloc = np.zeros((n,))
     remaining = float(budget)
     hungry = demand > 0
     while remaining > 1e-9 and hungry.any():
         w = shares * hungry
+        if w.sum() <= 0.0:
+            # Zero effective weight: even split keeps the fill NaN-free.
+            w = hungry.astype(float)
         fair = remaining * w / w.sum()
         grant = np.minimum(fair, demand - alloc)
         alloc += grant

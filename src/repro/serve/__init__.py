@@ -1,2 +1,8 @@
 from repro.serve.cache_ops import BridgeCacheOps, RingCacheOps  # noqa: F401
 from repro.serve.step import build_serve_step, init_serve_state  # noqa: F401
+from repro.serve.batcher import (ContinuousBatcher,  # noqa: F401
+                                 ModelDecodeEngine, SeqState,
+                                 SimulatedDecodeEngine, serve_loop,
+                                 solo_reference)
+from repro.serve.traffic import (Request, TenantTraffic,  # noqa: F401
+                                 TrafficGenerator, make_request)

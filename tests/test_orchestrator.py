@@ -113,6 +113,70 @@ def test_admission_rules():
     assert ac.enqueue(PendingRequest(0, 4)).status == REJECTED
 
 
+def test_admission_rejects_request_beyond_total_capacity():
+    """A request the whole pool cannot hold must REJECT, not queue.
+
+    Regression: such a request used to QUEUE on the free-capacity rule
+    and then retry in the FIFO forever — waiting can never heal it.
+    """
+    ac = AdmissionController()
+    spec = TenantSpec(0, "t")
+    d = ac.evaluate(spec, 40, free_slots=8, free_logical=50, held_pages=0,
+                    total_slots=32, total_logical=64)
+    assert d.status == REJECTED and "whole alive pool" in d.reason
+    d = ac.evaluate(spec, 40, free_slots=8, free_logical=20, held_pages=0,
+                    total_slots=64, total_logical=32)
+    assert d.status == REJECTED and "logical id space" in d.reason
+    # within totals but over free capacity still queues (can heal)
+    d = ac.evaluate(spec, 16, free_slots=8, free_logical=20, held_pages=0,
+                    total_slots=32, total_logical=64)
+    assert d.status == QUEUED
+    # orchestrator path: the impossible request never enters the queue
+    cp = ControlPlane(4, 4, num_logical=64)
+    orc = Orchestrator(cp, budget=8)
+    orc.register(TenantSpec(0, "t"))
+    dec, lease = orc.request_lease(0, 17)      # pool holds 4 * 4 = 16
+    assert dec.status == REJECTED and lease is None
+    assert len(orc.admission.pending) == 0
+    for _ in range(4):                         # no livelock, no retries
+        orc.step()
+        assert len(orc.admission.pending) == 0
+
+
+def test_admission_queue_eviction_max_attempts_and_ttl():
+    from repro.orchestrator import PendingRequest
+    ac = AdmissionController(max_attempts=2)
+    ac.enqueue(PendingRequest(0, 4))
+    for _ in range(2):
+        assert ac.drain(lambda req: False) == []
+        assert len(ac.pending) == 1
+    assert ac.drain(lambda req: False) == []   # third drain evicts
+    assert len(ac.pending) == 0
+    assert ac.evicted_total == 1 and ac.rejected_total == 1
+    assert [r.tenant_id for r in ac.last_evicted] == [0]
+
+    ac = AdmissionController(ttl_steps=3)
+    ac.enqueue(PendingRequest(1, 4, queued_step=10))
+    assert ac.drain(lambda req: False, step=13) == []
+    assert len(ac.pending) == 1                # inside the TTL
+    assert ac.drain(lambda req: False, step=14) == []
+    assert len(ac.pending) == 0 and ac.evicted_total == 1
+
+    # orchestrator wiring: a capacity-starved request is evicted by TTL
+    # instead of livelocking the admission loop forever.
+    cp = ControlPlane(2, 4, num_logical=16)
+    orc = Orchestrator(cp, budget=8, queue_ttl_steps=2)
+    orc.register(TenantSpec(0, "hog"))
+    orc.register(TenantSpec(1, "late"))
+    _, hold = orc.request_lease(0, 8, term=0)  # pins the whole pool
+    assert hold is not None
+    dec, _ = orc.request_lease(1, 6)
+    assert dec.status == QUEUED
+    reports = [orc.step() for _ in range(4)]
+    assert any(r["evicted"] == [1] for r in reports)
+    assert len(orc.admission.pending) == 0
+
+
 def test_admission_drain_keeps_fifo_order():
     from repro.orchestrator import PendingRequest
     ac = AdmissionController()
@@ -140,6 +204,56 @@ def test_water_fill_work_conserving():
     # zero demand gets nothing
     alloc = water_fill(np.asarray([1.0, 1.0]), np.asarray([0.0, 5.0]), 8)
     assert alloc.tolist() == [0.0, 5.0]
+
+
+def test_water_fill_zero_weight_guard():
+    """All-zero effective shares must not divide by zero (NaN windows).
+
+    Regression: ``water_fill`` divided by ``w.sum()`` unguarded; a zero
+    share vector produced NaN allocations that propagated into compiled
+    windows.  The guard falls back to an even split among hungry tenants.
+    """
+    alloc = water_fill(np.asarray([0.0, 0.0]),
+                       np.asarray([np.inf, np.inf]), 8)
+    assert np.isfinite(alloc).all()
+    assert alloc.tolist() == [4.0, 4.0]
+    # negative shares clip to zero rather than stealing budget
+    alloc = water_fill(np.asarray([-1.0, 1.0]), np.asarray([5.0, 5.0]), 8)
+    assert np.isfinite(alloc).all() and (alloc >= 0).all()
+    assert alloc.sum() <= 8 + 1e-9
+    # mixed: one zero-share tenant alongside a positive one still works
+    alloc = water_fill(np.asarray([0.0, 2.0]), np.asarray([4.0, 2.0]), 8)
+    assert np.isfinite(alloc).all() and alloc.sum() <= 8 + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_water_fill_windows_property(seed):
+    """Compiled windows always sum to <= budget with no NaN/negatives."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 7))
+    budget = int(rng.integers(1, 65))
+    # shares include exact zeros (the division-guard case) and demands mix
+    # zero / finite / unbounded tenants
+    shares = np.where(rng.random(n) < 0.3, 0.0, rng.uniform(0.0, 8.0, n))
+    dem = np.where(rng.random(n) < 0.3, np.inf,
+                   rng.uniform(0.0, 128.0, n))
+    alloc = water_fill(shares, dem, budget)
+    assert np.isfinite(alloc).all()
+    assert (alloc >= 0).all()
+    assert alloc.sum() <= budget + 1e-6
+    # end to end through the scheduler: integer windows obey the same
+    # invariants (TenantSpec enforces share > 0, so jitter shares up)
+    specs = [TenantSpec(i, f"t{i}", share=float(shares[i]) + 1e-3,
+                        qos=str(rng.choice(["interactive", "batch",
+                                            "best_effort"])))
+             for i in range(n)]
+    sched = WeightedFairScheduler(budget)
+    s = sched.compile(specs, demand={i: (None if np.isinf(dem[i])
+                                         else float(dem[i]))
+                                     for i in range(n)})
+    assert s.total_window <= budget
+    assert all(w >= 0 for w in s.windows.values())
 
 
 def test_scheduler_interactive_first_and_spill():
@@ -171,8 +285,49 @@ def test_schedule_compose_requests():
     # tenant 1's window (3 lanes) first, then tenant 0's (2 lanes)
     assert want[0].tolist() == [30, FREE, FREE, 10, 11]
     assert want[1].tolist() == [40, 41, 42, 20, FREE]
-    assert lane[0].tolist() == [1, 1, 1, 0, 0]
+    # only the filled prefix carries the tenant tag: FREE filler lanes
+    # keep tenant lane 0 (regression — they used to be tagged with the
+    # window's tenant id, contradicting the docstring contract)
+    assert lane[0].tolist() == [1, 0, 0, 0, 0]
+    assert lane[1].tolist() == [1, 1, 1, 0, 0]
+    assert (lane[want == FREE] == 0).all()
     assert taken == {1: 3, 0: 2}
+
+
+def test_compose_requests_free_lanes_reconcile_with_telemetry():
+    """Composed lanes must reconcile bit-exactly with per-tenant telemetry.
+
+    Regression for the FREE-filler tagging bug: a tenant whose backlog is
+    shorter than its window left FREE lanes tagged with its id.  The
+    oracle never *counts* FREE requests, so the bug was latent — but any
+    consumer reading the lane directly (or a future datapath change)
+    would attribute phantom traffic.  This pins the contract both ways: the
+    lane is 0 wherever want is FREE, and the oracle's per-tenant sums
+    equal the per-tenant non-FREE lane counts.
+    """
+    n, budget = 4, 4
+    table = striped_table(32, n, 8)
+    sched = WeightedFairScheduler(budget)
+    specs = [TenantSpec(1, "chat", qos="interactive"),
+             TenantSpec(2, "crawl", qos="batch")]
+    s = sched.compile(specs, demand={1: 3.0, 2: 3.0})
+    # short backlogs: every node has fewer queued pages than its window
+    backlogs = {1: [[0], [1], [], [2]], 2: [[3, 4], [5], [6], []]}
+    want, lane, _ = s.compose_requests(backlogs, num_nodes=n)
+    assert (lane[want == FREE] == 0).all()
+    program = steering.bidirectional_program(n)
+    telem = ref.expected_transfer_telemetry(
+        want, table, program, num_nodes=n, budget=want.shape[1],
+        tenant_ids=lane, max_tenants=DEFAULT_MAX_TENANTS)
+    per_tenant = (np.asarray(telem.tenant_served)
+                  + np.asarray(telem.tenant_spilled)
+                  + np.asarray(telem.tenant_pruned)).sum(0)
+    for spec in specs:
+        composed = int(((lane == spec.tenant_id)
+                        & (want != FREE)).sum())
+        assert per_tenant[spec.tenant_id] == composed
+    # nothing was attributed to the FREE filler tenant 0
+    assert per_tenant[0] == 0
 
 
 def test_scheduler_refit_unclips_spilled_tenant():
