@@ -9,6 +9,10 @@ counts from the ``backend_config={"known_trip_count":{"n":...}}`` attribute
 XLA attaches to counted loops, and multiplies each computation's
 contribution accordingly.
 
+The text parser itself (computations, call graph, trip counts, shape
+byte-widths) lives in :mod:`repro.analysis.hlo` and is shared with the
+datapath auditor; this module keeps the FLOPs/HBM/collective *accounting*.
+
 Counted quantities:
   flops            — dot / convolution FLOPs (2 * prod(out) * contraction)
   hbm_bytes        — operand + result bytes of *top-level* instructions
@@ -20,140 +24,36 @@ Counted quantities:
 """
 from __future__ import annotations
 
+import pathlib
 import re
+import sys
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, Optional
 
-DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
+try:
+    from repro.analysis import hlo as _hlo
+except ImportError:  # invoked without PYTHONPATH=src (e.g. plain script run)
+    sys.path.insert(
+        0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+    from repro.analysis import hlo as _hlo
 
-SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute", "ragged-all-to-all")
-SKIP_HBM_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
-                "bitcast", "while", "call", "conditional", "copy-start",
-                "copy-done", "after-all", "partition-id", "replica-id",
-                "iota"}
-
-_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
-_INSTR = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
-    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
-    r"([\w\-]+)\(")
-_OPERAND = re.compile(r"%([\w\.\-]+)")
-_CALL_ATTR = re.compile(
-    r"(?:body|condition|calls|to_apply)=%?([\w\.\-]+)"
-    r"|branch_computations=\{([^}]*)\}")
-_TRIP = re.compile(r'known_trip_count[^0-9]*?"n":"(\d+)"')
-
-
-def shape_bytes(shape_str: str) -> int:
-    total = 0
-    for dt, dims in SHAPE_RE.findall(shape_str):
-        if dt not in DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * DTYPE_BYTES[dt]
-    return total
-
-
-def shape_elems(shape_str: str) -> int:
-    m = SHAPE_RE.search(shape_str)
-    if not m:
-        return 0
-    n = 1
-    for d in m.group(2).split(","):
-        if d:
-            n *= int(d)
-    return n
-
-
-@dataclass
-class Instruction:
-    name: str
-    opcode: str
-    result_shape: str
-    result_bytes: int
-    operands: list
-    raw: str
-
-
-@dataclass
-class Computation:
-    name: str
-    instructions: list = field(default_factory=list)
-    defs: dict = field(default_factory=dict)   # name -> shape string
-    is_fused: bool = False
-
-    def hbm_traffic(self) -> float:
-        """Estimated real HBM bytes for one execution of this computation
-        as a *fusion body*: params are reads (slice-aware), root is the
-        write (update-aware for DUS roots)."""
-        consumers: dict[str, list] = {}
-        for ins in self.instructions:
-            for op in ins.operands:
-                consumers.setdefault(op, []).append(ins)
-        total = 0.0
-        root = self.instructions[-1] if self.instructions else None
-        for ins in self.instructions:
-            if ins.opcode != "parameter":
-                continue
-            users = consumers.get(ins.name, [])
-            if users and all(u.opcode in ("dynamic-slice", "gather")
-                             and u.operands and u.operands[0] == ins.name
-                             for u in users):
-                total += sum(u.result_bytes for u in users)
-            elif users and all(
-                    u.opcode == "dynamic-update-slice"
-                    and u.operands and u.operands[0] == ins.name
-                    for u in users):
-                # buffer param of an in-place DUS: traffic = update bytes
-                total += sum(shape_bytes(self.defs.get(u.operands[1], ""))
-                             for u in users)
-            else:
-                total += shape_bytes(self.defs.get(ins.name, ""))
-        if root is not None:
-            if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
-                total += shape_bytes(self.defs.get(root.operands[1], ""))
-            else:
-                total += root.result_bytes
-        return total
-
-
-def parse_hlo(text: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    cur: Optional[Computation] = None
-    for line in text.splitlines():
-        if line and not line[0].isspace() and line.rstrip().endswith("{"):
-            hm = _COMP_HEADER.match(line)
-            if hm:
-                is_entry, name = hm.group(1), hm.group(2)
-                cur = Computation(name="ENTRY" if is_entry else name)
-                comps[cur.name] = cur
-                continue
-        if cur is None:
-            continue
-        im = _INSTR.match(line)
-        if not im:
-            continue
-        name, shape_str, opcode = im.groups()
-        rest = line[im.end():]
-        # operands: %refs before attribute section (first "), " or ")," )
-        head = rest.split("),")[0] if ")," in rest else rest
-        opnames = [m.group(1) for m in _OPERAND.finditer(head)]
-        instr = Instruction(name=name, opcode=opcode, result_shape=shape_str,
-                            result_bytes=shape_bytes(shape_str),
-                            operands=opnames, raw=line)
-        cur.defs[name] = shape_str
-        cur.instructions.append(instr)
-    return comps
+# Re-exports: the parser moved to repro.analysis.hlo; benchmarks and tests
+# keep importing these names from here.
+DTYPE_BYTES = _hlo.DTYPE_BYTES
+SHAPE_RE = _hlo.SHAPE_RE
+COLLECTIVES = _hlo.COLLECTIVES
+SKIP_HBM_OPS = _hlo.SKIP_HBM_OPS
+_COMP_HEADER = _hlo._COMP_HEADER
+_INSTR = _hlo._INSTR
+_OPERAND = _hlo._OPERAND
+_CALL_ATTR = _hlo._CALL_ATTR
+_TRIP = _hlo._TRIP
+shape_bytes = _hlo.shape_bytes
+shape_elems = _hlo.shape_elems
+Instruction = _hlo.Instruction
+Computation = _hlo.Computation
+parse_hlo = _hlo.parse_hlo
+count_ops = _hlo.count_ops
 
 
 def _dot_flops(comp: Computation, ins: Instruction) -> int:
@@ -172,8 +72,7 @@ def _dot_flops(comp: Computation, ins: Instruction) -> int:
     return 2 * shape_elems(ins.result_shape) * contract
 
 
-def _instr_hbm_bytes(comps: Dict[str, "Computation"], comp: "Computation",
-                     ins: Instruction) -> float:
+def _instr_hbm_bytes(comps, comp: Computation, ins: Instruction) -> float:
     """Slice-aware HBM traffic of one top-level instruction."""
     op = ins.opcode
     if op == "fusion":
@@ -217,45 +116,9 @@ def analyze(text: str) -> HloStats:
     comps = parse_hlo(text)
     stats = HloStats(by_collective=defaultdict(float))
 
-    # computation multipliers from the call graph
-    mult: Dict[str, float] = defaultdict(float)
-    entry = comps.get("ENTRY") or next(iter(comps.values()))
-    mult[entry.name] = 1.0
-    changed, iters = True, 0
-    while changed and iters < 100:
-        changed, iters = False, iters + 1
-        for cname, comp in comps.items():
-            base = mult.get(cname, 0.0)
-            if base == 0.0:
-                continue
-            for ins in comp.instructions:
-                trips = 1.0
-                if ins.opcode == "while":
-                    tm = _TRIP.search(ins.raw)
-                    if tm:
-                        trips = float(tm.group(1))
-                    else:
-                        stats.unknown_trip_counts += 1
-                callees = []
-                for cm in _CALL_ATTR.finditer(ins.raw):
-                    single, multi = cm.groups()
-                    if single:
-                        callees.append(single)
-                    elif multi:
-                        callees += [s.strip().lstrip("%")
-                                    for s in multi.split(",")]
-                for cn in callees:
-                    if cn not in comps:
-                        continue
-                    factor = trips if ins.opcode == "while" else 1.0
-                    newv = base * factor
-                    if mult[cn] < newv:
-                        mult[cn] = newv
-                        changed = True
-                if ins.opcode == "fusion":
-                    for cm in re.finditer(r"calls=%?([\w\.\-]+)", ins.raw):
-                        if cm.group(1) in comps:
-                            comps[cm.group(1)].is_fused = True
+    # computation multipliers from the call graph (shared walker; also
+    # marks fusion bodies so their HBM traffic is charged at the fusion op)
+    mult, stats.unknown_trip_counts = _hlo.call_multipliers(comps)
 
     coll_items = []
     for cname, comp in comps.items():
@@ -291,15 +154,6 @@ def analyze(text: str) -> HloStats:
         {"bytes": b, "op": o, "shape": s[:80], "mult": mm}
         for b, o, s, mm in coll_items[:20]]
     return stats
-
-
-def count_ops(text: str, opcode: str) -> int:
-    """Count instructions whose opcode starts with ``opcode``, across every
-    computation (fusion bodies included).  Used by the bench suite to flag
-    intermediate ``copy`` ops and collective counts in lowered datapaths."""
-    comps = parse_hlo(text)
-    return sum(1 for comp in comps.values() for ins in comp.instructions
-               if ins.opcode.startswith(opcode))
 
 
 def analyze_compiled(compiled) -> HloStats:

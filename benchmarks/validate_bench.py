@@ -33,6 +33,9 @@ import json
 import pathlib
 import sys
 
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+from repro.analysis.jaxpr_audit import check_collective_budget  # noqa: E402
+
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_bridge.json"
 TRACE_JSON = BENCH_JSON.with_name("BENCH_trace.json")
 SERVE_JSON = BENCH_JSON.with_name("BENCH_serve.json")
@@ -143,7 +146,7 @@ def check_calibration(cal: dict) -> str:
             f"{picks['calibrated']}")
 
 
-def check_phase_breakdown(pb: dict) -> None:
+def check_phase_breakdown(pb: dict, num_nodes: int) -> None:
     """Per-depth phase attribution of the measured pipeline sweep."""
     for key in ("unfused", "fused", "dispatch_us_per_op",
                 "dispatch_base_us", "finding"):
@@ -171,6 +174,13 @@ def check_phase_breakdown(pb: dict) -> None:
             pb["fused"]["1"]["phase_ops"]["wire_req"]:
         fail("phase_breakdown: fused wire_req op count scales with depth "
              "(the fused engine should issue one request all_gather)")
+    # The jaxpr audit's per-channel-depth collective budget, applied to the
+    # recorded counts: unfused serial exactly N-1 wire ops per phase,
+    # unfused pipelined at most (N-1)(c+1), fused depth-constant.
+    budget_findings = check_collective_budget(pb, num_nodes)
+    if budget_findings:
+        fail("phase_breakdown violates the jaxpr audit's collective "
+             "budget:\n  " + "\n  ".join(str(f) for f in budget_findings))
 
 
 def check_trace() -> str:
@@ -367,7 +377,7 @@ def main() -> None:
             fail(f"model_vs_measured_error non-numeric keys {sorted(bad)}")
         if "phase_breakdown" not in pipe:
             fail("pipeline measured sweep missing phase_breakdown")
-        check_phase_breakdown(pipe["phase_breakdown"])
+        check_phase_breakdown(pipe["phase_breakdown"], bench["num_nodes"])
     # Fused-vs-unfused epoch comparison: when measured on a real ring, the
     # fused Pallas datapath must beat the unfused chain at both the
     # wire-bound and the latency-bound page size.

@@ -1,0 +1,31 @@
+"""bridgelint — static verification of the bridge's datapath contracts.
+
+The paper's software-defined control plane may reprogram the bridge at
+runtime only because a set of invariants holds *statically*: route
+programs have fixed shapes (zero retrace on swaps), FREE masks conserve
+the live set, gateway epochs are exclusive, and the jitted datapath is
+pure (no host sync).  This package turns those test-time invariants into
+machine-checked contracts:
+
+  :mod:`repro.analysis.program_check`  RouteProgram/Topology verifier
+      (pure numpy; gates ``ControlPlane.route_program`` behind
+      ``verify=True``)
+  :mod:`repro.analysis.jaxpr_audit`    jaxpr/HLO purity + retrace audit,
+      per-channel-depth collective budgets
+  :mod:`repro.analysis.lint`           AST lint over ``src/`` for retrace
+      hazards and host-side batcher hazards
+  :mod:`repro.analysis.hlo`            shared HLO text parser (also used
+      by ``benchmarks/hlo_analysis.py``)
+
+CLI (the blocking CI lint job)::
+
+    python -m repro.analysis [--fix-report report.json] src/
+
+Rule ids are stable (``RULES.md``); suppress a lint line with
+``# bridgelint: ignore[BL203]``.
+"""
+from repro.analysis.findings import (ERROR, WARNING, Finding,  # noqa: F401
+                                     ProgramVerificationError, errors)
+from repro.analysis.program_check import (check_program,  # noqa: F401
+                                          check_transfer_window, coverage,
+                                          verify_program)

@@ -1,0 +1,113 @@
+"""bridgelint CLI: ``python -m repro.analysis [options] [paths...]``.
+
+Runs the AST lint over every ``.py`` under the given paths (default:
+the repo's ``src/`` tree) and, unless ``--no-programs``, statically
+verifies every shipped steering constructor over a spread of ring sizes
+and fabrics — so CI fails the moment a constructor change breaks a
+schedule invariant, before any test executes a datapath.
+
+Exit status: 0 when no error-severity findings, 1 otherwise (warnings
+print but do not gate).  ``--fix-report out.json`` writes the structured
+finding list for tooling.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import List
+
+from repro.analysis.findings import Finding, errors
+from repro.analysis.lint import iter_py_files, lint_paths
+
+
+def _program_self_check() -> List[Finding]:
+    """Verify every shipped steering constructor compiles clean programs.
+
+    Imports jax lazily: the lint half of the CLI must work in jax-free
+    environments, and a missing jax downgrades this half to a warning.
+    """
+    try:
+        from repro.core import steering
+        from repro.core.topology import Topology
+    except Exception as e:  # jax absent / broken: report, don't crash
+        return [Finding("PC100", f"program self-check skipped: {e}",
+                        path="self-check", severity="warning")]
+    from repro.analysis.program_check import check_program
+
+    out: List[Finding] = []
+
+    def run(label, program, topology=None):
+        for f in check_program(program, topology):
+            out.append(Finding(f.rule, f"[{label}] {f.message}",
+                               path="self-check", severity=f.severity))
+
+    for n in (2, 3, 5, 8):
+        run(f"unidirectional+{n}", steering.unidirectional_program(n))
+        run(f"unidirectional-{n}",
+            steering.unidirectional_program(n, direction=-1))
+        run(f"bidirectional{n}", steering.bidirectional_program(n))
+        run(f"link_avoiding{n}", steering.link_avoiding_program(n, 1))
+        base = steering.bidirectional_program(n)
+        run(f"pruned{n}", steering.pruned_program(base, [1]))
+        weights = [float((k % 3) > 0) for k in range(n - 1)]
+        if not any(weights):
+            weights[0] = 1.0
+        run(f"load_balanced{n}",
+            steering.load_balanced_program(n, weights))
+    for sizes in ([4, 4], [2, 3, 3], [2, 2, 4]):
+        topo = Topology.from_sizes(sizes)
+        run(f"hierarchical{sizes}", steering.hierarchical_program(topo),
+            topo)
+        full = steering.hierarchical_program(topo)
+        n = topo.num_nodes
+        mask = [[(k + r) % 3 != 0 for r in range(n)] for k in range(n - 1)]
+        run(f"masked{sizes}", steering.masked_ranks_program(full, mask),
+            topo)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="bridgelint: static datapath-contract verification")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files/directories to lint (default: src/)")
+    ap.add_argument("--fix-report", metavar="FILE",
+                    help="write the structured finding list as JSON")
+    ap.add_argument("--no-programs", action="store_true",
+                    help="skip the steering-constructor self check")
+    args = ap.parse_args(argv)
+
+    paths = args.paths
+    if not paths:
+        root = pathlib.Path(__file__).resolve().parents[2]
+        paths = [str(root)]
+
+    findings = lint_paths(paths)
+    if not args.no_programs:
+        findings += _program_self_check()
+
+    for f in findings:
+        print(str(f))
+    bad = errors(findings)
+    nfiles = len(iter_py_files(paths))
+    print(f"bridgelint: {nfiles} files, {len(findings)} finding(s), "
+          f"{len(bad)} error(s)")
+
+    if args.fix_report:
+        report = {
+            "tool": "bridgelint",
+            "paths": [str(p) for p in paths],
+            "files": nfiles,
+            "errors": len(bad),
+            "findings": [f.as_dict() for f in findings],
+        }
+        pathlib.Path(args.fix_report).write_text(
+            json.dumps(report, indent=1, sort_keys=True) + "\n")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,244 @@
+"""Shared HLO-text parser: computations, call graph, trip counts.
+
+Extracted from ``benchmarks/hlo_analysis.py`` so the FLOPs/HBM analyzer
+(the benchmark) and the datapath auditor (:mod:`repro.analysis.jaxpr_audit`)
+read one grammar.  Pure stdlib — importable without jax, so schema checks
+(``benchmarks/validate_bench.py``) and the lint CLI stay light.
+
+The parser is deliberately line-oriented and regex-based: XLA's HLO text
+dump is stable enough for counting (opcodes, shapes, call attributes,
+``known_trip_count`` backend configs) and a real grammar would chase a
+moving target.  Anything that does not match is skipped, never fatal.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+SKIP_HBM_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "while", "call", "conditional", "copy-start",
+                "copy-done", "after-all", "partition-id", "replica-id",
+                "iota"}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\(")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALL_ATTR = re.compile(
+    r"(?:body|condition|calls|to_apply)=%?([\w\.\-]+)"
+    r"|branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'known_trip_count[^0-9]*?"n":"(\d+)"')
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    m = SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_shape: str
+    result_bytes: int
+    operands: list
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: list = field(default_factory=list)
+    defs: dict = field(default_factory=dict)   # name -> shape string
+    is_fused: bool = False
+
+    def hbm_traffic(self) -> float:
+        """Estimated real HBM bytes for one execution of this computation
+        as a *fusion body*: params are reads (slice-aware), root is the
+        write (update-aware for DUS roots)."""
+        consumers: dict[str, list] = {}
+        for ins in self.instructions:
+            for op in ins.operands:
+                consumers.setdefault(op, []).append(ins)
+        total = 0.0
+        root = self.instructions[-1] if self.instructions else None
+        for ins in self.instructions:
+            if ins.opcode != "parameter":
+                continue
+            users = consumers.get(ins.name, [])
+            if users and all(u.opcode in ("dynamic-slice", "gather")
+                             and u.operands and u.operands[0] == ins.name
+                             for u in users):
+                total += sum(u.result_bytes for u in users)
+            elif users and all(
+                    u.opcode == "dynamic-update-slice"
+                    and u.operands and u.operands[0] == ins.name
+                    for u in users):
+                # buffer param of an in-place DUS: traffic = update bytes
+                total += sum(shape_bytes(self.defs.get(u.operands[1], ""))
+                             for u in users)
+            else:
+                total += shape_bytes(self.defs.get(ins.name, ""))
+        if root is not None:
+            if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+                total += shape_bytes(self.defs.get(root.operands[1], ""))
+            else:
+                total += root.result_bytes
+        return total
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            hm = _COMP_HEADER.match(line)
+            if hm:
+                is_entry, name = hm.group(1), hm.group(2)
+                cur = Computation(name="ENTRY" if is_entry else name)
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        name, shape_str, opcode = im.groups()
+        rest = line[im.end():]
+        # operands: %refs before attribute section (first "), " or ")," )
+        head = rest.split("),")[0] if ")," in rest else rest
+        opnames = [m.group(1) for m in _OPERAND.finditer(head)]
+        instr = Instruction(name=name, opcode=opcode, result_shape=shape_str,
+                            result_bytes=shape_bytes(shape_str),
+                            operands=opnames, raw=line)
+        cur.defs[name] = shape_str
+        cur.instructions.append(instr)
+    return comps
+
+
+def instruction_callees(ins: Instruction) -> list:
+    """Computation names an instruction calls (while/fusion/call/cond)."""
+    callees = []
+    for cm in _CALL_ATTR.finditer(ins.raw):
+        single, multi = cm.groups()
+        if single:
+            callees.append(single)
+        elif multi:
+            callees += [s.strip().lstrip("%") for s in multi.split(",")]
+    return callees
+
+
+def while_trip_count(ins: Instruction) -> Optional[float]:
+    """Trip count XLA recorded for a counted while, else None."""
+    tm = _TRIP.search(ins.raw)
+    return float(tm.group(1)) if tm else None
+
+
+def call_multipliers(comps: Dict[str, Computation]
+                     ) -> Tuple[Dict[str, float], int]:
+    """Execution-count multiplier per computation from the call graph.
+
+    Fix-point over while / fusion / call / conditional edges starting at
+    ENTRY with multiplier 1; a while body's multiplier is scaled by the
+    ``known_trip_count`` XLA attached to the loop.  Marks fusion-called
+    computations (``is_fused = True``) as a side effect — their HBM
+    traffic is accounted at the fusion op, not instruction by instruction.
+
+    Returns ``(multipliers, unknown_trip_counts)`` where the second item
+    counts *reachable* while instructions XLA left uncounted (each such
+    loop's body is under-multiplied; callers surface it as a confidence
+    caveat).
+    """
+    mult: Dict[str, float] = {}
+    if not comps:
+        return mult, 0
+    entry = comps.get("ENTRY") or next(iter(comps.values()))
+    mult[entry.name] = 1.0
+    changed, iters = True, 0
+    while changed and iters < 100:
+        changed, iters = False, iters + 1
+        for cname, comp in comps.items():
+            base = mult.get(cname, 0.0)
+            if base == 0.0:
+                continue
+            for ins in comp.instructions:
+                trips = 1.0
+                if ins.opcode == "while":
+                    t = while_trip_count(ins)
+                    if t is not None:
+                        trips = t
+                for cn in instruction_callees(ins):
+                    if cn not in comps:
+                        continue
+                    factor = trips if ins.opcode == "while" else 1.0
+                    newv = base * factor
+                    if mult.get(cn, 0.0) < newv:
+                        mult[cn] = newv
+                        changed = True
+                if ins.opcode == "fusion":
+                    for cm in re.finditer(r"calls=%?([\w\.\-]+)", ins.raw):
+                        if cm.group(1) in comps:
+                            comps[cm.group(1)].is_fused = True
+    unknown = sum(
+        1 for cname, comp in comps.items() if mult.get(cname, 0.0) > 0.0
+        for ins in comp.instructions
+        if ins.opcode == "while" and while_trip_count(ins) is None)
+    return mult, unknown
+
+
+def count_ops(text: str, opcode: str) -> int:
+    """Count instructions whose opcode starts with ``opcode``, across every
+    computation (fusion bodies included).  Used by the bench suite to flag
+    intermediate ``copy`` ops and collective counts in lowered datapaths."""
+    comps = parse_hlo(text)
+    return sum(1 for comp in comps.values() for ins in comp.instructions
+               if ins.opcode.startswith(opcode))
+
+
+_SCOPE_TEMPLATE = r'op_name="[^"]*{prefix}[:_]([A-Za-z0-9_]+)'
+
+
+def scope_op_counts(hlo_text: str, prefix: str = "obs") -> Dict[str, int]:
+    """Count HLO instructions per ``<prefix>:<name>`` named scope.
+
+    The datapath wraps its phases in ``jax.named_scope("obs:wire_req")``
+    etc.; after lowering, each instruction's metadata ``op_name`` carries
+    the scope path (XLA may rewrite ``:`` to ``_``, so both spellings
+    match).  This is the library form of ``obs.trace.phase_op_counts``.
+    """
+    counts: Dict[str, int] = {}
+    for m in re.finditer(_SCOPE_TEMPLATE.format(prefix=re.escape(prefix)),
+                         hlo_text):
+        counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    return counts

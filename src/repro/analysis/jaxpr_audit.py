@@ -1,0 +1,258 @@
+"""Jaxpr / HLO auditor for datapath purity and retrace hazards.
+
+The bridge's correctness story depends on the jitted datapath being a
+*pure, statically-shaped* function of its step inputs: no host callbacks
+(`pure_callback` / `io_callback` / `debug_callback`), no infeed/outfeed,
+no dynamic output shapes — and a bounded number of wire collectives per
+channel depth (the PR 4 dispatch regression was exactly an unbounded
+per-depth collective blow-up).  This module proves those properties on
+traced jaxprs and lowered HLO text, and turns the recorded
+``phase_breakdown`` of BENCH_bridge.json into a machine-checked budget.
+
+jax is imported lazily inside the functions that trace/lower, so the
+budget checks (:func:`wire_op_budget`, :func:`check_collective_budget`)
+stay importable from jax-free contexts (``benchmarks/validate_bench.py``).
+
+Rule catalog (details in ``src/repro/analysis/RULES.md``):
+
+  JA301  host-callback      a callback primitive inside the datapath
+  JA302  dynamic-shape      an equation output with a non-static dimension
+  JA303  infeed-outfeed     host transfer primitives inside the datapath
+  JA304  retrace            a jitted function compiled more than once over
+                            a set of calls that should share one trace
+  JA305  collective-budget  per-phase wire op count above the channel-depth
+                            budget (or a fused count that scales with depth)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.findings import Finding
+
+__all__ = ["audit_jaxpr", "audit_fn", "audit_hlo_text", "count_primitives",
+           "collective_counts", "audit_retrace", "wire_op_budget",
+           "check_collective_budget", "WIRE_COLLECTIVES"]
+
+#: Primitive names that round-trip through the host.
+HOST_CALLBACK_PRIMITIVES = {
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "debug_print", "host_callback_call", "outside_call",
+}
+HOST_TRANSFER_PRIMITIVES = {"infeed", "outfeed"}
+
+#: Collective primitives that put flits on the wire (jaxpr names).
+WIRE_COLLECTIVES = ("ppermute", "all_gather", "all_to_all", "psum",
+                    "pmax", "pmin", "reduce_scatter")
+
+#: HLO custom-call targets that implement host callbacks after lowering.
+_HLO_CALLBACK_MARKERS = ("callback", "py_func")
+
+
+# --------------------------------------------------------------------- jaxpr
+def _subjaxprs(jaxpr):
+    """Immediate child jaxprs of every equation (scan/while/cond bodies)."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.params.values():
+            objs = v if isinstance(v, (tuple, list)) else (v,)
+            for o in objs:
+                inner = getattr(o, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield inner
+                elif hasattr(o, "eqns"):
+                    yield o
+
+
+def _walk_eqns(jaxpr, depth=0):
+    """(equation, depth) over the whole jaxpr tree, bodies included."""
+    if depth > 32:
+        return
+    for eqn in jaxpr.eqns:
+        yield eqn, depth
+    for sub in _subjaxprs(jaxpr):
+        yield from _walk_eqns(sub, depth + 1)
+
+
+def _closed(jaxpr):
+    return getattr(jaxpr, "jaxpr", jaxpr)  # ClosedJaxpr -> Jaxpr
+
+
+def audit_jaxpr(jaxpr, *, where: str = "jaxpr") -> List[Finding]:
+    """Purity audit of one (closed) jaxpr: JA301 / JA302 / JA303."""
+    out: List[Finding] = []
+    for eqn, _ in _walk_eqns(_closed(jaxpr)):
+        name = eqn.primitive.name
+        if name in HOST_CALLBACK_PRIMITIVES:
+            out.append(Finding(
+                "JA301", f"host callback primitive '{name}' inside the "
+                "datapath — every call syncs the device stream", path=where))
+        elif name in HOST_TRANSFER_PRIMITIVES:
+            out.append(Finding(
+                "JA303", f"host transfer primitive '{name}' inside the "
+                "datapath", path=where))
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            shape = getattr(aval, "shape", ())
+            if any(not isinstance(d, int) for d in shape):
+                out.append(Finding(
+                    "JA302", f"'{name}' produces a dynamic output shape "
+                    f"{shape} — downstream consumers retrace per size",
+                    path=where))
+    return out
+
+
+def audit_fn(fn, *args, where: str = "", **kwargs) -> List[Finding]:
+    """Trace ``fn`` with jax.make_jaxpr and audit the result."""
+    import jax
+
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    return audit_jaxpr(jaxpr, where=where or getattr(fn, "__name__", "fn"))
+
+
+def count_primitives(jaxpr) -> Dict[str, int]:
+    """Primitive occurrence counts over the whole jaxpr tree.
+
+    Loop bodies (scan/while) count ONCE — this is trace-size accounting,
+    the static complement of runtime op counts.
+    """
+    counts: Dict[str, int] = {}
+    for eqn, _ in _walk_eqns(_closed(jaxpr)):
+        name = eqn.primitive.name
+        counts[name] = counts.get(name, 0) + 1
+    return counts
+
+
+def collective_counts(jaxpr) -> Dict[str, int]:
+    """The wire-collective subset of :func:`count_primitives`."""
+    return {k: v for k, v in count_primitives(jaxpr).items()
+            if k in WIRE_COLLECTIVES}
+
+
+def audit_retrace(jitted, argsets: Sequence[tuple], *,
+                  where: str = "jit") -> List[Finding]:
+    """Call ``jitted`` over ``argsets``; >1 compile is a JA304 finding.
+
+    Use for step inputs that are *supposed* to be runtime values (route
+    programs, budgets, tables): if swapping them retraces, the zero-retrace
+    contract is broken.
+    """
+    before = int(jitted._cache_size())
+    for args in argsets:
+        jitted(*args)
+    misses = int(jitted._cache_size()) - before
+    if misses > 1:
+        return [Finding(
+            "JA304", f"{misses} compilations over {len(argsets)} calls — "
+            "a step input is being treated as static (expected at most 1)",
+            path=where)]
+    return []
+
+
+# ----------------------------------------------------------------------- HLO
+def audit_hlo_text(text: str, *, where: str = "hlo") -> List[Finding]:
+    """Purity audit of lowered HLO text: callbacks and infeed/outfeed
+    survive lowering as custom-calls / infeed ops."""
+    from repro.analysis import hlo
+
+    out: List[Finding] = []
+    for comp in hlo.parse_hlo(text).values():
+        for ins in comp.instructions:
+            if ins.opcode in ("infeed", "outfeed"):
+                out.append(Finding(
+                    "JA303", f"{ins.opcode} instruction '{ins.name}' in "
+                    f"computation {comp.name}", path=where))
+            elif ins.opcode == "custom-call" and any(
+                    m in ins.raw.lower() for m in _HLO_CALLBACK_MARKERS):
+                out.append(Finding(
+                    "JA301", f"host-callback custom-call '{ins.name}' in "
+                    f"computation {comp.name}", path=where))
+    return out
+
+
+# ------------------------------------------------------------------- budgets
+def wire_op_budget(num_nodes: int, channels: int, *,
+                   fused: bool) -> Dict[str, int]:
+    """Upper bound on scoped wire ops per transfer round, per phase.
+
+    Derived from the engines' structure (``repro.core.bridge``):
+
+    * unfused serial (channels == 1): one request ppermute and one data
+      ppermute per live slot — exactly ``N-1`` each.
+    * unfused pipelined (channels == c >= 2): each of the c chunks issues
+      its own per-slot wire ops, plus one extra per-slot drain for the
+      double-buffered carry — ``(N-1) * (c+1)``.
+    * fused: one request all_gather (``wire_req = 1``) and one payload
+      exchange whose op count is depth-INDEPENDENT — ``N-1`` ladder
+      rotations off-TPU, 1 all_to_all on TPU; budgeted at ``N-1``.
+    """
+    s = max(num_nodes - 1, 1)
+    if fused:
+        return {"wire_req": 1, "wire_data": s}
+    if channels <= 1:
+        return {"wire_req": s, "wire_data": s}
+    return {"wire_req": s * (channels + 1), "wire_data": s * (channels + 1)}
+
+
+def check_collective_budget(phase_breakdown: dict, num_nodes: int
+                            ) -> List[Finding]:
+    """JA305: the recorded per-depth phase op counts against the budget.
+
+    ``phase_breakdown`` is the BENCH_bridge.json section
+    (``{"unfused"|"fused": {"<channels>": {"phase_ops": {...}}}}``).
+    Asserts every wire phase stays within :func:`wire_op_budget` and that
+    the fused engine's wire counts do not scale with depth (the structural
+    property that killed the PR 4 dispatch regression).
+    """
+    out: List[Finding] = []
+    for engine in ("unfused", "fused"):
+        entries = phase_breakdown.get(engine, {})
+        baseline: Dict[str, int] = {}
+        for c_str in sorted(entries, key=lambda x: int(x)):
+            ops = entries[c_str].get("phase_ops", {})
+            budget = wire_op_budget(num_nodes, int(c_str),
+                                    fused=(engine == "fused"))
+            for phase, cap in budget.items():
+                got = ops.get(phase)
+                if got is None:
+                    out.append(Finding(
+                        "JA305", f"{engine} depth {c_str}: phase '{phase}' "
+                        "missing from phase_ops", path="phase_breakdown"))
+                    continue
+                if got > cap:
+                    out.append(Finding(
+                        "JA305", f"{engine} depth {c_str}: {got} '{phase}' "
+                        f"ops above the budget {cap} for a {num_nodes}-node "
+                        "ring", path="phase_breakdown"))
+                if engine == "fused":
+                    if phase in baseline and got != baseline[phase]:
+                        out.append(Finding(
+                            "JA305", f"fused depth {c_str}: '{phase}' op "
+                            f"count {got} != depth-1 count "
+                            f"{baseline[phase]} — the fused engine's wire "
+                            "ops must not scale with channels",
+                            path="phase_breakdown"))
+                    baseline.setdefault(phase, got)
+    return out
+
+
+def audit_transfer(fn, *args, where: str = "",
+                   budget: Optional[Dict[str, int]] = None,
+                   **kwargs) -> List[Finding]:
+    """One-stop audit of a datapath callable: trace -> purity audit, and
+    optionally lower -> scoped wire ops vs ``budget`` (JA305)."""
+    import jax
+
+    from repro.analysis import hlo
+
+    name = where or getattr(fn, "__name__", "fn")
+    out = audit_fn(fn, *args, where=name, **kwargs)
+    if budget:
+        lowered = jax.jit(fn).lower(*args, **kwargs)
+        text = lowered.compile().as_text()
+        counts = hlo.scope_op_counts(text)
+        for phase, cap in budget.items():
+            got = counts.get(phase, 0)
+            if got > cap:
+                out.append(Finding(
+                    "JA305", f"{name}: {got} scoped '{phase}' ops above "
+                    f"budget {cap}", path=name))
+    return out

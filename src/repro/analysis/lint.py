@@ -1,0 +1,383 @@
+"""AST lint for the retrace / host-sync hazards that bite jax datapaths.
+
+Catches, at parse time, the patterns that historically forced recompiles
+or silent host round-trips in this repo: host conversions of traced
+values, Python control flow on tracers, per-call Python lists baked into
+fresh constants, ``jax.jit`` of loop-shaped functions without
+``static_argnames``, mutation of frozen pytree fields outside
+construction, and host-side batcher-state mutation from outside the
+owning object.
+
+Rule catalog (details in ``src/repro/analysis/RULES.md``):
+
+  BL201  host-round-trip       int()/float()/bool()/.item() on a
+                               jax-rooted expression
+  BL202  traced-branch         Python if/while/ternary on a jax-rooted test
+  BL203  fresh-constant        jnp.asarray/jnp.array of a per-call Python
+                               list/tuple/comprehension
+  BL204  missing-static        jax.jit of a function that range()-loops
+                               over one of its own parameters, without
+                               static_argnames/static_argnums
+  BL205  frozen-mutation       object.__setattr__ outside
+                               __init__/__post_init__/__setstate__
+  BL206  batcher-tick          slot-map / queue / lease state mutated on an
+                               object other than self (outside the owning
+                               batcher's tick methods)
+
+Suppression: append ``# bridgelint: ignore[BL203]`` (or a bare
+``# bridgelint: ignore`` for all rules) to the offending line or the line
+directly above it.
+
+The detectors are deliberately conservative — tuned so the shipped tree
+lints clean without suppressions; anything ambiguous (a bare Name that
+*might* be a tracer) is not flagged.  False negatives are acceptable,
+false positives are not: the lint gates CI.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.findings import Finding
+
+__all__ = ["lint_source", "lint_file", "lint_paths", "iter_py_files"]
+
+#: Module roots whose calls produce traced arrays.
+_JAX_ROOTS = {"jnp", "jax", "lax"}
+
+#: jax.* / jnp.* calls that return *host* values — never flagged.
+_HOST_OK_FUNCS = {
+    "default_backend", "devices", "device_count", "local_device_count",
+    "process_index", "process_count", "issubdtype", "isdtype", "dtype",
+    "result_type", "tree_structure", "tree_all", "make_jaxpr",
+    "named_scope", "eval_shape",
+}
+
+#: Attribute reads that turn a traced expression into static host data.
+_HOST_OK_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize", "sharding"}
+
+#: Host-side batcher / lease state (BL206): mutating these on anything
+#: other than ``self`` bypasses the owning object's tick discipline.
+_BATCHER_STATE = {"slots", "queues", "leases", "slot_map", "_pending_reset"}
+_MUTATING_METHODS = {"append", "appendleft", "extend", "insert", "pop",
+                     "popleft", "remove", "clear", "update", "setdefault"}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*bridgelint:\s*ignore(?:\[([A-Za-z0-9_,\s]+)\])?")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` as a string for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _call_chain(call: ast.Call) -> Optional[str]:
+    return _dotted(call.func)
+
+
+def _is_jax_call(call: ast.Call) -> bool:
+    chain = _call_chain(call)
+    if not chain:
+        return False
+    parts = chain.split(".")
+    if parts[0] not in _JAX_ROOTS:
+        return False
+    return parts[-1] not in _HOST_OK_FUNCS
+
+
+def _is_traced_expr(node: ast.AST) -> bool:
+    """Heuristic: does this expression hold a traced jax value?
+
+    True iff it *contains* a call rooted at jnp/jax/lax (minus the known
+    host-returning helpers) and is not unwrapped back to host data via a
+    static attribute (``.shape`` etc.).  Bare Names are never traced —
+    too ambiguous for a gating lint.
+    """
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _HOST_OK_ATTRS:
+            return False
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and _is_jax_call(sub):
+            return True
+    return False
+
+
+def _is_constant_elt(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(node.operand,
+                                                    ast.Constant):
+        return True
+    return False
+
+
+def _static_kwargs(call: ast.Call) -> bool:
+    return any(kw.arg in ("static_argnames", "static_argnums")
+               for kw in call.keywords)
+
+
+class _FnIndex(ast.NodeVisitor):
+    """Module-level function defs, for the BL204 jit-site resolution."""
+
+    def __init__(self):
+        self.fns: Dict[str, ast.FunctionDef] = {}
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self.fns.setdefault(node.name, node)
+        # no generic_visit: only module/class level defs are resolvable
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def _params_looped_over(fn: ast.FunctionDef) -> Set[str]:
+    """Parameters of ``fn`` used as a ``range()`` bound inside it —
+    trace-time loop lengths that must be static."""
+    params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+    hit: Set[str] = set()
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                and sub.func.id == "range":
+            for arg in sub.args:
+                for name in ast.walk(arg):
+                    if isinstance(name, ast.Name) and name.id in params:
+                        hit.add(name.id)
+    return hit
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, fn_index: Dict[str, ast.FunctionDef]):
+        self.path = path
+        self.fns = fn_index
+        self.findings: List[Finding] = []
+        self._func_stack: List[str] = []
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(rule, message, path=self.path,
+                                     line=getattr(node, "lineno", 0)))
+
+    # ------------------------------------------------------------ scopes
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self._func_stack.append(node.name)
+        self._check_jit_decorators(node)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # ----------------------------------------------------------- BL202
+    def _check_test(self, node: ast.AST, test: ast.AST, kind: str) -> None:
+        if _is_traced_expr(test):
+            self._emit("BL202", node,
+                       f"Python {kind} on a traced expression — the value "
+                       "forces a host sync at trace time (use jnp.where / "
+                       "lax.cond / lax.select)")
+
+    def visit_If(self, node: ast.If):
+        self._check_test(node, node.test, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While):
+        self._check_test(node, node.test, "while")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp):
+        self._check_test(node, node.test, "conditional expression")
+        self.generic_visit(node)
+
+    # ----------------------------------------------------------- BL205/206
+    def visit_Assign(self, node: ast.Assign):
+        for t in node.targets:
+            self._check_state_store(t)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self._check_state_store(node.target)
+        self.generic_visit(node)
+
+    def _batcher_attr(self, node: ast.AST) -> Optional[str]:
+        """``obj.slots``-style access where obj is not ``self``."""
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        if not isinstance(node, ast.Attribute) or \
+                node.attr not in _BATCHER_STATE:
+            return None
+        root = node.value
+        while isinstance(root, (ast.Attribute, ast.Subscript)):
+            root = root.value
+        if isinstance(root, ast.Name) and root.id in ("self", "cls"):
+            return None
+        return node.attr
+
+    def _check_state_store(self, target: ast.AST) -> None:
+        attr = self._batcher_attr(target)
+        if attr is not None:
+            self._emit("BL206", target,
+                       f"mutation of batcher state '.{attr}' from outside "
+                       "the owning object — slot-map/lease changes must go "
+                       "through the batcher's tick methods")
+
+    # ----------------------------------------------------------- calls
+    def visit_Call(self, node: ast.Call):
+        chain = _call_chain(node)
+
+        # BL201: int()/float()/bool() over a traced expression
+        if isinstance(node.func, ast.Name) and \
+                node.func.id in ("int", "float", "bool") and \
+                len(node.args) == 1 and _is_traced_expr(node.args[0]):
+            self._emit("BL201", node,
+                       f"{node.func.id}() on a traced expression blocks on "
+                       "device transfer (np.asarray the fenced result "
+                       "instead, outside the hot path)")
+        # BL201: .item() on a traced expression
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "item" and \
+                _is_traced_expr(node.func.value):
+            self._emit("BL201", node,
+                       ".item() on a traced expression blocks on device "
+                       "transfer")
+
+        # BL203: jnp.asarray/jnp.array of a per-call Python list
+        if chain in ("jnp.asarray", "jnp.array", "jax.numpy.asarray",
+                     "jax.numpy.array") and node.args:
+            arg = node.args[0]
+            if isinstance(arg, (ast.List, ast.Tuple)):
+                elts = arg.elts
+                if elts and not all(_is_constant_elt(e) for e in elts) \
+                        and not any(_is_traced_expr(e) for e in elts):
+                    self._emit(
+                        "BL203", node,
+                        f"{chain} of a per-call Python sequence bakes a "
+                        "fresh constant into every trace (hoist it, or pass "
+                        "an ndarray)")
+            elif isinstance(arg, (ast.ListComp, ast.GeneratorExp)) and \
+                    not _is_traced_expr(arg.elt):
+                self._emit(
+                    "BL203", node,
+                    f"{chain} of a comprehension builds a fresh constant "
+                    "per call (hoist it, or vectorize with jnp.arange)")
+
+        # BL204: jax.jit(fn) call-site without static argnames
+        if chain in ("jax.jit", "jit") and node.args and \
+                isinstance(node.args[0], ast.Name) and \
+                not _static_kwargs(node):
+            fn = self.fns.get(node.args[0].id)
+            if fn is not None:
+                looped = _params_looped_over(fn)
+                if looped:
+                    self._emit(
+                        "BL204", node,
+                        f"jax.jit({fn.name}) without static_argnames, but "
+                        f"{fn.name}() loops over parameter(s) "
+                        f"{sorted(looped)} with range() — they must be "
+                        "static or every new value retraces")
+
+        # BL205: object.__setattr__ outside construction
+        if chain == "object.__setattr__" and \
+                (not self._func_stack or self._func_stack[-1] not in
+                 ("__init__", "__post_init__", "__setstate__")):
+            self._emit("BL205", node,
+                       "object.__setattr__ outside __init__/__post_init__ "
+                       "mutates a frozen pytree after construction — jitted "
+                       "consumers hold the stale leaves")
+
+        # BL206: mutating-method call on foreign batcher state
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _MUTATING_METHODS:
+            attr = self._batcher_attr(node.func.value)
+            if attr is not None:
+                self._emit("BL206", node,
+                           f".{node.func.attr}() on batcher state "
+                           f"'.{attr}' from outside the owning object")
+        self.generic_visit(node)
+
+    def _check_jit_decorators(self, node: ast.FunctionDef) -> None:
+        """BL204 for the decorator form: @jax.jit / @partial(jax.jit)."""
+        for dec in node.decorator_list:
+            chain = _dotted(dec) if not isinstance(dec, ast.Call) else None
+            if isinstance(dec, ast.Call):
+                dchain = _call_chain(dec)
+                if dchain in ("functools.partial", "partial") and dec.args \
+                        and _dotted(dec.args[0]) in ("jax.jit", "jit"):
+                    if not _static_kwargs(dec):
+                        chain = "jax.jit"
+                elif dchain in ("jax.jit", "jit") and not _static_kwargs(dec):
+                    chain = "jax.jit"
+            if chain in ("jax.jit", "jit"):
+                looped = _params_looped_over(node)
+                if looped:
+                    self._emit(
+                        "BL204", dec,
+                        f"@jax.jit on {node.name}() without static_argnames "
+                        f"but it range()-loops over {sorted(looped)}")
+
+
+def _suppressed_lines(source: str) -> Dict[int, Optional[Set[str]]]:
+    """line -> suppressed rule set (None = all rules)."""
+    out: Dict[int, Optional[Set[str]]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        if m.group(1) is None:
+            out[i] = None
+        else:
+            out[i] = {r.strip().upper() for r in m.group(1).split(",")
+                      if r.strip()}
+    return out
+
+
+def lint_source(source: str, path: str = "<string>") -> List[Finding]:
+    """Lint one module's source text; returns unsuppressed findings."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("BL200", f"syntax error: {e.msg}", path=path,
+                        line=e.lineno or 0)]
+    index = _FnIndex()
+    index.visit(tree)
+    linter = _Linter(path, index.fns)
+    linter.visit(tree)
+    supp = _suppressed_lines(source)
+    out = []
+    for f in linter.findings:
+        ok = False
+        for line in (f.line, f.line - 1):
+            rules = supp.get(line, "missing")
+            if rules is None or (rules != "missing" and f.rule in rules):
+                ok = True
+        if not ok:
+            out.append(f)
+    return out
+
+
+def lint_file(path) -> List[Finding]:
+    p = Path(path)
+    return lint_source(p.read_text(), path=str(p))
+
+
+def iter_py_files(paths: Iterable) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def lint_paths(paths: Iterable) -> List[Finding]:
+    """Lint every ``.py`` under ``paths`` (dirs recurse)."""
+    findings: List[Finding] = []
+    for f in iter_py_files(paths):
+        findings.extend(lint_file(f))
+    return findings

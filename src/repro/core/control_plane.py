@@ -343,7 +343,43 @@ class ControlPlane:
 
     def route_program(self, requesters: Optional[list[int]] = None,
                       bidirectional: bool = True, prune: bool = True,
-                      telemetry=None) -> steering.RouteProgram:
+                      telemetry=None, program: Optional[
+                          steering.RouteProgram] = None,
+                      verify: bool = True) -> steering.RouteProgram:
+        """Compile (or verify-and-install) the bridge's circuit schedule.
+
+        With ``program=None`` the schedule is compiled from placement /
+        telemetry (see :meth:`_compile_route_program`); passing a
+        hand-constructed :class:`~repro.core.steering.RouteProgram` makes
+        this the *install path* for externally built schedules.  Either
+        way, ``verify=True`` (the default) runs the static verifier
+        (:func:`repro.analysis.program_check.check_program`) against the
+        plane's topology and raises
+        :class:`~repro.analysis.findings.ProgramVerificationError` — with
+        the structured finding list — instead of silently handing the
+        datapath a schedule that would drop, double-serve or collide
+        traffic.  ``verify=False`` is the escape hatch for callers that
+        *want* an unchecked install (benchmarked fault injection).
+        """
+        if program is None:
+            program = self._compile_route_program(
+                requesters, bidirectional=bidirectional, prune=prune,
+                telemetry=telemetry)
+        if verify:
+            # Local import: keeps repro.core free of an import-time
+            # dependency on the analysis package.
+            from repro.analysis.findings import ProgramVerificationError
+            from repro.analysis.findings import errors as _errors
+            from repro.analysis.program_check import check_program
+
+            bad = _errors(check_program(program, self.topology))
+            if bad:
+                raise ProgramVerificationError(bad)
+        return program
+
+    def _compile_route_program(self, requesters: Optional[list[int]] = None,
+                               bidirectional: bool = True, prune: bool = True,
+                               telemetry=None) -> steering.RouteProgram:
         """Compile the bridge's runtime circuit schedule (no recompilation).
 
         Like :meth:`rate_limits`, the result is a *step input*: the

@@ -449,7 +449,10 @@ def masked_ranks_program(base: RouteProgram, rank_live) -> RouteProgram:
     entirely.
     """
     rank_live = np.asarray(rank_live, bool)
-    re = np.asarray(base.rank_epoch)
+    # int64 up-cast: the stored rank_epoch is int32, and the int64 max
+    # sentinel below would wrap to -1 in that dtype, zeroing every
+    # surviving slot's base epoch (caught by bridgelint PC106).
+    re = np.asarray(base.rank_epoch, np.int64)
     if rank_live.shape != re.shape:
         raise ValueError(f"rank_live has shape {rank_live.shape}; program "
                          f"has {re.shape}")

@@ -26,7 +26,6 @@ so compiled-HLO metadata carries the phase name;
 from __future__ import annotations
 
 import json
-import re
 from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, List, Optional
@@ -225,9 +224,6 @@ class TraceRecorder:
             f.write("\n")
 
 
-_OBS_SCOPE = re.compile(r'op_name="[^"]*obs[:_]([A-Za-z0-9_]+)')
-
-
 def phase_op_counts(hlo_text: str) -> Dict[str, int]:
     """Count HLO instructions per ``obs:<phase>`` named scope.
 
@@ -237,8 +233,11 @@ def phase_op_counts(hlo_text: str) -> Dict[str, int]:
     a program variant or pipeline depth pays its dispatch cost — the
     in-jit complement of host-side spans (XLA may rewrite ``:`` to ``_``
     in scope names, so both spellings are matched).
+
+    Thin wrapper over the shared HLO parser's
+    :func:`repro.analysis.hlo.scope_op_counts` — the jaxpr auditor's
+    collective budgets count the same ops this reports.
     """
-    counts: Dict[str, int] = {}
-    for m in _OBS_SCOPE.finditer(hlo_text):
-        counts[m.group(1)] = counts.get(m.group(1), 0) + 1
-    return counts
+    from repro.analysis.hlo import scope_op_counts
+
+    return scope_op_counts(hlo_text, prefix="obs")

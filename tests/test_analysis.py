@@ -1,0 +1,564 @@
+"""bridgelint unit suite: lint rules, program verifier, jaxpr/HLO audit.
+
+Negative fixtures live here as source snippets / corrupted programs —
+the shipped tree itself must lint clean (asserted below and gated by the
+CI lint job), so the rule demonstrations cannot ride on real files.
+"""
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from repro.analysis import (Finding, ProgramVerificationError,  # noqa: E402
+                            check_program, check_transfer_window, coverage,
+                            errors)
+from repro.analysis import hlo as ahlo  # noqa: E402
+from repro.analysis import jaxpr_audit as ja  # noqa: E402
+from repro.analysis.lint import lint_paths, lint_source  # noqa: E402
+from repro.core import steering  # noqa: E402
+from repro.core.control_plane import ControlPlane  # noqa: E402
+from repro.core.topology import Topology  # noqa: E402
+
+pytestmark = pytest.mark.analysis
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# AST lint: every rule fires on its fixture, and only there
+# ---------------------------------------------------------------------------
+
+LINT_FIXTURES = [
+    ("BL201", "import jax.numpy as jnp\n"
+              "def f(x):\n"
+              "    return int(jnp.sum(x))\n"),
+    ("BL201", "import jax.numpy as jnp\n"
+              "def f(x):\n"
+              "    return jnp.max(x).item()\n"),
+    ("BL202", "import jax.numpy as jnp\n"
+              "def f(x):\n"
+              "    if jnp.any(x > 0):\n"
+              "        return x\n"
+              "    return -x\n"),
+    ("BL202", "import jax.numpy as jnp\n"
+              "def f(x):\n"
+              "    return 1 if jnp.sum(x) > 0 else 2\n"),
+    ("BL203", "import jax.numpy as jnp\n"
+              "def f(vals):\n"
+              "    return jnp.asarray([v * 2 for v in vals])\n"),
+    ("BL203", "import jax.numpy as jnp\n"
+              "def f(a, b):\n"
+              "    return jnp.array([a, b, 0])\n"),
+    ("BL204", "import jax\n"
+              "def step(x, n):\n"
+              "    for _ in range(n):\n"
+              "        x = x * 2\n"
+              "    return x\n"
+              "fast = jax.jit(step)\n"),
+    ("BL204", "import jax\n"
+              "@jax.jit\n"
+              "def step(x, depth):\n"
+              "    for _ in range(depth):\n"
+              "        x = x + 1\n"
+              "    return x\n"),
+    ("BL205", "def poke(table, homes):\n"
+              "    object.__setattr__(table, 'home', homes)\n"),
+    ("BL206", "def admit(batcher, seq):\n"
+              "    batcher.slots[0] = seq\n"),
+    ("BL206", "def drain(batcher):\n"
+              "    batcher.queues.clear()\n"),
+]
+
+
+@pytest.mark.parametrize("rule,src", LINT_FIXTURES,
+                         ids=[f"{r}-{i}" for i, (r, _)
+                              in enumerate(LINT_FIXTURES)])
+def test_lint_rule_fires(rule, src):
+    found = lint_source(src, path="fixture.py")
+    assert rule in rules_of(found), f"{rule} not raised: {found}"
+
+
+CLEAN_SNIPPETS = [
+    # host-static backend dispatch (bridge.py does exactly this)
+    "import jax\n"
+    "def pick():\n"
+    "    if jax.default_backend() == 'tpu':\n"
+    "        return 'a2a'\n"
+    "    return 'ladder'\n",
+    # stacking traced values is not a fresh constant
+    "import jax.numpy as jnp\n"
+    "from jax import lax\n"
+    "def f(x):\n"
+    "    return jnp.stack([lax.ppermute(x, 'mem', [(0, 1)]), x])\n",
+    # constant-only literals are hoisted by jax's constant cache
+    "import jax.numpy as jnp\n"
+    "W = jnp.asarray([1, 2, 3])\n",
+    # static shape reads are host data
+    "import jax.numpy as jnp\n"
+    "def f(x):\n"
+    "    return int(jnp.zeros((4,)).shape[0])\n",
+    # numpy conversions of fenced results are the sanctioned pattern
+    "import numpy as np\n"
+    "def f(out):\n"
+    "    return int(np.asarray(out).sum())\n",
+    # frozen-dataclass construction may use object.__setattr__
+    "class T:\n"
+    "    def __post_init__(self):\n"
+    "        object.__setattr__(self, 'x', 1)\n",
+    # the batcher mutating its own state is the tick discipline
+    "class B:\n"
+    "    def _admit(self, seq):\n"
+    "        self.slots[0] = seq\n"
+    "        self.queues.clear()\n",
+]
+
+
+@pytest.mark.parametrize("src", CLEAN_SNIPPETS,
+                         ids=[f"clean-{i}" for i in range(len(CLEAN_SNIPPETS))])
+def test_lint_clean_snippets(src):
+    assert lint_source(src, path="clean.py") == []
+
+
+def test_lint_suppression_comment():
+    src = ("import jax.numpy as jnp\n"
+           "def f(x):\n"
+           "    return int(jnp.sum(x))  # bridgelint: ignore[BL201]\n")
+    assert lint_source(src) == []
+    # previous-line form
+    src2 = ("import jax.numpy as jnp\n"
+            "def f(x):\n"
+            "    # bridgelint: ignore\n"
+            "    return int(jnp.sum(x))\n")
+    assert lint_source(src2) == []
+    # a different rule id does not suppress
+    src3 = ("import jax.numpy as jnp\n"
+            "def f(x):\n"
+            "    return int(jnp.sum(x))  # bridgelint: ignore[BL203]\n")
+    assert rules_of(lint_source(src3)) == {"BL201"}
+
+
+def test_lint_syntax_error_is_finding():
+    assert rules_of(lint_source("def f(:\n")) == {"BL200"}
+
+
+def test_shipped_tree_lints_clean():
+    """The acceptance bar the CI job enforces, asserted in-tree."""
+    assert errors(lint_paths([SRC])) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _run_cli(args, cwd=REPO):
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    return subprocess.run([sys.executable, "-m", "repro.analysis"] + args,
+                          cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def test_cli_exits_zero_on_shipped_tree():
+    r = _run_cli(["--no-programs", "src/"])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_fails_on_seeded_fixtures(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import jax\n"
+        "import jax.numpy as jnp\n"
+        "def f(x, n):\n"
+        "    if jnp.any(x > 0):\n"
+        "        x = jnp.asarray([v for v in range(10)]) + int(jnp.sum(x))\n"
+        "    for _ in range(n):\n"
+        "        x = x + 1\n"
+        "    return x\n"
+        "g = jax.jit(f)\n")
+    report = tmp_path / "report.json"
+    r = _run_cli(["--no-programs", "--fix-report", str(report), str(bad)])
+    assert r.returncode == 1, r.stdout + r.stderr
+    rep = json.loads(report.read_text())
+    got = {f["rule"] for f in rep["findings"]}
+    # >= 3 distinct rule ids demonstrated on the seeded negative fixture
+    assert {"BL201", "BL202", "BL203", "BL204"} <= got
+    assert rep["errors"] == len(rep["findings"])
+
+
+def test_cli_program_self_check_passes():
+    r = _run_cli([str(SRC / "repro" / "analysis")])  # tiny lint + programs
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 error(s)" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Program verifier
+# ---------------------------------------------------------------------------
+
+def _mut(prog, **arrays):
+    """dataclasses.replace with jnp-cast arrays."""
+    cast = {}
+    for k, v in arrays.items():
+        ref_dtype = np.asarray(getattr(prog, k)).dtype
+        cast[k] = jnp.asarray(np.asarray(v).astype(ref_dtype))
+    return dataclasses.replace(prog, **cast)
+
+
+def test_check_program_clean_on_shipped_variants():
+    n = 8
+    for prog in (steering.unidirectional_program(n),
+                 steering.unidirectional_program(n, direction=-1),
+                 steering.bidirectional_program(n),
+                 steering.link_avoiding_program(n, +1),
+                 steering.pruned_program(steering.bidirectional_program(n),
+                                         [1, 3, 5]),
+                 steering.load_balanced_program(n, [0, 5, 0, 2, 9, 0, 1])):
+        assert check_program(prog) == []
+    topo = Topology.from_sizes([3, 5])
+    hier = steering.hierarchical_program(topo)
+    assert check_program(hier, topo) == []
+
+
+def test_pc101_rank_epoch_shape():
+    p = steering.bidirectional_program(8)
+    bad = dataclasses.replace(p, rank_epoch=jnp.zeros((7, 3), jnp.int32))
+    assert rules_of(check_program(bad)) == {"PC101"}
+
+
+def test_pc102_offset_incongruent():
+    p = steering.bidirectional_program(8)
+    off = np.asarray(p.offsets).copy()
+    off[2] = 5  # slot 2 serves distance 3; 5 % 8 == 5
+    assert "PC102" in rules_of(check_program(_mut(p, offsets=off)))
+
+
+def test_pc103_offset_out_of_range():
+    p = steering.bidirectional_program(8)
+    off = np.asarray(p.offsets).copy()
+    off[1] = 0
+    off[4] = 13
+    found = check_program(_mut(p, offsets=off))
+    assert "PC103" in rules_of(found)
+    assert sum(f.rule == "PC103" for f in found) == 2
+
+
+def test_pc104_dead_slot_residue():
+    p = steering.bidirectional_program(8)
+    live = np.asarray(p.live).copy()
+    live[3] = False  # offsets/epoch/rank_epoch untouched: residue
+    assert "PC104" in rules_of(check_program(_mut(p, live=live)))
+
+
+def test_pc105_idle_live_slot():
+    p = steering.bidirectional_program(8)
+    re = np.asarray(p.rank_epoch).copy()
+    re[3, :] = -1  # still live, serves nobody
+    assert "PC105" in rules_of(check_program(_mut(p, rank_epoch=re)))
+
+
+def test_pc106_epoch_mismatch():
+    p = steering.bidirectional_program(8)
+    ep = np.asarray(p.epoch).copy()
+    ep[2] += 1
+    assert "PC106" in rules_of(check_program(_mut(p, epoch=ep)))
+
+
+def test_pc107_epoch_beyond_telemetry_bins():
+    p = steering.bidirectional_program(8)
+    re = np.asarray(p.rank_epoch).copy()
+    re[2, :] = 14  # num_epoch_bins(8) == 14: one past the last bin
+    ep = np.asarray(p.epoch).copy()
+    ep[2] = 14
+    found = check_program(_mut(p, rank_epoch=re, epoch=ep))
+    assert "PC107" in rules_of(found)
+    # the oracle's epoch histograms agree this is out of range
+    from repro.telemetry.counters import num_epoch_bins
+    assert num_epoch_bins(8) == 14
+
+
+def test_pc108_gateway_contention():
+    topo = Topology.from_sizes([4, 4])
+    p = steering.hierarchical_program(topo)
+    re = np.asarray(p.rank_epoch).copy()
+    # collapse every board-crossing pairing onto one epoch: gateways contend
+    inter = ~np.asarray([[topo.pair_intra(r, (r + k + 1) % 8)
+                          for r in range(8)] for k in range(7)])
+    gw = re[inter].max()
+    re2 = np.where(inter & (re >= 0), gw, re)
+    ep = np.where(np.asarray(p.live),
+                  np.where(re2 >= 0, re2, 10**6).min(1), -1)
+    found = check_program(_mut(p, rank_epoch=re2, epoch=ep), topo)
+    assert "PC108" in rules_of(found)
+
+
+def test_pc109_ring_link_contention():
+    p = steering.unidirectional_program(8)  # all clockwise, epochs 0..6
+    ep = np.asarray(p.epoch).copy()
+    re = np.asarray(p.rank_epoch).copy()
+    ep[1] = ep[0]
+    re[1, :] = re[0, 0]  # two cw circuits on one epoch: shared links
+    found = check_program(_mut(p, epoch=ep, rank_epoch=re))
+    assert "PC109" in rules_of(found)
+
+
+def test_pc110_coverage_gap():
+    p = steering.pruned_program(steering.bidirectional_program(8), [1, 2])
+    req = np.ones((7, 8), bool)  # require full coverage
+    found = check_program(p, required_pairs=req)
+    assert "PC110" in rules_of(found)
+    # the static coverage map marks exactly the pruned slots
+    cov = coverage(p)
+    assert cov[:2].all() and not cov[2:].any()
+
+
+def test_pc111_transfer_window():
+    assert rules_of(check_transfer_window(10, 0)) == {"PC111"}
+    assert "PC111" in rules_of(check_transfer_window(10, 4, active_budget=9))
+    assert "PC111" in rules_of(check_transfer_window(10, 4, active_budget=-1))
+    assert check_transfer_window(10, 4) == []
+    # guaranteed-spill window: reported as a warning, not a gate
+    w = check_transfer_window(100, 4, active_budget=1)
+    assert w and all(f.severity == "warning" for f in w)
+    assert errors(w) == []
+
+
+# ---------------------------------------------------------------------------
+# route_program: fail loudly on corrupt installs (regression)
+# ---------------------------------------------------------------------------
+
+def _plane(n=8, topo=None):
+    cp = ControlPlane(num_nodes=n, pages_per_node=16, num_logical=2 * n,
+                      topology=topo)
+    cp.allocate(2 * n)
+    return cp
+
+
+def test_route_program_rejects_corrupted_install():
+    cp = _plane()
+    good = cp.route_program()
+    live = np.asarray(good.live) & (np.arange(7) != 2)
+    bad = _mut(good, live=live)  # rank_epoch still wires slot 2: inconsistent
+    with pytest.raises(ProgramVerificationError) as ei:
+        cp.route_program(program=bad)
+    assert ei.value.findings, "error must carry the structured finding list"
+    assert all(isinstance(f, Finding) for f in ei.value.findings)
+    assert "PC104" in rules_of(ei.value.findings)
+
+
+def test_route_program_verify_off_installs_unchecked():
+    cp = _plane()
+    good = cp.route_program()
+    bad = _mut(good, live=np.asarray(good.live) & (np.arange(7) != 2))
+    assert cp.route_program(program=bad, verify=False) is bad
+
+
+def test_route_program_accepts_all_shipped_variants():
+    cp = _plane()
+    n = 8
+    flat = [steering.unidirectional_program(n),
+            steering.bidirectional_program(n),
+            steering.pruned_program(steering.bidirectional_program(n), [1, 2]),
+            steering.load_balanced_program(n, [1, 0, 2, 0, 3, 0, 4]),
+            steering.link_avoiding_program(n, -1)]
+    for prog in flat:
+        assert cp.route_program(program=prog) is prog
+    topo = Topology.from_sizes([4, 4])
+    cph = _plane(topo=topo)
+    hier = steering.hierarchical_program(topo)
+    assert cph.route_program(program=hier) is hier
+    masked = steering.masked_ranks_program(
+        hier, np.broadcast_to(np.arange(8)[None, :] % 2 == 0, (7, 8)))
+    assert cph.route_program(program=masked) is masked
+
+
+def test_route_program_compiled_paths_verify_clean():
+    """Every compile branch runs under verify=True by default."""
+    _plane().route_program()
+    _plane().route_program(bidirectional=False)
+    _plane().route_program(prune=False)
+    _plane(topo=Topology.from_sizes([2, 3, 3])).route_program()
+    cp = _plane()
+    cp.route_program(telemetry=np.asarray([4.0, 0, 1, 0, 2, 0, 0]))
+
+
+# ---------------------------------------------------------------------------
+# jaxpr / HLO audit
+# ---------------------------------------------------------------------------
+
+def test_audit_clean_fn():
+    def f(x):
+        return jnp.tanh(x) @ x
+
+    assert ja.audit_fn(f, jnp.ones((4, 4))) == []
+
+
+def test_audit_flags_pure_callback():
+    def f(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * 2,
+            jax.ShapeDtypeStruct((4,), jnp.float32), x)
+        return y + 1
+
+    found = ja.audit_fn(f, jnp.ones((4,), jnp.float32))
+    assert "JA301" in rules_of(found)
+
+
+def test_audit_flags_debug_print_in_scan_body():
+    def f(x):
+        def body(c, _):
+            jax.debug.print("c={c}", c=c.sum())
+            return c * 2, None
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return out
+
+    found = ja.audit_fn(f, jnp.ones((4,)))
+    assert "JA301" in rules_of(found)  # found inside the scan body jaxpr
+
+
+def test_audit_hlo_flags_callback_custom_call():
+    def f(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * 2,
+            jax.ShapeDtypeStruct((4,), jnp.float32), x)
+        return y + 1
+
+    text = jax.jit(f).lower(jnp.ones((4,), jnp.float32)).compile().as_text()
+    assert "JA301" in rules_of(ja.audit_hlo_text(text))
+    clean = jax.jit(lambda x: x * 2).lower(
+        jnp.ones((4,), jnp.float32)).compile().as_text()
+    assert ja.audit_hlo_text(clean) == []
+
+
+def test_datapath_loopback_is_pure():
+    """pull_pages / push_pages trace with no host callbacks, no dynamic
+    shapes — the datapath-purity contract, checked on the 1-node path."""
+    from repro.core import bridge
+    from repro.core.memport import MemPortTable
+    from topologies import make_pool
+
+    pool = make_pool(16, 8)
+    table = MemPortTable.striped(12, 1, 16)
+    want = jnp.asarray([[3, 0, 7, -1, 11, 2]], jnp.int32)
+
+    def pull(pool, want):
+        return bridge.pull_pages(pool, want, table, mesh=None, budget=4)
+
+    assert ja.audit_fn(pull, pool, want, where="pull_pages") == []
+
+    payload = jnp.ones((1, 4, 8), jnp.float32)
+    dest = jnp.asarray([[5, 1, -1, 9]], jnp.int32)
+
+    def push(pool, dest, payload):
+        return bridge.push_pages(pool, dest, payload, table, mesh=None,
+                                 budget=2)
+
+    assert ja.audit_fn(push, pool, dest, payload, where="push_pages") == []
+
+
+def test_audit_retrace_on_program_swap():
+    """Swapping route programs on a jitted consumer must not retrace."""
+    @jax.jit
+    def consume(x, program):
+        return x + program.offsets.sum() + program.rank_epoch.sum()
+
+    x = jnp.ones((4,))
+    progs = [steering.bidirectional_program(8),
+             steering.unidirectional_program(8),
+             steering.pruned_program(steering.bidirectional_program(8), [1]),
+             steering.load_balanced_program(8, [1, 2, 3, 4, 5, 6, 7])]
+    found = ja.audit_retrace(consume, [(x, p) for p in progs],
+                             where="program-swap")
+    assert found == []
+
+
+def test_audit_retrace_flags_static_leak():
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    argsets = [(jnp.ones((k,)),) for k in (3, 4, 5)]  # shape = static
+    found = ja.audit_retrace(f, argsets, where="shape-leak")
+    assert rules_of(found) == {"JA304"}
+
+
+# ---------------------------------------------------------------------------
+# Collective budgets vs the recorded BENCH phase breakdown
+# ---------------------------------------------------------------------------
+
+def _bench_pb():
+    bench = json.loads((REPO / "BENCH_bridge.json").read_text())
+    return bench["pipeline"]["phase_breakdown"], bench["num_nodes"]
+
+
+def test_collective_budget_accepts_recorded_bench():
+    pb, n = _bench_pb()
+    assert ja.check_collective_budget(pb, n) == []
+
+
+def test_collective_budget_rejects_blowup():
+    pb, n = _bench_pb()
+    bad = json.loads(json.dumps(pb))
+    bad["unfused"]["4"]["phase_ops"]["wire_req"] = 1000
+    assert "JA305" in rules_of(ja.check_collective_budget(bad, n))
+    # a fused engine whose wire ops scale with depth is the PR 4 regression
+    bad2 = json.loads(json.dumps(pb))
+    bad2["fused"]["8"]["phase_ops"]["wire_data"] = \
+        bad2["fused"]["1"]["phase_ops"]["wire_data"] + 7
+    assert "JA305" in rules_of(ja.check_collective_budget(bad2, n))
+
+
+def test_wire_op_budget_matches_engine_structure():
+    assert ja.wire_op_budget(8, 1, fused=False) == {"wire_req": 7,
+                                                    "wire_data": 7}
+    assert ja.wire_op_budget(8, 4, fused=False) == {"wire_req": 35,
+                                                    "wire_data": 35}
+    assert ja.wire_op_budget(8, 8, fused=True) == {"wire_req": 1,
+                                                   "wire_data": 7}
+
+
+# ---------------------------------------------------------------------------
+# Shared HLO parser: the benchmark re-imports it, obs delegates to it
+# ---------------------------------------------------------------------------
+
+def test_benchmark_reexports_shared_parser():
+    from benchmarks import hlo_analysis as H
+    assert H.parse_hlo is ahlo.parse_hlo
+    assert H.shape_bytes is ahlo.shape_bytes
+    assert H.count_ops is ahlo.count_ops
+
+
+def test_scope_op_counts_matches_obs_phase_counts():
+    from repro.obs.trace import phase_op_counts
+    text = ('x metadata={op_name="jit(f)/obs:wire_req/pp"}\n'
+            'y metadata={op_name="jit(f)/obs_wire_req/pp"}\n'
+            'z metadata={op_name="jit(f)/obs:commit/add"}\n')
+    assert phase_op_counts(text) == ahlo.scope_op_counts(text, "obs")
+    assert phase_op_counts(text) == {"wire_req": 2, "commit": 1}
+
+
+def test_call_multipliers_counts_scan_trips():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.dot(c, wi), None
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    text = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8, 16), jnp.float32),
+        jax.ShapeDtypeStruct((5, 16, 16), jnp.float32)).compile().as_text()
+    comps = ahlo.parse_hlo(text)
+    mult, unknown = ahlo.call_multipliers(comps)
+    assert unknown == 0
+    assert any(abs(m - 5.0) < 1e-9 for m in mult.values()), mult

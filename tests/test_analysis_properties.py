@@ -1,0 +1,187 @@
+"""Static verifier vs runtime oracle (randomized).
+
+The contract of ``repro.analysis.program_check``: its verdict is the
+*static* image of what the datapath oracle realizes at runtime —
+
+* every shipped steering constructor checks clean on random (possibly
+  ragged) fabrics;
+* the static ``coverage`` map equals :func:`repro.core.ref.served_mask`
+  for every (requester, page) pair;
+* the runtime telemetry walk (:func:`ref.expected_transfer_telemetry`)
+  prunes exactly the pairings ``coverage`` marks unwired, and conserves
+  every live request;
+* random corruptions of a valid program always surface at least one
+  finding, and ``ControlPlane.route_program(verify=True)`` refuses to
+  install them.
+
+Real hypothesis when installed, the seeded fallback otherwise (same
+convention as test_bridge_properties.py).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal environments
+    from hypofallback import given, settings, st
+
+from topologies import make_pool, random_fabric  # noqa: F401
+
+from repro.analysis import (ProgramVerificationError, check_program,
+                            coverage, errors)
+from repro.core import ref, steering
+from repro.core.control_plane import ControlPlane
+from repro.core.memport import MemPortTable
+
+pytestmark = [pytest.mark.property, pytest.mark.analysis]
+
+
+def _flat_variants(rng, n):
+    w = rng.integers(0, 5, size=max(n - 1, 1))
+    w[int(rng.integers(0, w.size))] += 1  # at least one live distance
+    variants = [steering.unidirectional_program(n),
+                steering.unidirectional_program(n, direction=-1),
+                steering.bidirectional_program(n),
+                steering.link_avoiding_program(n, 1),
+                steering.link_avoiding_program(n, -1),
+                steering.load_balanced_program(n, w)]
+    keep = [d for d in range(1, n) if rng.random() < 0.6] or [1]
+    variants.append(
+        steering.pruned_program(steering.bidirectional_program(n), keep))
+    return variants
+
+
+def _hier_variants(rng, topo):
+    full = steering.hierarchical_program(topo)
+    mask = rng.random(np.asarray(full.rank_epoch).shape) < 0.8
+    return [full, steering.masked_ranks_program(full, mask)]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_shipped_constructors_verify_clean(seed):
+    """Every constructor's output is finding-free — warnings included."""
+    rng = np.random.default_rng(seed)
+    topo = random_fabric(rng)
+    n = topo.num_nodes
+    for prog in _flat_variants(rng, n):
+        assert check_program(prog) == []
+    for prog in _hier_variants(rng, topo):
+        assert check_program(prog, topo) == []
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_coverage_agrees_with_served_mask(seed):
+    """static coverage[d-1, i] == runtime served_mask for every request."""
+    rng = np.random.default_rng(seed)
+    topo = random_fabric(rng)
+    n, ppn = topo.num_nodes, 8
+    num_logical = int(rng.integers(1, n * ppn + 1))
+    table = MemPortTable.striped(num_logical, n, ppn)
+    progs = _hier_variants(rng, topo) + [
+        _flat_variants(rng, n)[int(rng.integers(0, 7))]]
+    r = int(rng.integers(1, 12))
+    ids = rng.integers(0, num_logical, size=(n, r)).astype(np.int32)
+    home = np.asarray(table.home)
+    for prog in progs:
+        cov = coverage(prog)
+        got = np.asarray(ref.served_mask(table, jnp.asarray(ids), prog))
+        d = (home[ids] - np.arange(n)[:, None]) % n
+        exp = np.where(d == 0, True,
+                       cov[np.maximum(d - 1, 0), np.arange(n)[:, None]])
+        np.testing.assert_array_equal(got, exp)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_telemetry_oracle_prunes_exactly_uncovered(seed):
+    """With no throttle, the runtime walk prunes exactly the pairings the
+    static coverage map marks unwired — and conserves every request."""
+    rng = np.random.default_rng(seed)
+    topo = random_fabric(rng)
+    n, ppn = topo.num_nodes, 8
+    num_logical = int(rng.integers(1, n * ppn + 1))
+    table = MemPortTable.striped(num_logical, n, ppn)
+    r = int(rng.integers(1, 12))
+    ids = rng.integers(0, num_logical, size=(n, r)).astype(np.int32)
+    home = np.asarray(table.home)
+    d = (home[ids] - np.arange(n)[:, None]) % n
+    for prog in _hier_variants(rng, topo):
+        cov = coverage(prog)
+        wired = np.where(
+            d == 0, True, cov[np.maximum(d - 1, 0), np.arange(n)[:, None]])
+        telem = ref.expected_transfer_telemetry(
+            ids, table, prog, num_nodes=n, budget=r, topology=topo)
+        pruned = np.asarray(telem.pruned)
+        loop = np.asarray(telem.loopback_served)
+        slot = np.asarray(telem.slot_served)
+        np.testing.assert_array_equal(pruned, (~wired).sum(1))
+        np.testing.assert_array_equal(loop, (d == 0).sum(1))
+        np.testing.assert_array_equal(slot.sum(1),
+                                      (wired & (d > 0)).sum(1))
+        # conservation: nothing spills at budget == r, nothing vanishes
+        assert int(np.asarray(telem.spilled).sum()) == 0
+        assert int(pruned.sum() + loop.sum() + slot.sum()) == ids.size
+
+
+def _corrupt(rng, prog):
+    """One random single-field corruption of a live slot; returns
+    (mutated program, what was done)."""
+    live = np.asarray(prog.live)
+    slots = np.nonzero(live)[0]
+    k = int(rng.choice(slots))
+    n = prog.num_nodes
+    off = np.asarray(prog.offsets).copy()
+    ep = np.asarray(prog.epoch).copy()
+    lv = live.copy()
+    re = np.asarray(prog.rank_epoch).copy()
+    op = int(rng.integers(0, 6))
+    if op == 0:       # live bit cleared, routing state left behind (PC104)
+        lv[k] = False
+    elif op == 1:     # live slot serving nobody (PC105)
+        re[k, :] = -1
+    elif op == 2:     # offset off its congruence class (PC102/PC103)
+        off[k] += 1
+    elif op == 3:     # zero offset on a live slot (PC103)
+        off[k] = 0
+    elif op == 4:     # base epoch out of step with the group mask (PC106)
+        ep[k] += 1
+    else:             # epoch beyond the telemetry bins (PC107)
+        r0 = int(np.nonzero(re[k] >= 0)[0][0])
+        re[k, r0] = 2 * (n - 1) + 3
+    return dataclasses.replace(
+        prog,
+        offsets=jnp.asarray(off, jnp.int32), epoch=jnp.asarray(ep, jnp.int32),
+        live=jnp.asarray(lv), rank_epoch=jnp.asarray(re, jnp.int32)), op
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_random_corruption_is_caught_and_refused(seed):
+    """Any single corruption yields >= 1 error finding, and the control
+    plane refuses to install the program."""
+    rng = np.random.default_rng(seed)
+    topo = random_fabric(rng)
+    n = topo.num_nodes
+    hier = rng.random() < 0.5
+    if hier:
+        prog = _hier_variants(rng, topo)[int(rng.integers(0, 2))]
+        cp_topo = topo
+    else:
+        prog = _flat_variants(rng, n)[int(rng.integers(0, 7))]
+        cp_topo = None
+    assert errors(check_program(prog, cp_topo)) == []
+    bad, op = _corrupt(rng, prog)
+    found = errors(check_program(bad, cp_topo))
+    assert found, f"corruption op {op} produced no error finding"
+    cp = ControlPlane(num_nodes=n, pages_per_node=8, num_logical=2 * n,
+                      topology=cp_topo)
+    cp.allocate(2 * n)
+    with pytest.raises(ProgramVerificationError):
+        cp.route_program(program=bad)
+    # the escape hatch still installs it (fault-injection path)
+    assert cp.route_program(program=bad, verify=False) is bad

@@ -6,6 +6,7 @@ requirements-dev.txt), the seeded fallback in hypofallback.py otherwise.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -18,6 +19,8 @@ from repro.core import bridge, ref, steering
 from repro.core.memport import FREE, MemPortTable
 from repro.core.control_plane import ControlPlane
 from repro.telemetry import counters as tcounters  # noqa: F401 (structure)
+
+pytestmark = pytest.mark.property
 
 make_pool_np = make_pool  # shared fixture (tests/topologies.py)
 

@@ -19,6 +19,7 @@ convention as test_bridge_properties.py).
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -30,6 +31,8 @@ from topologies import TELEM_FIELDS, make_pool, random_fabric
 from repro.core import bridge, ref, steering
 from repro.core.memport import MemPortTable
 from repro.core.topology import Topology
+
+pytestmark = pytest.mark.property
 
 
 def _random_hier_program(rng, topo):
