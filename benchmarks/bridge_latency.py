@@ -82,6 +82,9 @@ FUSED_JSON = BENCH_JSON.with_name("BENCH_fused_compare.json")
 # Chrome-trace/Perfetto span record of every measured scenario in this run
 # (CI uploads it; open at https://ui.perfetto.dev).
 TRACE_JSON = BENCH_JSON.with_name("BENCH_trace.json")
+# Postmortem archive of the sentinel drill's orchestrator (flight journal +
+# metrics + state; ``repro.obs.replay()`` re-executes the journal).
+BUNDLE_ZIP = BENCH_JSON.with_name("BENCH_debug_bundle.zip")
 
 # Online-calibration fit: RLS passes over the measured-scenario samples
 # (deterministic order, so the fitted constants are reproducible given the
@@ -850,6 +853,53 @@ def calibration_section(samples: list, cp: ControlPlane,
     return out
 
 
+def alerts_section() -> dict:
+    """Sentinel drill: zero false positives clean, catches a 2x injection.
+
+    Drives an orchestrated 8-ring through a clean phase whose measured
+    round latencies are exactly the calibrator's own prediction (residuals
+    ~0, ratios ~1 — any alert here is a false positive), then injects a
+    sustained 2x latency regression and counts the samples until the
+    sentinel's windowed-median detector fires.  ``validate_bench.py``
+    gates clean_alerts == 0, regression_alerts >= 1 and detection within
+    one window.  The orchestrator's debug bundle (flight journal +
+    metrics + state) lands in ``BENCH_debug_bundle.zip``.
+    """
+    cp = ControlPlane(num_nodes=ROUTE_NODES, pages_per_node=16,
+                      num_logical=ROUTE_NODES * 16)
+    orc = Orchestrator(cp, budget=ROUTE_BUDGET, page_bytes=ROUTE_PAGE_BYTES,
+                       control_period=4, migrate=False)
+    orc.register(TenantSpec(0, "drill", qos="interactive"))
+    orc.request_lease(0, ROUTE_NODES * 4)
+    window = orc.sentinel.window
+    clean_rounds = window + 8
+    for _ in range(clean_rounds):
+        feats = perfmodel.route_features(
+            orc.route_program(), orc.page_bytes, orc.budget,
+            channels=orc.channels)
+        orc.step(measured_round_us=orc.calibrator.predict_us(feats))
+    clean_alerts = len(orc.sentinel.alerts)
+    detect_samples = 0
+    for i in range(2 * window):
+        feats = perfmodel.route_features(
+            orc.route_program(), orc.page_bytes, orc.budget,
+            channels=orc.channels)
+        orc.step(measured_round_us=2.0 * orc.calibrator.predict_us(feats))
+        if len(orc.sentinel.alerts) > clean_alerts:
+            detect_samples = i + 1
+            break
+    orc.dump_debug_bundle(str(BUNDLE_ZIP))
+    return {
+        "source": f"{ROUTE_NODES}-node orchestrated drill",
+        "window": window,
+        "clean_rounds": clean_rounds,
+        "clean_alerts": clean_alerts,
+        "regression_alerts": len(orc.sentinel.alerts) - clean_alerts,
+        "detect_samples": detect_samples,
+        "alert_kinds": sorted({a.kind for a in orc.sentinel.alerts}),
+    }
+
+
 def rows(quick: bool = False) -> list[str]:
     out = []
     total = sum(perfmodel.RTT_PIPELINE_CYCLES.values())
@@ -961,6 +1011,15 @@ def rows(quick: bool = False) -> list[str]:
             f" picks={cal['selected_channels']['calibrated']}")
     else:
         out.append(f"bridge_calibration,0,source={cal['source']}")
+    # sentinel drill: clean run stays silent, injected 2x regression caught
+    al = alerts_section()
+    bench["alerts"] = al
+    out.append(
+        f"bridge_alerts,0,source={al['source']}"
+        f" clean={al['clean_alerts']} regression={al['regression_alerts']}"
+        f" detect_samples={al['detect_samples']}/{al['window']}"
+        f" kinds={','.join(al['alert_kinds'])}")
+    out.append(f"bridge_debug_bundle,0,{BUNDLE_ZIP.name}")
     BENCH_JSON.write_text(json.dumps(bench, indent=2) + "\n")
     out.append(f"bridge_route_json,0,{BENCH_JSON.name}")
     recorder.write(str(TRACE_JSON))

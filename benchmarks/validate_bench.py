@@ -15,7 +15,10 @@ The observability loop adds two more gates: the ``calibration`` section's
 RLS-fitted perfmodel constants must predict the measured scenarios with
 lower error than the static datasheet prior (per scenario and overall),
 and ``BENCH_trace.json`` must be a well-formed Chrome-trace/Perfetto
-record of the run's fenced spans.
+record of the run's fenced spans.  The ``alerts`` section gates the
+anomaly sentinel: zero false-positive alerts on the clean orchestrated
+drill, and an injected 2x latency regression flagged within one
+detection window.
 
 ``BENCH_serve.json`` (from ``benchmarks/serve_bench.py``) gates the
 request-level serving front end: continuous batching must be bit-identical
@@ -42,7 +45,9 @@ SERVE_JSON = BENCH_JSON.with_name("BENCH_serve.json")
 
 TOP_KEYS = {"sw_pull_1page_us", "num_nodes", "page_bytes", "budget",
             "variants", "measured", "hierarchical", "pipeline", "tenancy",
-            "fused", "calibration"}
+            "fused", "calibration", "alerts"}
+ALERT_KEYS = {"source", "window", "clean_rounds", "clean_alerts",
+              "regression_alerts", "detect_samples", "alert_kinds"}
 VARIANTS = {"unidirectional", "bidirectional", "pruned", "load_balanced"}
 VARIANT_KEYS = {"epochs", "live_slots", "total_hops", "bytes_per_round",
                 "model_round_us", "model_round_us_bufferless"}
@@ -144,6 +149,31 @@ def check_calibration(cal: dict) -> str:
     return (f"calibration {cal['source']}: {len(cal['samples'])} samples, "
             f"err {o['static']} -> {o['fitted']}, picks "
             f"{picks['calibrated']}")
+
+
+def check_alerts(al: dict) -> str:
+    """The sentinel drill gate: a clean orchestrated run raises zero
+    alerts (false positives page humans at 3am), and an injected 2x
+    latency regression is flagged within one detection window."""
+    gone = ALERT_KEYS - al.keys()
+    if gone:
+        fail(f"alerts section missing keys {sorted(gone)}")
+    bad = [k for k in ("window", "clean_rounds", "clean_alerts",
+                       "regression_alerts", "detect_samples")
+           if not isinstance(al[k], int)]
+    if bad:
+        fail(f"alerts non-integer keys {sorted(bad)}")
+    if al["clean_alerts"] != 0:
+        fail(f"alerts: {al['clean_alerts']} false-positive alert(s) on the "
+             f"clean run ({al['alert_kinds']})")
+    if al["regression_alerts"] < 1:
+        fail("alerts: the injected 2x latency regression raised no alert")
+    if not 0 < al["detect_samples"] <= al["window"]:
+        fail(f"alerts: regression detected after {al['detect_samples']} "
+             f"samples, outside the {al['window']}-sample window")
+    return (f"alerts clean={al['clean_alerts']} detected in "
+            f"{al['detect_samples']}/{al['window']} "
+            f"({','.join(al['alert_kinds'])})")
 
 
 def check_phase_breakdown(pb: dict, num_nodes: int) -> None:
@@ -425,6 +455,7 @@ def main() -> None:
     if ten["tenant_served"]["interactive"] <= 0:
         fail("tenancy: interactive tenant served no pages")
     cal_str = check_calibration(bench["calibration"])
+    alert_str = check_alerts(bench["alerts"])
     trace_str = check_trace()
     serve_str = check_serve()
     h8 = hier["8"]
@@ -443,7 +474,7 @@ def main() -> None:
           f"{ten['source']}: solo {ten['interactive_solo_us']}us -> qos "
           f"{ten['interactive_qos_us']}us (x{ten['qos_isolation_ratio']}) "
           f"vs naive x{ten['naive_degradation_ratio']}; {cal_str}; "
-          f"{trace_str}; {serve_str}")
+          f"{alert_str}; {trace_str}; {serve_str}")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,11 @@ Rule catalog (details in ``src/repro/analysis/RULES.md``):
   BL206  batcher-tick          slot-map / queue / lease state mutated on an
                                object other than self (outside the owning
                                batcher's tick methods)
+  BL207  raw-clock             direct time.time()/time.monotonic()/
+                               time.perf_counter() (and _ns variants)
+                               outside ``repro/obs/clock.py`` — bypasses
+                               the injectable Clock, breaking ManualClock
+                               determinism and flight-journal replay
 
 Suppression: append ``# bridgelint: ignore[BL203]`` (or a bare
 ``# bridgelint: ignore`` for all rules) to the offending line or the line
@@ -57,6 +62,16 @@ _HOST_OK_FUNCS = {
 
 #: Attribute reads that turn a traced expression into static host data.
 _HOST_OK_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize", "sharding"}
+
+#: Raw wall-clock reads (BL207) — everything outside ``repro/obs/clock.py``
+#: must go through the injectable ``Clock`` so tests and replay can pin time.
+_RAW_CLOCK_CALLS = {
+    "time.time", "time.monotonic", "time.perf_counter",
+    "time.time_ns", "time.monotonic_ns", "time.perf_counter_ns",
+}
+
+#: The one module allowed to read the host clock directly.
+_CLOCK_MODULE_SUFFIX = "obs/clock.py"
 
 #: Host-side batcher / lease state (BL206): mutating these on anything
 #: other than ``self`` bypasses the owning object's tick discipline.
@@ -159,6 +174,8 @@ class _Linter(ast.NodeVisitor):
         self.fns = fn_index
         self.findings: List[Finding] = []
         self._func_stack: List[str] = []
+        self._clock_module = path.replace("\\", "/").endswith(
+            _CLOCK_MODULE_SUFFIX)
 
     def _emit(self, rule: str, node: ast.AST, message: str) -> None:
         self.findings.append(Finding(rule, message, path=self.path,
@@ -288,6 +305,14 @@ class _Linter(ast.NodeVisitor):
                        "object.__setattr__ outside __init__/__post_init__ "
                        "mutates a frozen pytree after construction — jitted "
                        "consumers hold the stale leaves")
+
+        # BL207: raw wall-clock read outside the clock module
+        if chain in _RAW_CLOCK_CALLS and not self._clock_module:
+            self._emit("BL207", node,
+                       f"{chain}() bypasses the injectable obs.Clock — use "
+                       "MonotonicClock().now_us() (or a passed-in clock) so "
+                       "ManualClock tests and journal replay stay "
+                       "deterministic")
 
         # BL206: mutating-method call on foreign batcher state
         if isinstance(node.func, ast.Attribute) and \

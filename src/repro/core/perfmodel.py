@@ -549,6 +549,18 @@ class Calibrator:
         self.last_error_us = err
         return err
 
+    def reset_covariance(self, p0: float = 1e8) -> None:
+        """Re-open the RLS gain after detected drift.
+
+        Keeps ``theta`` (the current best fit) but re-inflates the
+        covariance, so the next observations move the fit as fast as a
+        cold start — the drift sentinel (:mod:`repro.obs.detect`) calls
+        this when the windowed residual shows the fabric no longer
+        matches the fitted constants.
+        """
+        import numpy as np
+        self._P = np.eye(len(FEATURE_NAMES)) * float(p0)
+
     @property
     def fitted(self) -> bool:
         return self.samples >= self.min_samples

@@ -23,13 +23,13 @@ tested in tests/test_ft.py.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 from repro.checkpoint import CheckpointManager
 from repro.core.control_plane import ControlPlane, MigrationStep
 from repro.ft.heartbeat import HeartbeatMonitor
+from repro.obs.clock import MonotonicClock
 from repro.telemetry import TelemetryAggregator
 
 
@@ -52,6 +52,7 @@ class ElasticTrainer:
     monitor: Optional[HeartbeatMonitor] = None
     telemetry: Optional[TelemetryAggregator] = None
     events: list = field(default_factory=list)
+    _wall: MonotonicClock = field(default_factory=MonotonicClock, repr=False)
 
     def run(self, state: Any, batches, *, start_step: int = 0,
             num_steps: int = 100,
@@ -71,9 +72,9 @@ class ElasticTrainer:
                 state, step = self.handle_failure(node, step, state)
                 continue
             batch = next(it)
-            t0 = time.monotonic()
+            t0 = self._wall.now_us()
             state, metrics = self.step_fn(state, batch)
-            dt = time.monotonic() - t0
+            dt = (self._wall.now_us() - t0) / 1e6
             if self.cp is not None:
                 # single-host simulation: node 0 reports real time, others
                 # are synthetic equal reports unless a test overrides

@@ -15,11 +15,12 @@ orchestrated pool, and the run reports per-QoS p50/p99 round latencies:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.clock import MonotonicClock
 
 from repro import configs
 from repro.config import RunConfig, ShapeConfig
@@ -71,6 +72,10 @@ def main() -> None:
                     help="slot admission: QoS-aware weighted-fair windows "
                          "or a single global FIFO (the noisy-neighbour "
                          "baseline)")
+    ap.add_argument("--debug-bundle", default=None, metavar="PATH",
+                    help="with --traffic: write a postmortem zip (flight "
+                         "journal, Perfetto trace, metrics text, "
+                         "describe()) to PATH after the run")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -115,7 +120,8 @@ def main() -> None:
         registry = MetricsRegistry()
 
     tokens = jnp.ones((args.batch,), jnp.int32)
-    t0 = time.monotonic()
+    wall = MonotonicClock()
+    t0 = wall.now_us()
     emitted = []
     for i in range(args.steps):
         if recorder is not None:
@@ -126,7 +132,7 @@ def main() -> None:
         else:
             tokens, state = step(params, state, tokens)
         emitted.append(np.asarray(tokens))
-    dt = time.monotonic() - t0
+    dt = (wall.now_us() - t0) / 1e6
     print(f"arch={cfg.name} kv={args.kv} batch={args.batch} "
           f"steps={args.steps}")
     print(f"tokens/s={args.batch*args.steps/dt:.1f} "
@@ -209,9 +215,10 @@ def _traffic_mode(run, cfg, params, args) -> None:
                       vocab=cfg.vocab_size),
     ], seed=args.traffic_seed)
 
-    t0 = time.monotonic()
+    wall = MonotonicClock()
+    t0 = wall.now_us()
     result = serve_loop(batcher, engine, traffic, steps=args.traffic_steps)
-    dt = time.monotonic() - t0
+    dt = (wall.now_us() - t0) / 1e6
     print(f"arch={cfg.name} kv={args.kv} slots={slots} "
           f"policy={args.policy}")
     print(batcher.describe())
@@ -223,6 +230,11 @@ def _traffic_mode(run, cfg, params, args) -> None:
         print(f"  {qos}: {lat['count']} requests, round latency p50="
               f"{lat['p50']:.0f} p99={lat['p99']:.0f} steps")
     print(orc.admission.describe())
+    if args.debug_bundle:
+        path = orc.dump_debug_bundle(args.debug_bundle,
+                                     trace=batcher.recorder)
+        print(f"debug bundle: {path} "
+              f"({len(orc.flight)} decision records)")
 
 
 if __name__ == "__main__":

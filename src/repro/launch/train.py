@@ -12,12 +12,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import numpy as np
 
 from repro import configs
+from repro.obs.clock import MonotonicClock
 from repro.checkpoint import CheckpointManager
 from repro.config import OptimConfig, RunConfig, ShapeConfig
 from repro.data.pipeline import Prefetcher, SyntheticLM
@@ -66,12 +66,13 @@ def main() -> None:
     data = SyntheticLM(cfg, args.batch, args.seq, seed=run.seed)
     it = Prefetcher(data.iterate(start), depth=2)
 
-    t0 = time.monotonic()
+    wall = MonotonicClock()
+    t0 = wall.now_us()
     for i in range(start, args.steps):
         batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
         state, metrics = step_fn(state, batch)
         if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
-            dt = (time.monotonic() - t0) / max(i + 1 - start, 1)
+            dt = (wall.now_us() - t0) / 1e6 / max(i + 1 - start, 1)
             print(f"step {i+1:5d} loss={float(metrics['loss']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} "
                   f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f} ms/step",

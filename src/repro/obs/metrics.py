@@ -39,10 +39,17 @@ def _label_key(labels: Mapping[str, Any]) -> LabelKey:
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus exposition escaping: backslash, double-quote, newline."""
+    return (v.replace("\\", "\\\\")
+             .replace('"', '\\"')
+             .replace("\n", "\\n"))
+
+
 def _render(name: str, key: LabelKey) -> str:
     if not key:
         return name
-    inner = ",".join(f'{k}="{v}"' for k, v in key)
+    inner = ",".join(f'{k}="{_escape_label_value(v)}"' for k, v in key)
     return f"{name}{{{inner}}}"
 
 
@@ -98,7 +105,12 @@ class Histogram:
 
     def quantile(self, q: float) -> float:
         if self.count == 0:
-            return 0.0
+            return float("nan")
+        if q >= 1.0:
+            # clamp to the upper edge of the highest occupied bucket
+            # instead of interpolating past the recorded range
+            top = int(np.flatnonzero(self.counts)[-1])
+            return float(self.bounds[min(top, self.num_buckets - 1)])
         target = q * self.count
         cum = np.cumsum(self.counts)
         idx = int(np.searchsorted(cum, target, side="left"))
@@ -320,6 +332,9 @@ class SLOMonitor:
         return sum(st.window) / len(st.window)
 
     def burn_rate(self, tenant_id: int) -> float:
+        st = self._tenants.get(tenant_id)
+        if st is None or not st.window or self.budget_fraction <= 0:
+            return 0.0
         return self.violation_fraction(tenant_id) / self.budget_fraction
 
     def describe(self) -> Dict[str, Any]:

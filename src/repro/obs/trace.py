@@ -201,15 +201,21 @@ class TraceRecorder:
             "args": {"name": self.process_name},
         }]
         for s in self.spans:
-            if s.end_us is None:  # skip still-open spans
-                continue
+            args = dict(s.args, span_id=s.span_id, parent_id=s.parent_id)
+            if s.end_us is None:
+                # Auto-close still-open spans at export time so they show
+                # up in the trace (flagged, not silently dropped).  The
+                # span itself stays open — export must not mutate it.
+                dur = max(self.clock.now_us() - s.start_us, 0.0)
+                args["unclosed"] = True
+            else:
+                dur = s.duration_us
             events.append({
                 "name": s.name, "cat": s.cat, "ph": "X",
                 "ts": round(s.start_us, 3),
-                "dur": round(s.duration_us, 3),
+                "dur": round(dur, 3),
                 "pid": self.pid, "tid": 0,
-                "args": dict(s.args, span_id=s.span_id,
-                             parent_id=s.parent_id),
+                "args": args,
             })
         return {"traceEvents": events, "displayTimeUnit": "ms",
                 "otherData": {"recorder": self.process_name}}

@@ -40,6 +40,8 @@ import numpy as np
 
 from repro.core import perfmodel
 from repro.core.control_plane import ControlPlane, MigrationStep
+from repro.obs.detect import Sentinel
+from repro.obs.flight import FlightRecorder
 from repro.obs.metrics import MetricsRegistry, SLOMonitor
 from repro.orchestrator.admission import (ADMITTED, REJECTED,
                                           AdmissionController,
@@ -61,7 +63,8 @@ class Orchestrator:
                  default_term: int = 32, queue_limit: int = 64,
                  queue_max_attempts: int = 0, queue_ttl_steps: int = 0,
                  migrate: bool = True, migration_limit: int = 8,
-                 alpha: float = 0.25):
+                 alpha: float = 0.25,
+                 flight: Optional[FlightRecorder] = None):
         self.cp = control_plane
         self.budget = budget
         self.page_bytes = page_bytes
@@ -90,6 +93,14 @@ class Orchestrator:
         self.metrics = MetricsRegistry()
         self.slo = SLOMonitor(registry=self.metrics)
         self.calibrator = perfmodel.Calibrator()
+        # Decision plane: every control-plane action below journals into
+        # the flight recorder (attach records the cp_init genesis, so the
+        # initial route-program install is the journal's first decision);
+        # the sentinel watches latency/residual/SLO/telemetry for drift.
+        self.flight = flight if flight is not None else FlightRecorder()
+        control_plane.attach_flight(self.flight)
+        self.sentinel = Sentinel(registry=self.metrics, flight=self.flight,
+                                 calibrator=self.calibrator, slo=self.slo)
         self._program = control_plane.route_program()
         self._program_stale = False
         self._next_lease = 0
@@ -106,6 +117,13 @@ class Orchestrator:
         self._anchor_group[spec.tenant_id] = (
             len(self._anchor_group) % self.cp.topology.num_groups)
         self.schedule = self.scheduler.compile(list(self.specs.values()))
+        self.flight.record(
+            "register", tenant_id=spec.tenant_id, name=spec.name,
+            qos=spec.qos, page_quota=spec.page_quota, share=spec.share,
+            priority=spec.priority, slo_round_us=spec.slo_round_us,
+            anchor_group=self._anchor_group[spec.tenant_id])
+        self.flight.record("refit", mode="compile", budget=self.budget,
+                           windows=dict(self.schedule.windows))
         return spec
 
     def held_pages(self, tenant_id: int) -> int:
@@ -215,6 +233,15 @@ class Orchestrator:
             rounds=max(rounds, 1), channels=self.channels,
             slot_pages=self._measured_slot_pages(), topology=topo)
         err = self.calibrator.observe(feats, measured_us)
+        per_round = measured_us / max(rounds, 1)
+        # Sentinel feed: the calibrator's pre-fit prediction for this very
+        # sample (measured - err) is the drift reference; only meaningful
+        # once the fit has enough samples to be trusted.
+        self.sentinel.observe_latency(
+            per_round,
+            predicted_us=((measured_us - err) / max(rounds, 1)
+                          if self.calibrator.fitted else None),
+            residual_us=abs(err) if self.calibrator.fitted else None)
         self.metrics.histogram("obs_round_latency_us").record(
             measured_us / max(rounds, 1))
         self.metrics.gauge("calibrator_samples").set(
@@ -228,14 +255,17 @@ class Orchestrator:
 
     def request_lease(self, tenant_id: int, num_pages: int, *,
                       policy: str = "affinity", term: Optional[int] = None,
-                      auto_renew: bool = False, queue: bool = True
+                      auto_renew: bool = False, queue: bool = True,
+                      request_id: Optional[int] = None
                       ) -> Tuple[AdmissionDecision, Optional[Lease]]:
         """Ask for ``num_pages`` pooled pages under admission control.
 
         Returns ``(decision, lease)``; the lease is None unless admitted.
         ``queue=True`` parks capacity/SLO-limited requests for retry on
         future steps (lease expiry frees capacity); quota violations always
-        reject.
+        reject.  ``request_id`` tags the journaled admission verdict and
+        lease grant with the serving request they decide, so
+        ``FlightRecorder.why(request_id)`` can reconstruct the chain.
         """
         if tenant_id not in self.specs:
             raise KeyError(f"tenant {tenant_id} not registered")
@@ -248,9 +278,12 @@ class Orchestrator:
             predicted_us=self.predicted_window_us(tenant_id),
             total_slots=total_slots, total_logical=total_logical)
         if decision.status == ADMITTED:
-            lease = self._grant(spec, num_pages, policy, term, auto_renew)
+            self._rec_admission(decision, tenant_id, num_pages, request_id)
+            lease = self._grant(spec, num_pages, policy, term, auto_renew,
+                                request_id=request_id)
             return decision, lease
         if decision.status == QUEUED and queue:
+            self._rec_admission(decision, tenant_id, num_pages, request_id)
             return self.admission.enqueue(PendingRequest(
                 tenant_id=tenant_id, num_pages=num_pages, policy=policy,
                 term=term if term is not None else self.default_term,
@@ -261,10 +294,20 @@ class Orchestrator:
             # rejection — a QUEUED status would promise a retry that will
             # never happen.
             decision = AdmissionDecision(REJECTED, decision.reason)
+        self._rec_admission(decision, tenant_id, num_pages, request_id)
         return decision, None
 
+    def _rec_admission(self, decision: AdmissionDecision, tenant_id: int,
+                       num_pages: int,
+                       request_id: Optional[int] = None) -> None:
+        self.flight.record(
+            "admission", request_id=request_id, tenant_id=tenant_id,
+            num_pages=num_pages, status=decision.status,
+            reason=decision.reason)
+
     def _grant(self, spec: TenantSpec, num_pages: int, policy: str,
-               term: Optional[int], auto_renew: bool) -> Lease:
+               term: Optional[int], auto_renew: bool,
+               request_id: Optional[int] = None) -> Lease:
         kw = {}
         if policy == "affinity":
             kw["affinity"] = self._anchor_node(spec.tenant_id)
@@ -278,6 +321,11 @@ class Orchestrator:
         self.leases[lease.lease_id] = lease
         self._next_lease += 1
         self.admission.admitted_total += 1
+        self.flight.record(
+            "lease_grant", request_id=request_id, lease_id=lease.lease_id,
+            tenant_id=spec.tenant_id, region_id=region.region_id,
+            num_pages=num_pages, policy=policy, term=lease.term,
+            auto_renew=auto_renew)
         # Placement changed: the circuit schedule must reach the new pages
         # before the next transfer.  Marked stale and recompiled lazily in
         # route_program() — a step that churns many leases compiles once,
@@ -289,6 +337,9 @@ class Orchestrator:
         self.cp.release(lease.region)
         self.leases.pop(lease.lease_id, None)
         self._program_stale = True               # placement changed
+        self.flight.record("lease_release", lease_id=lease.lease_id,
+                           tenant_id=lease.tenant_id,
+                           region_id=lease.region.region_id)
 
     # -- the step lifecycle ----------------------------------------------------
     def step(self, telemetry=None,
@@ -316,8 +367,11 @@ class Orchestrator:
             self.metrics.observe_telemetry(
                 telemetry, page_bytes=self.page_bytes, specs=self.specs)
             self.metrics.observe_aggregator(self.telemetry)
+            self.flight.epoch = self.telemetry.steps
+            self.sentinel.check_telemetry(self.telemetry)
         if measured_round_us is not None:
             self.observe_round_latency(measured_round_us, rounds=rounds)
+        self.sentinel.check_slo()
 
         expired, renewed = [], []
         for lease in list(self.leases.values()):
@@ -325,7 +379,14 @@ class Orchestrator:
                 if lease.auto_renew:
                     lease.renew()
                     renewed.append(lease.lease_id)
+                    self.flight.record("lease_renew",
+                                       lease_id=lease.lease_id,
+                                       tenant_id=lease.tenant_id,
+                                       expires_step=lease.expires_step)
                 else:
+                    self.flight.record("lease_expiry",
+                                       lease_id=lease.lease_id,
+                                       tenant_id=lease.tenant_id)
                     self.release_lease(lease)
                     expired.append(lease.lease_id)
 
@@ -341,6 +402,10 @@ class Orchestrator:
             "evicted": [r.tenant_id for r in self.admission.last_evicted],
             "refit": False, "migrations": [],
         }
+        for r in self.admission.last_evicted:
+            self.flight.record("admission", tenant_id=r.tenant_id,
+                               num_pages=r.num_pages, status="EVICTED",
+                               reason="queue ttl/attempt limit")
         if self.step_count % self.control_period == 0 and self.specs:
             report["refit"] = True
             if self.telemetry.steps > 0:
@@ -355,6 +420,15 @@ class Orchestrator:
                 self.schedule = self.scheduler.refit(
                     list(self.specs.values()), self.telemetry,
                     self.cp.num_nodes, saturated=saturated)
+                self.flight.record(
+                    "refit", mode="telemetry", budget=self.budget,
+                    num_nodes=self.cp.num_nodes,
+                    demand=np.asarray(self.telemetry.tenant_demand(),
+                                      float).tolist(),
+                    spilled=np.asarray(self.telemetry.last_tenant_spilled,
+                                       float).tolist(),
+                    saturated=list(saturated),
+                    windows=dict(self.schedule.windows))
                 if self._program_stale:
                     # Placement changed this step: the measured compile
                     # would prune the new (not-yet-measured) distances, so
@@ -379,9 +453,17 @@ class Orchestrator:
             else:
                 self.schedule = self.scheduler.compile(
                     list(self.specs.values()))
+                self.flight.record("refit", mode="compile",
+                                   budget=self.budget,
+                                   windows=dict(self.schedule.windows))
                 self._program = self.cp.route_program()
                 self._program_stale = False
             report["windows"] = dict(self.schedule.windows)
+        self.flight.record(
+            "step_report", step=self.step_count, expired=expired,
+            renewed=renewed, granted=report["granted"],
+            evicted=report["evicted"], refit=report["refit"],
+            migrations=len(report["migrations"]))
         return report
 
     def refit_windows(self, demand: Dict[int, float]) -> Schedule:
@@ -394,9 +476,12 @@ class Orchestrator:
         hands its live per-tenant queue depths here as the demand signal,
         so the bridge windows track offered load a control period early.
         """
+        demand = {tid: max(float(d), 0.0) for tid, d in demand.items()}
         self.schedule = self.scheduler.compile(
-            list(self.specs.values()),
-            {tid: max(float(d), 0.0) for tid, d in demand.items()})
+            list(self.specs.values()), demand)
+        self.flight.record("refit", mode="windows", budget=self.budget,
+                           demand={str(k): v for k, v in demand.items()},
+                           windows=dict(self.schedule.windows))
         return self.schedule
 
     def _try_admit(self, req: PendingRequest) -> bool:
@@ -454,6 +539,26 @@ class Orchestrator:
         return out
 
     # -- introspection ---------------------------------------------------------
+    def dump_debug_bundle(self, path: str, trace=None) -> str:
+        """Write one postmortem archive: journal + trace + metrics + state.
+
+        The zip holds ``journal.jsonl`` (the flight journal —
+        ``repro.obs.replay()`` re-executes it), ``trace.json`` (Perfetto
+        Chrome-trace of ``trace`` or the journal's attached recorder, when
+        either exists), ``metrics.txt`` (Prometheus exposition) and
+        ``describe.txt`` (orchestrator + pool state).  Returns ``path``.
+        """
+        import zipfile
+
+        trace = trace if trace is not None else self.flight.trace
+        with zipfile.ZipFile(path, "w", zipfile.ZIP_DEFLATED) as z:
+            z.writestr("journal.jsonl", self.flight.to_jsonl())
+            if trace is not None:
+                z.writestr("trace.json", trace.to_json(indent=1))
+            z.writestr("metrics.txt", self.metrics.to_text() + "\n")
+            z.writestr("describe.txt", self.describe() + "\n")
+        return path
+
     def describe(self) -> str:
         """Mirror of :meth:`ControlPlane.describe` for the tenancy layer."""
         lines = [f"orchestrator: step {self.step_count}, "

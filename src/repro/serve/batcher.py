@@ -345,7 +345,7 @@ class ContinuousBatcher:
         pages = max(req.num_pages(self.page_tokens), 1)
         decision, lease = self.orc.request_lease(
             req.tenant_id, pages, term=self.lease_term, auto_renew=True,
-            queue=False)
+            queue=False, request_id=req.req_id)
         if not decision.admitted:
             cand.attempts += 1
             if not self.orc.can_ever_admit(req.tenant_id, pages):
@@ -434,7 +434,40 @@ class ContinuousBatcher:
                 f"req{seq.req.req_id}", CAT_REQUEST,
                 start_us=seq.arrive_us, end_us=now, tenant=tid, qos=qos,
                 prompt_len=seq.req.prompt_len, output_len=len(seq.out),
-                admit_us=seq.admit_us)
+                admit_us=seq.admit_us, req_id=seq.req.req_id,
+                lease_id=seq.lease_id)
+
+    def why(self, request_id: int) -> Dict[str, object]:
+        """Causal chain behind one request: admission verdicts, lease
+        grant/release, the route program it ran under (from the flight
+        journal) plus its ``req{id}`` span and the bridge-round spans that
+        overlap its in-flight window (from the trace recorder)."""
+        out: Dict[str, object] = {
+            "request_id": int(request_id),
+            "decisions": [r.to_json() for r in
+                          self.orc.flight.why(request_id)],
+            "spans": [],
+        }
+        if self.recorder is not None:
+            req_span = None
+            for s in self.recorder.spans:
+                if s.name == f"req{request_id}":
+                    req_span = s
+                    break
+            if req_span is not None:
+                lo, hi = req_span.start_us, (req_span.end_us
+                                             if req_span.end_us is not None
+                                             else float("inf"))
+                for s in self.recorder.spans:
+                    if s is req_span or (
+                            s.end_us is not None and s.end_us >= lo
+                            and s.start_us <= hi
+                            and s.cat in ("round", "control", CAT_REQUEST)):
+                        out["spans"].append({
+                            "name": s.name, "cat": s.cat,
+                            "start_us": s.start_us, "end_us": s.end_us,
+                            "args": dict(s.args)})
+        return out
 
     def describe(self) -> str:
         acc = self.accounting()

@@ -81,6 +81,12 @@ LINT_FIXTURES = [
               "    batcher.slots[0] = seq\n"),
     ("BL206", "def drain(batcher):\n"
               "    batcher.queues.clear()\n"),
+    ("BL207", "import time\n"
+              "def f():\n"
+              "    return time.monotonic()\n"),
+    ("BL207", "import time\n"
+              "def stamp():\n"
+              "    return time.time_ns()\n"),
 ]
 
 
@@ -153,6 +159,23 @@ def test_lint_suppression_comment():
 
 def test_lint_syntax_error_is_finding():
     assert rules_of(lint_source("def f(:\n")) == {"BL200"}
+
+
+def test_raw_clock_rule_exempts_clock_module_and_suppresses():
+    src = ("import time\n"
+           "def now_us():\n"
+           "    return time.perf_counter() * 1e6\n")
+    # anywhere else in the tree: flagged
+    assert rules_of(lint_source(src, path="src/repro/serve/loop.py")) == \
+        {"BL207"}
+    # the one sanctioned implementation site is exempt (both separators)
+    assert lint_source(src, path="src/repro/obs/clock.py") == []
+    assert lint_source(src, path="src\\repro\\obs\\clock.py") == []
+    # and the standard suppression comment works
+    supp = ("import time\n"
+            "def f():\n"
+            "    return time.monotonic()  # bridgelint: ignore[BL207]\n")
+    assert lint_source(supp, path="fixture.py") == []
 
 
 def test_shipped_tree_lints_clean():

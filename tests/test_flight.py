@@ -1,0 +1,459 @@
+"""Flight recorder: journaling, durability, deterministic replay, sentinel.
+
+The decision-plane acceptance contract:
+
+* every control-plane action journals a typed ``DecisionRecord`` whose
+  JSONL export round-trips losslessly and whose seal makes truncation or
+  corruption a typed load-time error, never a silent prefix replay,
+* ``replay()`` re-executes a journal against a fresh pool and asserts
+  the resulting route programs, placements, channel picks, migration
+  plans and window schedules are **bit-identical** — property-tested
+  over random op interleavings on random ragged fabrics (including the
+  RNG-dependent ``hashed`` policy, which rides the journaled generator
+  state),
+* a full orchestrated serve run (admission + leases + refits +
+  migrations on the 8-ring, under a ``ManualClock``) replays end to end,
+* ``why(request_id)`` reconstructs the causal chain admission ->
+  lease -> placement -> governing route program,
+* the ``Sentinel`` flags an injected 2x latency regression within one
+  detection window, raises exactly one alert per excursion
+  (hysteresis), triggers an RLS covariance reset on calibration drift,
+  and stays silent on conserved telemetry.
+"""
+import json
+import zipfile
+
+import numpy as np
+import pytest
+
+from topologies import random_fabric
+
+from repro.core import perfmodel, ref, steering
+from repro.core.control_plane import ControlPlane
+from repro.core.memport import MemPortTable
+from repro.core.topology import Topology
+from repro.obs import (Alert, FlightRecorder, JournalTruncatedError,
+                       ManualClock, MetricsRegistry, ReplayDivergenceError,
+                       Sentinel, SLOMonitor, replay)
+from repro.obs.flight import placement_digest, program_digest
+from repro.orchestrator import Orchestrator, TenantSpec
+from repro.telemetry.counters import DEFAULT_MAX_TENANTS
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # pragma: no cover
+    from hypofallback import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# Journal durability
+# ---------------------------------------------------------------------------
+
+def _scripted_plane():
+    """A plane driven through every journaled op kind."""
+    fr = FlightRecorder(clock=ManualClock())
+    cp = ControlPlane(8, 4, 64, seed=3)
+    cp.attach_flight(fr)
+    r1 = cp.allocate(6, "a", policy="striped")
+    cp.allocate(5, "b", policy="hashed")
+    cp.route_program()
+    cp.select_channels(8, 1 << 18)
+    cp.release(r1)
+    cp.fail_node(2)
+    cp.revive_node(2)
+    cp.report_link_failure(1)
+    cp.route_program()
+    cp.clear_link_failure()
+    tm = np.ones((8, 8)) * 0.01 + np.eye(8)
+    tm[3, 5] = 40.0                 # node 3 dominates home 5: forces moves
+    cp.affinity_migration(tm, min_share=0.5)
+    return cp, fr
+
+
+def test_journal_jsonl_roundtrip():
+    cp, fr = _scripted_plane()
+    text = fr.to_jsonl()
+    fr2 = FlightRecorder.from_jsonl(text)
+    assert len(fr2) == len(fr)
+    for a, b in zip(fr.records(), fr2.records()):
+        assert a.to_json() == b.to_json()
+    # and the round-trip is a fixpoint
+    assert fr2.to_jsonl() == text
+
+
+def test_journal_write_load(tmp_path):
+    cp, fr = _scripted_plane()
+    p = tmp_path / "journal.jsonl"
+    fr.write(str(p))
+    fr2 = FlightRecorder.load(str(p))
+    assert fr2.to_jsonl() == fr.to_jsonl()
+    # replay straight from the path
+    res = replay(str(p))
+    assert res.placement_digest == placement_digest(cp)
+
+
+@pytest.mark.parametrize("mangle", [
+    "drop_seal", "cut_tail", "corrupt_line", "after_seal",
+    "count_lie", "seq_gap",
+])
+def test_truncated_or_corrupt_journal_is_typed_error(mangle):
+    _, fr = _scripted_plane()
+    lines = fr.to_jsonl().splitlines()
+    if mangle == "drop_seal":
+        lines = lines[:-1]
+    elif mangle == "cut_tail":
+        lines = lines[: len(lines) // 2]
+    elif mangle == "corrupt_line":
+        lines[3] = lines[3][: len(lines[3]) // 2]
+    elif mangle == "after_seal":
+        lines = lines + [lines[1]]
+    elif mangle == "count_lie":
+        seal = json.loads(lines[-1])
+        seal["count"] += 1
+        lines[-1] = json.dumps(seal)
+    elif mangle == "seq_gap":
+        del lines[4]
+        seal = json.loads(lines[-1])
+        seal["count"] -= 1
+        lines[-1] = json.dumps(seal)
+    with pytest.raises(JournalTruncatedError):
+        FlightRecorder.from_jsonl("\n".join(lines) + "\n")
+
+
+def test_bounded_journal_drops_oldest_and_refuses_replay():
+    fr = FlightRecorder(clock=ManualClock(), capacity=4)
+    cp = ControlPlane(4, 4, 16, seed=0)
+    cp.attach_flight(fr)
+    for _ in range(6):
+        cp.route_program(verify=False)
+    assert len(fr) == 4 and fr.dropped_total > 0
+    # the genesis cp_init fell off the ring: replay must refuse, not
+    # silently replay a suffix against a wrong initial state
+    with pytest.raises(JournalTruncatedError):
+        replay(FlightRecorder.from_jsonl(fr.to_jsonl()))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic replay
+# ---------------------------------------------------------------------------
+
+def test_scripted_replay_is_bit_identical():
+    cp, fr = _scripted_plane()
+    res = replay(FlightRecorder.from_jsonl(fr.to_jsonl()))
+    assert res.placement_digest == placement_digest(cp)
+    assert res.programs == 2 and res.placements == 2
+    assert res.releases == 1 and res.failures == 1
+    assert res.channel_picks == 1 and res.migrations == 1
+    # the replayed plane *is* the recorded plane, table for table
+    assert np.array_equal(res.plane._home, cp._home)
+    assert np.array_equal(res.plane._slot, cp._slot)
+
+
+def test_replay_detects_divergence():
+    _, fr = _scripted_plane()
+    recs = fr.records()
+    for r in recs:
+        if r.kind == "route_program":
+            r.detail["digest"] = "0" * 16
+            break
+    with pytest.raises(ReplayDivergenceError, match="program digest"):
+        replay(recs)
+
+
+def test_replay_detects_placement_divergence():
+    _, fr = _scripted_plane()
+    recs = fr.records()
+    for r in recs:
+        if r.kind == "allocate":
+            r.detail["homes"] = [h + 1 for h in r.detail["homes"]]
+            break
+    with pytest.raises(ReplayDivergenceError, match="homes"):
+        replay(recs)
+
+
+def test_attach_late_journal_replays_from_snapshot():
+    """A recorder attached mid-life snapshots live state in its genesis."""
+    cp = ControlPlane(6, 4, 32, seed=9)
+    keep = cp.allocate(5, "pre", policy="hashed")   # before attach
+    cp.fail_node(4)
+    fr = FlightRecorder(clock=ManualClock())
+    cp.attach_flight(fr)
+    cp.allocate(4, "post", policy="hashed")
+    cp.release(keep)                                # handle from pre-attach
+    cp.route_program()
+    res = replay(FlightRecorder.from_jsonl(fr.to_jsonl()))
+    assert res.placement_digest == placement_digest(cp)
+
+
+_OP_NAMES = ("alloc", "release", "fail", "revive", "route", "channels",
+             "migrate")
+# (op, arg) pairs packed into one int — the fallback shim has no tuples()
+_OPS = st.lists(st.integers(0, 7 * 10 ** 6), min_size=4, max_size=24)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), packed=_OPS)
+def test_replay_property_random_ops_on_random_fabrics(seed, packed):
+    """Journal -> JSONL -> load -> replay is bit-identical for random op
+    interleavings on random ragged fabrics (hashed policy included: the
+    journaled RNG state makes it deterministic)."""
+    rng = np.random.default_rng(seed)
+    topo = random_fabric(rng)
+    n = topo.num_nodes
+    cp = ControlPlane(n, 4, n * 4, seed=seed, topology=topo)
+    fr = FlightRecorder(clock=ManualClock())
+    cp.attach_flight(fr)
+    regions, dead = [], set()
+    for v in packed:
+        op, arg = _OP_NAMES[v % len(_OP_NAMES)], v // len(_OP_NAMES)
+        try:
+            if op == "alloc":
+                regions.append(cp.allocate(
+                    1 + arg % (2 * n),
+                    policy=("striped", "hashed")[arg % 2]))
+            elif op == "release" and regions:
+                cp.release(regions.pop(arg % len(regions)))
+            elif op == "fail" and len(dead) < n - 1:
+                node = arg % n
+                if node not in dead:
+                    cp.fail_node(node)
+                    dead.add(node)
+            elif op == "revive" and dead:
+                node = sorted(dead)[arg % len(dead)]
+                cp.revive_node(node)
+                dead.discard(node)
+            elif op == "route":
+                cp.route_program(bidirectional=bool(arg % 2))
+            elif op == "channels":
+                cp.select_channels(4 + arg % 8, 1 << (12 + arg % 8))
+            elif op == "migrate":
+                tm = rng.random((n, n)) * 0.1
+                tm[arg % n, (arg // n) % n] = 30.0
+                cp.affinity_migration(tm, min_share=0.4)
+        except RuntimeError:
+            pass                       # pool exhausted: a fine interleaving
+    res = replay(FlightRecorder.from_jsonl(fr.to_jsonl()))
+    assert res.placement_digest == placement_digest(cp)
+    assert np.array_equal(res.plane._home, cp._home)
+
+
+# ---------------------------------------------------------------------------
+# Orchestrated end-to-end replay + causality
+# ---------------------------------------------------------------------------
+
+def _oracle_step_telemetry(cp, orc, rng, lane_hot=False):
+    """One step's raw BridgeTelemetry against the orchestrator's table."""
+    n = cp.num_nodes
+    want = rng.integers(-1, cp.num_logical, size=(n, orc.budget)
+                        ).astype(np.int32)
+    lane = rng.integers(1, 3, size=(n, orc.budget)).astype(np.int32)
+    if lane_hot:            # node 0 hammers logical pages homed on node 3
+        homed = np.flatnonzero(np.asarray(cp._home) == 3)[: orc.budget]
+        want[0, : len(homed)] = homed.astype(np.int32)
+    return ref.expected_transfer_telemetry(
+        want, cp.table(), orc.route_program(), num_nodes=n,
+        budget=orc.budget, tenant_ids=lane,
+        max_tenants=DEFAULT_MAX_TENANTS)
+
+
+def _orchestrated_run():
+    clock = ManualClock()
+    fr = FlightRecorder(clock=clock)
+    cp = ControlPlane(8, 8, 128, seed=11)
+    orc = Orchestrator(cp, budget=8, page_bytes=1 << 16, control_period=2,
+                       migrate=True, migration_limit=4, flight=fr)
+    orc.register(TenantSpec(1, "chat", qos="interactive", share=3.0,
+                            page_quota=48))
+    orc.register(TenantSpec(2, "crawl", qos="batch", share=1.0,
+                            page_quota=48))
+    rng = np.random.default_rng(5)
+    leases = []
+    for i in range(8):
+        dec, lease = orc.request_lease(1 + i % 2, 4 + i % 3,
+                                       request_id=100 + i)
+        if lease is not None:
+            leases.append(lease)
+        telem = _oracle_step_telemetry(cp, orc, rng, lane_hot=i >= 4)
+        base = perfmodel.predict_round_latency_us(
+            orc.route_program(), orc.page_bytes, orc.budget)
+        orc.step(telemetry=telem, measured_round_us=base * (1 + 0.01 * i))
+    for lease in leases[:2]:
+        orc.release_lease(lease)
+    orc.step()
+    return orc, fr
+
+
+def test_orchestrated_serve_replay_bit_identical():
+    orc, fr = _orchestrated_run()
+    journal = FlightRecorder.from_jsonl(fr.to_jsonl())
+    res = replay(journal)
+    # every compiled program, placement, pick and refit re-verified
+    assert res.programs >= 3            # init + per-control-period refits
+    assert res.placements >= 6 and res.releases >= 2
+    assert res.channel_picks >= 3 and res.refits >= 4
+    assert res.placement_digest == placement_digest(orc.cp)
+    # the journaled digest is exactly the live installed program's (read
+    # the field directly: the accessor recompiles when a migration left
+    # the program stale, which would journal a *new* install)
+    digests = [r.detail["digest"] for r in journal.records("route_program")]
+    assert digests[-1] == program_digest(orc._program)
+
+
+def test_orchestrated_replay_catches_tampering():
+    orc, fr = _orchestrated_run()
+    recs = FlightRecorder.from_jsonl(fr.to_jsonl()).records()
+    picks = [r for r in recs if r.kind == "select_channels"]
+    picks[-1].detail["pick"] = picks[-1].detail["pick"] + 1
+    with pytest.raises(ReplayDivergenceError, match="channel pick"):
+        replay(recs)
+
+
+def test_why_reconstructs_request_causal_chain():
+    orc, fr = _orchestrated_run()
+    chain = fr.why(100)
+    kinds = [r.kind for r in chain]
+    assert "admission" in kinds and "lease_grant" in kinds
+    assert "allocate" in kinds          # the placement behind the lease
+    assert kinds[0] == "route_program"  # the program governing admission
+    # seq-ordered, and every directly-stamped record carries the id
+    assert [r.seq for r in chain] == sorted(r.seq for r in chain)
+    assert all(r.request_id == 100 for r in chain
+               if r.kind in ("admission", "lease_grant"))
+    grant = next(r for r in chain if r.kind == "lease_grant")
+    alloc = next(r for r in chain if r.kind == "allocate")
+    assert grant.detail["region_id"] == alloc.detail["region_id"]
+    assert fr.why(999999) == []
+
+
+def test_dump_debug_bundle_contents_replayable(tmp_path):
+    orc, _ = _orchestrated_run()
+    path = str(tmp_path / "bundle.zip")
+    assert orc.dump_debug_bundle(path) == path
+    with zipfile.ZipFile(path) as z:
+        names = set(z.namelist())
+        assert {"journal.jsonl", "metrics.txt", "describe.txt"} <= names
+        journal = z.read("journal.jsonl").decode()
+        assert "obs_" in z.read("metrics.txt").decode()
+        assert "orchestrator" in z.read("describe.txt").decode()
+    res = replay(FlightRecorder.from_jsonl(journal))
+    assert res.placement_digest == placement_digest(orc.cp)
+
+
+# ---------------------------------------------------------------------------
+# Sentinel
+# ---------------------------------------------------------------------------
+
+def test_sentinel_flags_injected_regression_within_one_window():
+    reg = MetricsRegistry()
+    s = Sentinel(registry=reg, window=8)
+    for _ in range(20):                       # healthy warm-up
+        s.observe_latency(100.0, predicted_us=100.0)
+    assert s.alerts == []
+    onset = None
+    for i in range(8):                        # inject a 2x regression
+        if s.observe_latency(200.0, predicted_us=100.0):
+            onset = i + 1
+            break
+    assert onset is not None and onset <= s.window
+    assert s.alerts[0].kind == "latency_shift"
+    snap = reg.snapshot()["counters"]
+    assert snap['obs_alerts_total{kind="latency_shift"}'] == 1
+
+
+def test_sentinel_latency_hysteresis_one_alert_per_excursion():
+    s = Sentinel(window=4)
+    for _ in range(4):
+        s.observe_latency(100.0, predicted_us=100.0)
+    for _ in range(12):                       # sustained anomaly: one alert
+        s.observe_latency(200.0, predicted_us=100.0)
+    assert len(s.alerts) == 1
+    for _ in range(12):                       # recovery clears the alarm
+        s.observe_latency(100.0, predicted_us=100.0)
+    assert not s.describe()["shift_alarm"]
+    for _ in range(12):                       # relapse: second alert
+        s.observe_latency(200.0, predicted_us=100.0)
+    assert len(s.alerts) == 2
+
+
+def test_sentinel_clean_run_raises_no_alerts():
+    s = Sentinel(window=6)
+    rng = np.random.default_rng(0)
+    for _ in range(100):                      # ±2% noise around the model
+        m = 100.0 * (1.0 + 0.02 * rng.standard_normal())
+        s.observe_latency(m, predicted_us=100.0, residual_us=abs(m - 100.0))
+    assert s.alerts == []
+
+
+def test_sentinel_drift_resets_calibrator_and_journals():
+    cal = perfmodel.Calibrator()
+    p_before = cal._P.copy()
+    fr = FlightRecorder(clock=ManualClock())
+    s = Sentinel(flight=fr, calibrator=cal, window=4, drift_floor_us=10.0)
+    for _ in range(8):                        # healthy baseline ~1us
+        s.observe_latency(100.0, residual_us=1.0)
+    for _ in range(8):                        # residuals blow up
+        s.observe_latency(100.0, residual_us=500.0)
+    kinds = {a.kind for a in s.alerts}
+    assert "calibration_drift" in kinds
+    assert [r.kind for r in fr.records("calibrator_refit")]
+    # covariance re-opened: the RLS gain is large again
+    assert np.all(np.diag(cal._P) >= np.diag(p_before))
+
+
+def test_sentinel_slo_burn_hysteresis():
+    reg = MetricsRegistry()
+    slo = SLOMonitor(window=10, budget_fraction=0.1, registry=reg)
+    s = Sentinel(registry=reg, slo=slo, min_slo_samples=8)
+    for _ in range(10):
+        slo.record(3, latency_us=50.0, slo_us=100.0)
+    assert s.check_slo() == []                # healthy tenant
+    for _ in range(5):
+        slo.record(3, latency_us=500.0, slo_us=100.0)
+    assert [a.kind for a in s.check_slo()] == ["slo_burn"]
+    assert s.check_slo() == []                # alarmed: no repeat alert
+    for _ in range(10):
+        slo.record(3, latency_us=50.0, slo_us=100.0)
+    s.check_slo()                             # burn fell: alarm clears
+    assert 3 not in s.describe()["burn_alarms"]
+
+
+def test_sentinel_conservation_clean_on_real_telemetry():
+    from repro.telemetry import TelemetryAggregator
+    n, budget = 8, 4
+    rng = np.random.default_rng(2)
+    table = MemPortTable.striped(64, n, 8)
+    prog = steering.bidirectional_program(n)
+    agg = TelemetryAggregator(n, max_tenants=DEFAULT_MAX_TENANTS)
+    s = Sentinel(window=4)
+    for _ in range(6):
+        want = rng.integers(-1, 64, size=(n, budget)).astype(np.int32)
+        telem = ref.expected_transfer_telemetry(
+            want, table, prog, num_nodes=n, budget=budget)
+        agg.update(telem)
+        assert s.check_telemetry(agg) == []
+
+
+def test_sentinel_conservation_catches_tampered_counters():
+    from repro.telemetry import TelemetryAggregator
+    n = 4
+    table = MemPortTable.striped(16, n, 4)
+    prog = steering.bidirectional_program(n)
+    want = np.arange(n * 2, dtype=np.int32).reshape(n, 2) % 16
+    agg = TelemetryAggregator(n, max_tenants=DEFAULT_MAX_TENANTS)
+    agg.update(ref.expected_transfer_telemetry(
+        want, table, prog, num_nodes=n, budget=2))
+    s = Sentinel(window=4)
+    assert s.check_telemetry(agg) == []
+    agg.served = agg.served + 5.0             # break the accounting
+    alerts = s.check_telemetry(agg)
+    assert alerts and alerts[0].kind == "conservation"
+    agg2 = TelemetryAggregator(n, max_tenants=DEFAULT_MAX_TENANTS)
+    agg2.served = agg2.served * np.nan        # non-finite counters
+    a2 = Sentinel(window=4).check_telemetry(agg2)
+    assert a2 and a2[0].kind == "conservation"
+
+
+def test_alert_is_frozen_value_type():
+    a = Alert("k", "warn", "m", 1.0, 2.0)
+    with pytest.raises(AttributeError):
+        a.value = 3.0

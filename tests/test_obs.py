@@ -85,12 +85,22 @@ def test_chrome_trace_schema():
         assert {"name", "cat", "ph", "ts", "dur", "pid", "tid",
                 "args"} <= e.keys()
         assert e["dur"] >= 0
-    # open spans must not serialize as complete events
-    rec2 = TraceRecorder(ManualClock())
-    with rec2.span("open"):
-        n_open = len([e for e in rec2.to_chrome_trace()["traceEvents"]
-                      if e["ph"] == "X"])
-    assert n_open == 0
+    # open spans auto-close in the export (marked, duration to "now")
+    # without being mutated: a crash mid-span still yields a full trace.
+    clk = ManualClock(tick_us=0.0)
+    rec2 = TraceRecorder(clk)
+    with rec2.span("open") as sp:
+        clk.advance(25.0)
+        xs2 = [e for e in rec2.to_chrome_trace()["traceEvents"]
+               if e["ph"] == "X"]
+        assert len(xs2) == 1
+        assert xs2[0]["args"]["unclosed"] is True
+        assert xs2[0]["dur"] == 25.0
+        assert sp.end_us is None       # the span itself stays open
+    # once closed, the marker disappears
+    xs3 = [e for e in rec2.to_chrome_trace()["traceEvents"]
+           if e["ph"] == "X"]
+    assert "unclosed" not in xs3[0]["args"]
 
 
 def test_phase_op_counts_parses_both_scope_spellings():
@@ -201,6 +211,28 @@ def test_histogram_counts_and_quantiles():
     assert 0.0 <= h2.p50() <= 10.0
 
 
+def test_histogram_quantile_edge_cases():
+    # empty histogram: quantile is NaN (unknown), never a fake 0.0
+    h = Histogram(lo=1.0)
+    assert np.isnan(h.quantile(0.5)) and np.isnan(h.p99())
+    assert h.count == 0
+    # q >= 1 clamps to the top occupied bucket edge, not past the table
+    h.record(10.0)
+    h.record(500.0)
+    top = h.quantile(1.0)
+    assert np.isfinite(top) and top >= 500.0
+    assert h.quantile(2.0) == top
+
+
+def test_slo_burn_rate_zero_sample_guard():
+    mon = SLOMonitor(window=10, budget_fraction=0.1)
+    # unknown tenant and empty window both read 0.0, not a divide error
+    assert mon.burn_rate(42) == 0.0
+    mon0 = SLOMonitor(window=10, budget_fraction=0.0)
+    mon0.record(0, latency_us=150.0, slo_us=100.0)
+    assert mon0.burn_rate(0) == 0.0
+
+
 def test_registry_text_exposition_is_deterministic():
     reg = MetricsRegistry()
     reg.counter("bridge_pages_served_total").inc(3)
@@ -213,6 +245,20 @@ def test_registry_text_exposition_is_deterministic():
     assert ('obs_span_latency_us_count{cat="round",name="pull"} 1'
             in text)
     assert text == reg.to_text()
+
+
+def test_text_exposition_escapes_hostile_label_values():
+    reg = MetricsRegistry()
+    hostile = 'evil"name\nwith\\slashes'
+    reg.counter("serve_requests_total", tenant=hostile).inc(7)
+    text = reg.to_text()
+    # escaped per the Prometheus exposition format: \\ then \" then \n
+    assert ('serve_requests_total{tenant='
+            '"evil\\"name\\nwith\\\\slashes"} 7') in text
+    # one line per sample survives: the newline never splits the entry
+    lines = [ln for ln in text.splitlines()
+             if ln.startswith("serve_requests_total")]
+    assert len(lines) == 1 and lines[0].endswith(" 7")
 
 
 def test_slo_monitor_burn_rates():
